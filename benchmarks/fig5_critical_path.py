@@ -1,0 +1,22 @@
+"""Fig 5(c): critical-path delay of SRAM/RRAM/MTJ/FeFET FPGAs over the 7
+VTR benchmarks (composition model calibrated to the published deltas)."""
+from __future__ import annotations
+
+from repro.core import hwmodel as hw
+
+
+def run() -> list[tuple]:
+    rows = []
+    for bench in hw.VTR_BENCHMARKS:
+        base = hw.critical_path_ps("sram_1cfg", bench)
+        for tech in ("sram_1cfg", "rram_1cfg", "mtj_1cfg", "fefet_1cfg",
+                     "fefet_2cfg"):
+            t = hw.critical_path_ps(tech, bench)
+            rows.append((f"fig5c_{bench}_{tech}_ps", round(t, 1),
+                         f"delta={100 * (t - base) / base:+.1f}%"))
+    for tech, claim in hw.CRITICAL_PATH_CLAIMS.items():
+        got = hw.critical_path_delta(tech)
+        ok = abs(got - claim) < 0.02
+        rows.append((f"fig5c_avg_delta_{tech}", round(got, 4),
+                     f"claim={claim:+.3f} {'OK' if ok else 'MISS'}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig 5(a/b): primitive area / delay / power vs the paper's claims."""
+from __future__ import annotations
+
+from repro.core import hwmodel as hw
+
+
+def run() -> list[tuple]:
+    rows = []
+    for kind in ("CB", "LUT"):
+        sram = hw.AREA_LAMBDA2[kind]["sram_1cfg"]
+        for tech, area in hw.AREA_LAMBDA2[kind].items():
+            ratio = area / sram
+            claim = hw.AREA_RATIO_CLAIMS.get((kind, tech))
+            ok = claim is None or abs(ratio - claim) < 0.005
+            rows.append((f"fig5a_area_{kind}_{tech}", area,
+                         f"ratio={ratio:.3f}"
+                         + (f" claim={claim:.3f} {'OK' if ok else 'MISS'}"
+                            if claim else "")))
+    for kind, red in hw.HEADLINE_AREA_REDUCTION.items():
+        got = 1 - hw.AREA_LAMBDA2[kind]["fefet_2cfg"] / \
+            hw.AREA_LAMBDA2[kind]["sram_1cfg"]
+        rows.append((f"fig5a_headline_{kind}_reduction", got,
+                     f"claim={red:.3f} {'OK' if abs(got - red) < 0.005 else 'MISS'}"))
+    for tech, d in hw.LUT_READ_DELAY_PS.items():
+        rows.append((f"fig5b_lut_delay_ps_{tech}", d, ""))
+    for tech, p in hw.LUT_READ_POWER_UW.items():
+        rows.append((f"fig5b_lut_power_uw_{tech}", p, ""))
+    for tech, d in hw.CB_DELAY_PS.items():
+        rows.append((f"fig5b_cb_delay_ps_{tech}", d, ""))
+    rows.append(("fig5b_cb_power_reduction_vs_sram",
+                 hw.CB_POWER_REDUCTION["fefet_vs_sram"], "claim 82.7%"))
+    rows.append(("fig5b_sb_power_reduction_vs_sram",
+                 hw.SB_POWER_REDUCTION["fefet_vs_sram"], "claim 53.6%"))
+    return rows

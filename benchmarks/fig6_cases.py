@@ -1,0 +1,111 @@
+"""Fig 6(d), Fig 6(f), Fig S9(c): the three timing case studies.
+
+Analytic numbers come from the calibrated workload (benchmarks/calibrate)
+through the discrete-event scheduler; each case also runs LIVE on a real
+ContextSwitchEngine with synthetic weight payloads whose load/exec times
+mirror the calibrated ratios (scaled to keep the benchmark < 1 min).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.calibrate import (
+    CASE2_BATCHES, NET_NAMES, TARGETS, calibrated, case2_savings,
+    case3_savings, patched_savings)
+from repro.core.context import ContextDescriptor, ContextSwitchEngine
+from repro.core.scheduler import (
+    Run, run_schedule_live, simulate_conventional, simulate_dynamic,
+    simulate_preloaded, time_saving)
+
+
+def _fmt(v):
+    return round(float(v), 4)
+
+
+def run_analytic() -> list[tuple]:
+    execs, loads, stats = calibrated()
+    rows = [("calib_exec_ms_" + n, _fmt(execs[n] * 1e3), "")
+            for n in NET_NAMES]
+    rows += [("calib_load_ms_" + n, _fmt(loads[n] * 1e3),
+              "bitstream/ICAP model") for n in NET_NAMES]
+    c2 = case2_savings(execs, loads)
+    i = 0
+    for a, b in itertools.combinations(NET_NAMES, 2):
+        for n in CASE2_BATCHES:
+            rows.append((f"fig6d_saving_{a}+{b}_x{n}", _fmt(c2[i]), ""))
+            i += 1
+    for key in ("case2_min", "case2_max", "case2_mean"):
+        rows.append((f"fig6d_{key}", _fmt(stats[key]),
+                     f"paper={TARGETS[key]}"))
+    c3 = case3_savings(execs, loads, stats["k3"])
+    for order, s in zip(itertools.permutations(NET_NAMES), c3):
+        rows.append(("fig6f_saving_" + ">".join(o[:3] for o in order),
+                     _fmt(s), ""))
+    for key in ("case3_min", "case3_max"):
+        rows.append((f"fig6f_{key}", _fmt(stats[key]),
+                     f"paper={TARGETS[key]} (ideal bound 0.5)"))
+    pa = patched_savings(execs, loads)
+    rows.append(("figS9_patched_max", _fmt(max(pa)),
+                 f"paper={TARGETS['patched_max']}"))
+    rows.append(("figS9_patched_min", _fmt(min(pa)), "paper=0.1132"))
+    return rows
+
+
+def _mk_engine(load_ms: dict, dim: int = 256) -> ContextSwitchEngine:
+    eng = ContextSwitchEngine(num_slots=2)
+    for name, ms in load_ms.items():
+        def weights_fn(ms=ms):
+            time.sleep(ms / 1e3)            # stands in for H2D streaming
+            return {"w": jnp.eye(dim)}
+        eng.register(ContextDescriptor(name=name,
+                                       apply_fn=lambda p, x: x @ p["w"],
+                                       weights_fn=weights_fn))
+    return eng
+
+
+def run_live(scale: float = 0.2) -> list[tuple]:
+    """Drive the real engine with the calibrated schedule (time-scaled)."""
+    execs, loads, stats = calibrated()
+    load_ms = {n: max(loads[n] * 1e3 * scale, 1.0) for n in NET_NAMES}
+    exec_reps = {n: max(int(execs[n] / 0.0005), 1) for n in NET_NAMES}
+    rows = []
+
+    # case 2: alternate two preloaded nets
+    a, b = "resnet50", "cnv"
+    sched = [Run(a, 0, exec_reps[a]), Run(b, 0, exec_reps[b])] * 3
+    inputs = {n: (jnp.ones((64, 256)),) for n in NET_NAMES}
+    eng = _mk_engine(load_ms)
+    eng.preload(a, block=True)
+    eng.preload(b, block=True)              # preloaded: off the clock
+    dyn = run_schedule_live(eng, sched, inputs, dynamic=True)
+    eng.shutdown()
+    eng = _mk_engine(load_ms)
+    conv = run_schedule_live(eng, sched, inputs, dynamic=False)
+    eng.shutdown()
+    s_live = time_saving(conv["total"], dyn["total"])
+    rows.append(("live_case2_saving", _fmt(s_live),
+                 f"conv={conv['total']:.3f}s ours={dyn['total']:.3f}s"))
+
+    # case 3: three nets, dynamic reconfiguration (2 slots)
+    order = list(NET_NAMES)
+    sched3 = [Run(n, 0, max(int(execs[n] * stats['k3'] / 0.0005), 1))
+              for n in order]
+    eng = _mk_engine(load_ms)
+    dyn3 = run_schedule_live(eng, sched3, inputs, dynamic=True)
+    eng.shutdown()
+    eng = _mk_engine(load_ms)
+    conv3 = run_schedule_live(eng, sched3, inputs, dynamic=False)
+    eng.shutdown()
+    rows.append(("live_case3_saving",
+                 _fmt(time_saving(conv3["total"], dyn3["total"])),
+                 f"conv={conv3['total']:.3f}s ours={dyn3['total']:.3f}s "
+                 f"stalls={dyn3['visible_stalls']:.3f}s"))
+    return rows
+
+
+def run() -> list[tuple]:
+    return run_analytic() + run_live()

@@ -1,0 +1,39 @@
+"""Fig 6(a/b): dynamic (Super-Sub cascade) vs static inference accuracy.
+
+Uses the hierarchical synthetic task + likelihood-based members (fast,
+deterministic); examples/train_cascade.py shows the same effect with
+*trained* transformer classifiers through the same engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._members import build_cascade_members
+from repro.core.context import ContextSwitchEngine
+from repro.train.data import HierarchicalTask
+
+
+def run() -> list[tuple]:
+    from repro.core.cascade import SuperSubCascade
+    task = HierarchicalTask(num_super=8, subs_per_super=6, vocab=128,
+                            seq_len=32, seed=0)
+    sup, gen, specs = build_cascade_members(task, noise=0.06,
+                                            spec_noise=0.05)
+    eng = ContextSwitchEngine(num_slots=2)
+    cas = SuperSubCascade(eng, sup, specs, gen, task.sub_of_super)
+    accs = []
+    for b in range(12):
+        x, sub, _ = task.sample(128, seed=b)
+        pick = np.asarray(sub == sub[0])
+        accs.append(cas.evaluate(np.asarray(x)[pick],
+                                 np.asarray(sub)[pick],
+                                 batch=int(pick.sum())))
+    dyn = float(np.mean([a["dynamic_acc"] for a in accs]))
+    sta = float(np.mean([a["static_acc"] for a in accs]))
+    eng.shutdown()
+    return [
+        ("fig6b_static_acc", round(sta, 4), ""),
+        ("fig6b_dynamic_acc", round(dyn, 4), ""),
+        ("fig6b_improvement", round(dyn - sta, 4),
+         "paper: up to +3.0% (dynamic >= static required)"),
+    ]

@@ -1,0 +1,47 @@
+"""Roofline table (ours): reads the dry-run JSON records and emits the
+per-(arch x shape) three-term roofline, dominant bottleneck, and
+useful-compute fraction.  See EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(mesh: str = "single", tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*_{mesh}*.json"))):
+        stem = os.path.basename(f)[: -len(".json")]
+        suffix = stem.split(f"_{mesh}")[-1]
+        if suffix != (f"_{tag}" if tag else ""):
+            continue
+        out.append(json.load(open(f)))
+    return out
+
+
+def run() -> list[tuple]:
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline_table", 0, "no dry-run records; run "
+                 "python -m repro.launch.dryrun --all first")]
+    for r in recs:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        cell = f"{r['arch']}x{r['shape']}"
+        rows.append((f"roofline_{cell}_dominant", rl["dominant"],
+                     f"frac={rl['roofline_fraction']:.4f}"))
+        rows.append((f"roofline_{cell}_terms_s",
+                     round(rl["bound_s"], 4),
+                     f"c={rl['compute_s']:.4f} m={rl['memory_s']:.4f} "
+                     f"x={rl['collective_s']:.4f} "
+                     f"useful={rl['useful_fraction']:.2f}"))
+    ok = sum(1 for r in recs if "memory_analysis" in r)
+    rows.append(("dryrun_cells_compiled_single_pod", ok, ""))
+    multi = load_records("multi")
+    rows.append(("dryrun_cells_compiled_multi_pod", len(multi),
+                 "2x16x16 = 512 chips"))
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure + ours.
+
+``PYTHONPATH=src python -m benchmarks.run``   prints ``name,value,notes``
+CSV; ``--only fig6`` filters by prefix.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def modules():
+    from benchmarks import (bench_switch, fig5_critical_path,
+                            fig5_primitives, fig6_cases, fig6b_accuracy,
+                            figS1_pipeline, roofline_table)
+    return [
+        ("fig5_primitives", fig5_primitives.run),
+        ("fig5_critical_path", fig5_critical_path.run),
+        ("fig6b_accuracy", fig6b_accuracy.run),
+        ("fig6_cases", fig6_cases.run),
+        ("figS1_pipeline", figS1_pipeline.run),
+        ("bench_switch", bench_switch.run),
+        ("roofline_table", roofline_table.run),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    failures = 0
+    print("name,value,notes")
+    for name, fn in modules():
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                n, v, note = (tuple(row) + ("",))[:3]
+                print(f"{n},{v},{note}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,")
+            traceback.print_exc()
+        print(f"_{name}_wall_s,{time.perf_counter() - t0:.2f},")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Context-switching serving across heterogeneous architectures (the
+paper's case studies 2 & 3, live): a dense llama, an MoE, and an xLSTM take
+turns serving request batches.
+
+  * preloaded pair  -> switch cost is an O(1) activation flip (case 2)
+  * third model     -> streams into the shadow slot while another serves,
+                       so its reconfiguration is (partially) hidden (case 3)
+
+    PYTHONPATH=src python examples/serve_switching.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models.model import build_model
+from repro.serve.switching import ServedModel, SwitchableServer
+
+ARCHS = ["tinyllama-1.1b", "mixtral-8x7b", "xlstm-125m"]
+
+
+def main():
+    server = SwitchableServer(num_slots=2)
+    cfgs = {}
+    for i, name in enumerate(ARCHS):
+        cfg = reduced(get_arch(name))
+        cfgs[name] = cfg
+        model = build_model(cfg)
+        params = model.init(jax.random.key(i))
+        server.register(ServedModel(name=name, model=model,
+                                    weights_fn=lambda p=params: p,
+                                    max_len=48))
+        print(f"registered {name:16s} "
+              f"({model.n_params() / 1e6:.2f}M params)")
+
+    rng = np.random.default_rng(0)
+    # request stream: llama<->mixtral ping-pong (case 2), xlstm arrives
+    # mid-stream (case 3: load hidden behind the active model's batches)
+    stream = (["tinyllama-1.1b", "mixtral-8x7b"] * 3 +
+              ["xlstm-125m", "tinyllama-1.1b", "xlstm-125m"])
+    t0 = time.perf_counter()
+    for i, name in enumerate(stream):
+        toks = rng.integers(0, cfgs[name].vocab_size, (4, 24))
+        if i + 1 < len(stream) and stream[i + 1] != name:
+            server.preload(stream[i + 1])    # dynamic reconfiguration
+        out = server.serve_batch(name, toks)
+        rec = server.log[-1]
+        print(f"req {i:2d} -> {name:16s} switch={rec['switch_s'] * 1e6:7.1f}us "
+              f"total={rec['total_s'] * 1e3:7.1f}ms")
+    wall = time.perf_counter() - t0
+
+    s = server.engine.stats
+    print(f"\n{len(stream)} requests over {len(ARCHS)} models in {wall:.2f}s")
+    print(f"switches: {s['switches']}  (avg "
+          f"{1e6 * s['switch_seconds'] / max(s['switches'], 1):.1f} us — "
+          f"the paper's <1ns select-flip analogue)")
+    print(f"loads: {s['loads']}  (avg "
+          f"{1e3 * s['load_seconds'] / max(s['loads'], 1):.1f} ms, "
+          f"{s['bytes_loaded'] / 1e6:.1f} MB total — "
+          f"hidden behind execution where the stream allowed)")
+    server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: a ~100M-parameter xLSTM-125m (the one
+assigned arch that IS ~100M at full config) for a few hundred steps with
+checkpoint/restart, on whatever devices exist.
+
+On CPU this uses a width-reduced variant by default so a few hundred steps
+finish in minutes; pass --full on real hardware for the true 125M run.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_arch, override, reduced
+from repro.configs.base import OptimizerConfig, ParallelConfig, RunConfig
+from repro.distributed.mesh import make_mesh
+from repro.models.model import build_model
+from repro.train.data import PrefetchLoader, SyntheticTokens
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="true 125M config (use on TPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    cfg = get_arch("xlstm-125m")
+    if not args.full:
+        cfg = override(reduced(cfg), d_model=256, num_heads=4, head_dim=64,
+                       num_layers=4, vocab_size=8192,
+                       name="xlstm-30m-dev")
+    ndev = len(jax.devices())
+    mesh = make_mesh((ndev, 1), ("data", "model")) if ndev > 1 else None
+    model = build_model(cfg, mesh=mesh)
+    print(f"{cfg.name}: {model.n_params() / 1e6:.1f}M params, "
+          f"{ndev} device(s)")
+
+    run_cfg = RunConfig(
+        arch=cfg.name,
+        optimizer=OptimizerConfig(lr=6e-4, total_steps=args.steps,
+                                  warmup_steps=args.steps // 20 + 1),
+        parallel=ParallelConfig(remat="full", microbatches=1),
+        checkpoint_dir=args.ckpt, checkpoint_every=100, log_every=20)
+
+    src = SyntheticTokens(cfg.vocab_size, args.seq, args.batch, seed=0)
+    data = PrefetchLoader(src, depth=2, deadline_s=10.0)  # straggler-safe
+    trainer = Trainer(model, run_cfg, data, mesh=mesh)
+    state = trainer.init_or_restore(jax.random.key(0))
+    if trainer.start_step:
+        print(f"resumed from step {trainer.start_step}")
+    state = trainer.train(
+        state, args.steps,
+        log_cb=lambda m: print(f"step {m['step']:4d}  loss {m['loss']:.4f}"
+                               f"  {m['sec_per_step']:.2f}s/step"))
+    print(f"stragglers served from backup: {data.stats['stragglers']}")
+    data.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import roofline_terms, HW

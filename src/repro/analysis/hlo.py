@@ -1,0 +1,84 @@
+"""Post-SPMD HLO parsing: collective ops and their payload bytes.
+
+``compiled.as_text()`` shapes are per-device (after partitioning), so summing
+payloads gives per-device wire bytes — exactly the numerator of the
+collective roofline term.
+
+Moved-bytes model per op (ring algorithms, N peers):
+  all-gather          ~ result_bytes            (each device receives it all)
+  all-reduce          ~ 2 x payload             (reduce-scatter + all-gather)
+  reduce-scatter      ~ max(operand) bytes
+  all-to-all          ~ payload
+  collective-permute  ~ payload
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# match op use like "= bf16[...] all-gather(" or "all-gather-start("
+_OP_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+
+_MOVE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Returns {kind: {count, payload_bytes, moved_bytes}} per device."""
+    out: dict = defaultdict(lambda: {"count": 0, "payload_bytes": 0,
+                                     "moved_bytes": 0.0})
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        # async pairs: count the -start, skip the matching -done (done lines
+        # don't match _OP_RE's open-paren-with-shape pattern for the same
+        # op anyway, but guard by name)
+        name = line.split("=")[0].strip()
+        if name.endswith("-done") or ".done" in name:
+            continue
+        result_b = _bytes_of(m.group("shape"))
+        # operand shapes: everything after the op's open paren
+        operand_b = _bytes_of(line[m.end():])
+        if kind == "all-gather":
+            payload = result_b
+        elif kind == "reduce-scatter":
+            payload = max(operand_b, result_b)
+        else:
+            payload = max(result_b, operand_b if operand_b else result_b)
+        rec = out[kind]
+        rec["count"] += 1
+        rec["payload_bytes"] += payload
+        rec["moved_bytes"] += payload * _MOVE_FACTOR[kind]
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> tuple[float, dict]:
+    """Total per-device moved bytes + the per-kind breakdown."""
+    per = parse_collectives(hlo_text)
+    return sum(r["moved_bytes"] for r in per.values()), per

@@ -1,0 +1,58 @@
+"""Analytic HBM-traffic / FLOP model of the Pallas flash-attention kernel.
+
+The dry-run's jnp attention path materializes f32 score chains that the TPU
+kernel keeps entirely in VMEM; the kernel-substituted roofline replaces the
+measured attention-region HLO cost (isolated by compiling the model with
+identity attention and diffing) with this model:
+
+  forward  : read Q + K + V, write O;  grid skips tiles above the causal
+             diagonal (or behind the window), so FLOPs ~= the masked half.
+  backward : read Q,K,V,O,dO + write dQ,dK,dV; scores recomputed on-chip
+             (flash backward), so HBM ~= 8/4 x forward tensors and FLOPs
+             ~= 2.5x forward (dS via two extra matmuls).
+  remat    : block remat recomputes the forward once more on the backward
+             pass (+1x forward FLOPs and reads).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def flash_attention_cost(cfg: ArchConfig, shape: ShapeConfig, n_devices: int,
+                         training: bool, remat: bool = True) -> dict:
+    """Per-device HBM bytes and FLOPs for all attention layers of one step."""
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.is_attention_layer(i))
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        # flash-decode: read the K/V cache once + q/o vectors
+        S_kv = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        kv_bytes = 2 * B * cfg.num_kv_heads * S_kv * cfg.head_dim * 2
+        qo_bytes = 2 * B * cfg.num_heads * cfg.head_dim * 2
+        bytes_fwd = kv_bytes + qo_bytes
+        flops = 2 * 2 * B * cfg.num_heads * S_kv * cfg.head_dim
+        return {"bytes": n_attn * bytes_fwd / n_devices,
+                "flops": n_attn * flops / n_devices}
+
+    # train / prefill
+    q_bytes = B * S * cfg.num_heads * cfg.head_dim * 2
+    kv_bytes = 2 * B * S * cfg.num_kv_heads * cfg.head_dim * 2
+    o_bytes = q_bytes
+    fwd_bytes = q_bytes + kv_bytes + o_bytes
+    # causal (or windowed) tile skipping halves the score work
+    if cfg.sliding_window and cfg.sliding_window < S:
+        frac = cfg.sliding_window / S
+    else:
+        frac = 0.5
+    fwd_flops = 2 * 2 * B * cfg.num_heads * S * S * cfg.head_dim * frac
+
+    if not training:
+        return {"bytes": n_attn * fwd_bytes / n_devices,
+                "flops": n_attn * fwd_flops / n_devices}
+    bwd_bytes = 2 * fwd_bytes + o_bytes          # q,k,v,o,do + dq,dk,dv
+    bwd_flops = 2.5 * fwd_flops
+    remat_bytes = fwd_bytes if remat else 0
+    remat_flops = fwd_flops if remat else 0
+    return {"bytes": n_attn * (fwd_bytes + bwd_bytes + remat_bytes)
+            / n_devices,
+            "flops": n_attn * (fwd_flops + bwd_flops + remat_flops)
+            / n_devices}

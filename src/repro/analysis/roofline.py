@@ -1,0 +1,59 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+Hardware constants (assignment-fixed, TPU v5e-class):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+
+Terms (seconds for one lowered step, per device = per chip):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_moved_bytes_per_device / link_bw
+
+``cost_analysis()`` and ``memory_analysis()`` on a partitioned executable
+report per-device numbers; the collective bytes come from the HLO parse
+(see analysis/hlo.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12         # bf16 / chip
+    hbm_bw: float = 819e9              # B/s
+    link_bw: float = 50e9              # B/s per ICI link
+    hbm_bytes: float = 16e9            # v5e HBM capacity
+
+
+V5E = HW()
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HW = V5E) -> dict:
+    compute = flops_per_dev / hw.peak_flops
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = coll_bytes_per_dev / hw.link_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms.update({
+        "dominant": dom.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of the bound that is useful compute — the score axis
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: float,
+                training: bool) -> float:
+    """6ND for training, 2ND forward-only (prefill/decode)."""
+    return (6.0 if training else 2.0) * n_params_active * tokens
+
+
+def utilization(model_fl: float, hlo_fl_per_dev: float, n_dev: int) -> float:
+    """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is 'useful'
+    (catches remat recompute, dense-MoE waste, masked work)."""
+    total_hlo = hlo_fl_per_dev * n_dev
+    return model_fl / total_hlo if total_hlo else 0.0

@@ -1,0 +1,74 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each assigned architecture has its own module with the exact assignment
+config; ``get_arch`` / ``list_archs`` are the public API.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ArchConfig, MoEConfig, SSMConfig, XLSTMConfig, FrontendConfig,
+    ShapeConfig, SHAPES, RunConfig, OptimizerConfig, ParallelConfig,
+    cell_is_runnable, from_dict, override,
+)
+
+_ARCH_MODULES = {
+    "xlstm-125m": "xlstm_125m",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "tinyllama-1.1b": "tinyllama_11b",
+    "starcoder2-7b": "starcoder2_7b",
+    "deepseek-7b": "deepseek_7b",
+    "musicgen-medium": "musicgen_medium",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "pixtral-12b": "pixtral_12b",
+    # the paper's own application config (Super-Sub cascade members)
+    "supersub-super": "supersub",
+    "supersub-sub": "supersub",
+}
+
+ASSIGNED_ARCHS = [k for k in _ARCH_MODULES if not k.startswith("supersub")]
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.get(name) if hasattr(mod, "get") else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def reduced(cfg: ArchConfig, **extra) -> ArchConfig:
+    """A smoke-test-sized config of the same family (CPU-runnable)."""
+    period = 1
+    if cfg.xlstm is not None:
+        period = cfg.xlstm.slstm_every
+    elif cfg.family == "hybrid":
+        import math
+        period = math.lcm(cfg.attn_every,
+                          cfg.moe.every if cfg.moe else 1)
+    kw = dict(
+        num_layers=min(cfg.num_layers, max(2, period)),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=256,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = override(cfg.moe, num_experts=4,
+                             top_k=min(cfg.moe.top_k, 2), d_ff_expert=64)
+    if cfg.ssm is not None:
+        kw["ssm"] = override(cfg.ssm, d_state=8)
+    if cfg.xlstm is not None:
+        kw["xlstm"] = override(cfg.xlstm, chunk_size=16)
+    if cfg.frontend.kind != "none":
+        kw["frontend"] = override(cfg.frontend, embed_dim=64, num_positions=4)
+    kw.update(extra)
+    return override(cfg, name=cfg.name + "-reduced", **kw)

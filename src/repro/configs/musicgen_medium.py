@@ -1,0 +1,20 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+The EnCodec audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed codec-frame token ids / embeddings; only the transformer
+backbone is modeled.
+"""
+from repro.configs.base import ArchConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1_536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6_144,
+    vocab_size=2_048,
+    frontend=FrontendConfig(kind="audio_codec", embed_dim=0, num_positions=0),
+    source="arXiv:2306.05284; hf",
+)

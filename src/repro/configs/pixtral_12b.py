@@ -1,0 +1,23 @@
+"""pixtral-12b — pixtral-ViT + mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409; unverified].
+
+The pixtral ViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (dim 1024); the backbone projects and
+prepends them to the text-token sequence.
+"""
+from repro.configs.base import ArchConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5_120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=131_072,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    frontend=FrontendConfig(kind="vision_patches", embed_dim=1_024,
+                            num_positions=256),
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+)

@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf]."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4_096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=0,                      # all FFNs are MoE
+    vocab_size=151_936,
+    head_dim=128,                # qwen3 uses explicit head_dim (64*128 != d_model)
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1_536, every=1),
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+)

@@ -1,0 +1,16 @@
+"""starcoder2-7b — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4_608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18_432,
+    vocab_size=49_152,
+    rope_theta=1_000_000.0,
+    mlp_gated=False,             # starcoder2 uses a 2-matrix GELU MLP
+    source="arXiv:2402.19173; hf",
+)

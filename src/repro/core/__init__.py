@@ -1,0 +1,9 @@
+from repro.core.context import (
+    ContextState, ContextDescriptor, ContextSlot, ContextSwitchEngine,
+    ContextStore,
+)
+from repro.core.scheduler import (
+    simulate_conventional, simulate_preloaded, simulate_dynamic, time_saving,
+)
+from repro.core import hwmodel
+from repro.core.cascade import SuperSubCascade

@@ -1,0 +1,113 @@
+"""Super-Sub dynamic inference (paper Fig 6a/b, Fig S1a).
+
+Two-stage cascade: a generalist *super* network predicts the superclass; if a
+specialist exists for that superclass it is context-switched in and produces
+the final subclass; otherwise the generalist finishes the job (the paper's
+workflow, Fig 6a).
+
+Only a context-switching fabric runs this efficiently: with dual slots the
+specialist of batch *i* loads while the super network of batch *i+1*
+executes (Fig S1a's 8-cycles-for-4-images pipeline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import ContextDescriptor, ContextSwitchEngine
+
+
+@dataclass
+class CascadeMember:
+    name: str
+    apply_fn: Callable              # (params, x) -> class logits
+    weights_fn: Callable[[], Any]
+    covers: int | None = None       # superclass id this specialist covers
+
+
+class SuperSubCascade:
+    """Dynamic-inference cascade driven by a ContextSwitchEngine."""
+
+    def __init__(self, engine: ContextSwitchEngine,
+                 super_net: CascadeMember,
+                 specialists: Sequence[CascadeMember],
+                 generalist: CascadeMember,
+                 sub_of_super: np.ndarray):
+        """``sub_of_super[sub_id] -> super_id`` label hierarchy."""
+        self.engine = engine
+        self.super_net = super_net
+        self.generalist = generalist
+        self.specialists = {m.covers: m for m in specialists}
+        self.sub_of_super = np.asarray(sub_of_super)
+        for m in [super_net, generalist, *specialists]:
+            engine.register(ContextDescriptor(
+                name=m.name, apply_fn=m.apply_fn, weights_fn=m.weights_fn))
+
+    # ------------------------------------------------------------ inference
+    def static_infer(self, x) -> np.ndarray:
+        """Paper's 'static inference': generalist only."""
+        self.engine.preload(self.generalist.name)
+        self.engine.switch(self.generalist.name)
+        logits = self.engine.run(x)
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def dynamic_infer(self, x) -> dict:
+        """Paper's 'dynamic inference' for one batch (Fig 6a workflow)."""
+        self.engine.preload(self.super_net.name)
+        self.engine.switch(self.super_net.name)
+        super_logits = self.engine.run(x)
+        super_pred = int(np.asarray(jnp.argmax(super_logits.mean(0))))
+        member = self.specialists.get(super_pred, self.generalist)
+        self.engine.preload(member.name)
+        self.engine.switch(member.name)       # hidden if already resident
+        sub_logits = self.engine.run(x)
+        sub_pred = np.asarray(jnp.argmax(sub_logits, -1))
+        if member is not self.generalist:
+            # specialist predicts within-superclass ids -> map to global ids
+            local_to_global = np.where(self.sub_of_super == super_pred)[0]
+            sub_pred = local_to_global[sub_pred]
+        return {"super": super_pred, "sub": sub_pred}
+
+    def dynamic_infer_pipelined(self, batches: Sequence[Any]) -> list:
+        """Fig S1(a): while the super net classifies batch i+1, the
+        specialist for batch i streams into the shadow slot."""
+        results = []
+        pending: list[tuple[Any, int]] = []   # (batch, super_pred)
+        self.engine.preload(self.super_net.name, block=True)
+        for x in batches:
+            self.engine.switch(self.super_net.name)
+            sup = self.engine.run(x)
+            sp = int(np.asarray(jnp.argmax(sup.mean(0))))
+            member = self.specialists.get(sp, self.generalist)
+            self.engine.preload(member.name)  # overlaps next super batch
+            pending.append((x, sp))
+            # drain: specialist pass for the oldest pending batch
+            if len(pending) >= 1:
+                bx, bsp = pending.pop(0)
+                m = self.specialists.get(bsp, self.generalist)
+                self.engine.switch(m.name, wait=True)
+                logits = self.engine.run(bx)
+                pred = np.asarray(jnp.argmax(logits, -1))
+                if m is not self.generalist:
+                    l2g = np.where(self.sub_of_super == bsp)[0]
+                    pred = l2g[pred]
+                results.append({"super": bsp, "sub": pred})
+        return results
+
+    # ------------------------------------------------------------ accuracy
+    def evaluate(self, xs, sub_labels, batch: int = 256) -> dict:
+        """Fig 6(b): dynamic vs static subclass accuracy."""
+        sub_labels = np.asarray(sub_labels)
+        static_hits = dyn_hits = n = 0
+        for i in range(0, len(xs), batch):
+            xb, yb = xs[i:i + batch], sub_labels[i:i + batch]
+            static_hits += (self.static_infer(xb) == yb).sum()
+            out = self.dynamic_infer(xb)
+            dyn_hits += (out["sub"] == yb).sum()
+            n += len(yb)
+        return {"static_acc": static_hits / n, "dynamic_acc": dyn_hits / n,
+                "improvement": (dyn_hits - static_hits) / n}

@@ -1,0 +1,343 @@
+"""Context-switching execution engine — the paper's contribution on TPU.
+
+The paper's FPGA holds **two local copies** of every configuration primitive
+(2T-2FeFET switches, dual LUT banks): the inactive copy is programmed while
+the active one executes, and switching is a <1 ns select-signal flip.
+
+Mapping here (see DESIGN.md §2):
+  * a *context* = weight pytree + its jitted executables ("fabric programs")
+  * a *slot*    = device-resident buffer set; ``num_slots=2`` is the paper's
+    dual-configuration design (more slots = the time-multiplexed FPGA of
+    Trimberger'97, supported but costing HBM exactly as the paper notes it
+    costs area)
+  * *preload*   = asynchronous host->device streaming into a non-active slot
+    (the serial enable transistor == the slot state machine: an executing
+    step can never read a LOADING slot)
+  * *switch*    = O(1) pointer swap; no device data movement, no recompile
+
+Executables are compiled at registration ("synthesis time"), never at switch
+time.  A non-volatile context store (checkpoint dir) plays the role of the
+FeFET's retention: contexts survive process restarts.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+class ContextState(enum.Enum):
+    EMPTY = "empty"
+    LOADING = "loading"      # enable transistor OFF: invisible to execution
+    READY = "ready"          # resident, selectable
+    ACTIVE = "active"        # the select signal points here
+
+
+@dataclass
+class ContextDescriptor:
+    """A registered configuration: how to compute and where weights come from.
+
+    ``base`` enables *partial reconfiguration* (the paper's Fig 1(b)
+    analogue at weight-tensor granularity): ``weights_fn`` then returns
+    only the leaves that DIFFER from the base context; the loader streams
+    just the delta and assembles the slot from the base's resident buffers
+    + the delta.  Super-Sub cascades with a shared backbone load their
+    specialists this way (head-only deltas)."""
+    name: str
+    apply_fn: Callable                    # (params, *inputs) -> outputs
+    weights_fn: Callable[[], Any]         # -> host weight pytree (or delta)
+    shardings: Any = None                 # optional NamedSharding pytree
+    donate_params: bool = False
+    base: Optional[str] = None            # delta-load on top of this context
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class ContextSlot:
+    idx: int
+    state: ContextState = ContextState.EMPTY
+    name: Optional[str] = None
+    buffers: Any = None                   # device weight pytree
+    bytes_resident: int = 0
+    ready_event: threading.Event = field(default_factory=threading.Event)
+
+
+def _nbytes(tree) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(tree)
+               if hasattr(x, "nbytes"))
+
+
+def _overlay(base, delta):
+    """Merge a (possibly partial) delta pytree over a base pytree: dict
+    nodes merge key-wise, anything else in the delta replaces the base."""
+    if isinstance(delta, dict) and isinstance(base, dict):
+        out = dict(base)
+        for k, v in delta.items():
+            out[k] = _overlay(base[k], v) if k in base else v
+        return out
+    return delta
+
+
+class ContextSwitchEngine:
+    """Dual-slot (by default) context-switching executor."""
+
+    def __init__(self, num_slots: int = 2, mesh=None,
+                 store: "ContextStore | None" = None):
+        assert num_slots >= 2, "dynamic reconfiguration needs >= 2 slots"
+        self.slots = [ContextSlot(i) for i in range(num_slots)]
+        self.mesh = mesh
+        self.store = store
+        self._contexts: dict[str, ContextDescriptor] = {}
+        self._executables: dict[tuple, Any] = {}
+        self._pending: dict[str, Future] = {}
+        self._lock = threading.RLock()
+        # one configuration port, like the FPGA's single config interface:
+        self._loader = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="ctx-loader")
+        self.stats = {
+            "loads": 0, "load_seconds": 0.0, "bytes_loaded": 0,
+            "switches": 0, "switch_seconds": 0.0, "evictions": 0,
+            "hidden_load_seconds": 0.0,
+        }
+        self._exec_busy_until = 0.0       # for overlap accounting
+
+    # ------------------------------------------------------------- registry
+    def register(self, desc: ContextDescriptor,
+                 example_inputs: tuple = (), compile_now: bool = True):
+        """Register a context; AOT-compile its executable ("synthesis")."""
+        with self._lock:
+            self._contexts[desc.name] = desc
+        if compile_now and example_inputs:
+            self._get_executable(desc, example_inputs)
+
+    def _sig(self, inputs: tuple) -> tuple:
+        def one(x):
+            if hasattr(x, "shape"):
+                return (tuple(x.shape), str(getattr(x, "dtype", "?")))
+            return type(x).__name__
+        return tuple(one(x) for x in jax.tree.leaves(inputs))
+
+    def _get_executable(self, desc: ContextDescriptor, inputs: tuple):
+        key = (desc.name, self._sig(inputs))
+        with self._lock:
+            if key in self._executables:
+                return self._executables[key]
+        fn = jax.jit(desc.apply_fn,
+                     donate_argnums=(0,) if desc.donate_params else ())
+        with self._lock:
+            self._executables[key] = fn
+        return fn
+
+    # --------------------------------------------------------------- slots
+    def _find_slot(self, name: str) -> Optional[ContextSlot]:
+        for s in self.slots:
+            if s.name == name and s.state in (ContextState.READY,
+                                              ContextState.ACTIVE):
+                return s
+        return None
+
+    def _victim_slot(self) -> ContextSlot:
+        """EMPTY first, then a READY (never ACTIVE, never LOADING)."""
+        for s in self.slots:
+            if s.state == ContextState.EMPTY:
+                return s
+        for s in self.slots:
+            if s.state == ContextState.READY:
+                return s
+        raise RuntimeError(
+            "no loadable slot: all slots ACTIVE/LOADING "
+            "(the paper's design point: one executes while one loads)")
+
+    # ------------------------------------------------------------- loading
+    def preload(self, name: str, block: bool = False) -> Future:
+        """Start loading `name` into a non-active slot (overlaps execution).
+
+        This is the paper's dynamic reconfiguration: the call returns
+        immediately; the active context keeps executing.  Repeated preloads
+        of an in-flight name return the same future; when every slot is
+        busy (one ACTIVE + others LOADING) the request queues behind the
+        single configuration port and claims its slot when it runs.
+        """
+        desc = self._contexts[name]
+        with self._lock:
+            if self._find_slot(name) is not None:       # already resident
+                f: Future = Future()
+                f.set_result(self._find_slot(name))
+                return f
+            pending = self._pending.get(name)
+            if pending is not None and not pending.done():
+                return pending                          # already in flight
+            fut = self._loader.submit(self._do_load, desc)
+            self._pending[name] = fut
+        if block:
+            fut.result()
+        return fut
+
+    def _claim_slot(self, name: str) -> ContextSlot:
+        """Runs on the loader thread: by the time a queued load executes,
+        the port is free and a non-active slot is claimable."""
+        deadline = time.monotonic() + 60.0
+        while True:
+            with self._lock:
+                try:
+                    slot = self._victim_slot()
+                except RuntimeError:
+                    slot = None
+                if slot is not None:
+                    if slot.state == ContextState.READY:
+                        self.stats["evictions"] += 1
+                    slot.state = ContextState.LOADING
+                    slot.name = name
+                    slot.ready_event.clear()
+                    return slot
+            if time.monotonic() > deadline:             # pragma: no cover
+                raise RuntimeError(f"no slot became loadable for {name!r}")
+            time.sleep(0.001)
+
+    def _do_load(self, desc: ContextDescriptor):
+        slot = self._claim_slot(desc.name)
+        t0 = time.perf_counter()
+        host = desc.weights_fn()
+        # stream tensor-by-tensor (the two-step WL programming analogue);
+        # device_put is async w.r.t. this thread until the final barrier.
+        if desc.shardings is not None:
+            bufs = jax.tree.map(jax.device_put, host, desc.shardings)
+        else:
+            bufs = jax.tree.map(jax.device_put, host)
+        jax.block_until_ready(bufs)
+        wire_bytes = _nbytes(bufs)            # what actually crossed H2D
+        if desc.base is not None:
+            # partial reconfiguration: only the delta crossed the wire;
+            # unchanged tensors are shared with the base's device buffers
+            # (zero-copy on device).
+            base_slot = self._find_slot(desc.base)
+            if base_slot is None:
+                raise RuntimeError(
+                    f"delta context {desc.name!r} needs base "
+                    f"{desc.base!r} resident")
+            bufs = _overlay(base_slot.buffers, bufs)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            slot.buffers = bufs
+            slot.bytes_resident = _nbytes(bufs)
+            slot.state = ContextState.READY
+            slot.ready_event.set()
+            self.stats["loads"] += 1
+            self.stats["load_seconds"] += dt
+            self.stats["bytes_loaded"] += wire_bytes
+            # overlap accounting: time this load spent while execution was
+            # in flight counts as *hidden* reconfiguration
+            hidden = max(0.0, min(self._exec_busy_until, time.perf_counter())
+                         - (time.perf_counter() - dt))
+            self.stats["hidden_load_seconds"] += max(0.0, min(hidden, dt))
+        return slot
+
+    # ------------------------------------------------------------ switching
+    def switch(self, name: str, wait: bool = True,
+               timeout: float = 120.0) -> float:
+        """Activate a resident context.  Returns the switch latency in s.
+
+        O(1): no device data movement.  If the context is still LOADING and
+        ``wait``, blocks until READY (the paper's case where t_load >
+        t_exec and reconfiguration is only partially hidden).
+        """
+        t0 = time.perf_counter()
+        slot = self._find_slot(name)
+        if slot is None:
+            pending = self._pending.get(name)
+            if pending is None:
+                raise KeyError(f"context {name!r} not resident; preload first")
+            if not wait:
+                raise RuntimeError(f"context {name!r} still loading")
+            pending.result(timeout)
+            slot = self._find_slot(name)
+            if slot is None:
+                raise TimeoutError(f"context {name!r} did not become READY")
+        with self._lock:
+            for s in self.slots:
+                if s.state == ContextState.ACTIVE:
+                    s.state = ContextState.READY
+            slot.state = ContextState.ACTIVE
+        dt = time.perf_counter() - t0
+        self.stats["switches"] += 1
+        self.stats["switch_seconds"] += dt
+        return dt
+
+    @property
+    def active(self) -> Optional[ContextSlot]:
+        for s in self.slots:
+            if s.state == ContextState.ACTIVE:
+                return s
+        return None
+
+    # ------------------------------------------------------------ execution
+    def run(self, *inputs):
+        """Execute the active context on `inputs`."""
+        slot = self.active
+        if slot is None:
+            raise RuntimeError("no ACTIVE context; call switch() first")
+        desc = self._contexts[slot.name]
+        fn = self._get_executable(desc, inputs)
+        t0 = time.perf_counter()
+        out = fn(slot.buffers, *inputs)
+        out = jax.block_until_ready(out)
+        self._exec_busy_until = time.perf_counter()
+        return out
+
+    def run_async(self, *inputs):
+        """Dispatch without blocking (JAX async dispatch overlaps the load)."""
+        slot = self.active
+        if slot is None:
+            raise RuntimeError("no ACTIVE context; call switch() first")
+        desc = self._contexts[slot.name]
+        fn = self._get_executable(desc, inputs)
+        return fn(slot.buffers, *inputs)
+
+    # --------------------------------------------------------------- misc
+    def resident(self) -> list[str]:
+        return [s.name for s in self.slots
+                if s.state in (ContextState.READY, ContextState.ACTIVE)]
+
+    def evict(self, name: str):
+        with self._lock:
+            s = self._find_slot(name)
+            if s is None:
+                return
+            if s.state == ContextState.ACTIVE:
+                raise RuntimeError("cannot evict the ACTIVE context")
+            s.state = ContextState.EMPTY
+            s.name, s.buffers, s.bytes_resident = None, None, 0
+            self.stats["evictions"] += 1
+
+    def shutdown(self):
+        self._loader.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Non-volatile context store (FeFET retention analogue)
+# ---------------------------------------------------------------------------
+
+class ContextStore:
+    """Persist contexts to disk; reload without recompute (non-volatility)."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    def save(self, name: str, weights) -> str:
+        from repro.train.checkpoint import save_pytree
+        import os
+        path = os.path.join(self.root, f"ctx_{name}")
+        save_pytree(path, weights)
+        return path
+
+    def weights_fn(self, name: str) -> Callable[[], Any]:
+        from repro.train.checkpoint import load_pytree
+        import os
+        path = os.path.join(self.root, f"ctx_{name}")
+        return lambda: load_pytree(path)

@@ -1,0 +1,158 @@
+"""Reconfiguration scheduling: discrete-event timing model + live driver.
+
+Reproduces the paper's three timing case studies analytically and drives the
+real ``ContextSwitchEngine`` with the same schedules so model and measurement
+can be compared (EXPERIMENTS.md §Paper-validation):
+
+  * conventional FPGA        — serial: every switch pays full reconfiguration
+  * preloaded (Fig 6c/d)     — all contexts resident; switch cost ~0
+  * dynamic reconfig (Fig 6e/f, S9) — next context loads *during* current
+    execution; visible reconfiguration = max(0, t_load - t_exec_available)
+
+Invariants checked by property tests:
+  * preloaded saving  in [0, 1)       (paper: ideal bound 100 %)
+  * dynamic  saving   in [0, 0.5] for alternating 2-net schedules and
+    <= 1 - 1/(k+1) in general        (paper: ideal bound 50 % for their case)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+
+@dataclass(frozen=True)
+class Run:
+    """One execution of a network: `net` must be resident when it starts."""
+    net: str
+    exec_time: float
+    repeat: int = 1
+
+
+def simulate_conventional(schedule: Sequence[Run],
+                          load_time: dict[str, float]) -> float:
+    """Single-configuration FPGA: reconfigure serially on every net change."""
+    t, current = 0.0, None
+    for r in schedule:
+        if r.net != current:
+            t += load_time[r.net]
+            current = r.net
+        t += r.exec_time * r.repeat
+    return t
+
+
+def simulate_preloaded(schedule: Sequence[Run],
+                       load_time: dict[str, float],
+                       switch_time: float = 0.0,
+                       preload_upfront: bool = False) -> float:
+    """All contexts resident (paper case 2: two preloaded configurations).
+
+    ``preload_upfront`` charges the one-time initial loads (the paper's
+    comparison excludes them, as they happen once at deployment).
+    """
+    t, current = 0.0, None
+    if preload_upfront:
+        t += sum(load_time[n] for n in {r.net for r in schedule})
+    for r in schedule:
+        if r.net != current:
+            t += switch_time
+            current = r.net
+        t += r.exec_time * r.repeat
+    return t
+
+
+def simulate_dynamic(schedule: Sequence[Run],
+                     load_time: dict[str, float],
+                     num_slots: int = 2,
+                     switch_time: float = 0.0) -> float:
+    """Dynamic reconfiguration with `num_slots` resident slots.
+
+    Event simulation: while run i executes in its slot, the loader (one
+    configuration port, like the FPGA's single config interface) streams the
+    weights of upcoming non-resident nets into free slots, evicting
+    least-recently-used non-active residents to make room.  Visible stall
+    before run i = remaining load time for its net.  This is the paper's
+    'reconfigure while executing' timeline (Fig 6e), generalized to
+    arbitrary schedules and slot counts.
+    """
+    resident: list[str] = []                 # LRU order, newest last
+    t = 0.0
+    loader_free_at = 0.0
+    load_done_at: dict[str, float] = {}
+
+    def occupied() -> int:
+        return len(resident) + len(load_done_at)
+
+    def ensure_queued(net: str, now: float, active: str | None):
+        """Queue a load, evicting an LRU non-active resident if needed."""
+        nonlocal loader_free_at
+        if net in resident or net in load_done_at:
+            return True
+        while occupied() >= num_slots:
+            victim = next((n for n in resident if n != active), None)
+            if victim is None:
+                return False                 # only the active net resident
+            resident.remove(victim)
+        start = max(now, loader_free_at)
+        loader_free_at = start + load_time[net]
+        load_done_at[net] = loader_free_at
+        return True
+
+    for i, r in enumerate(schedule):
+        ensure_queued(r.net, t, active=None)
+        if r.net not in resident:            # visible stall: remaining load
+            t = max(t, load_done_at.pop(r.net))
+            resident.append(r.net)
+        else:
+            resident.remove(r.net)
+            resident.append(r.net)           # MRU
+        t += switch_time
+        # prefetch upcoming nets while this one executes (hidden loads)
+        for nxt in schedule[i + 1:]:
+            if not ensure_queued(nxt.net, t, active=r.net):
+                break
+        t += r.exec_time * r.repeat
+    return t
+
+
+def time_saving(baseline: float, ours: float) -> float:
+    return (baseline - ours) / baseline
+
+
+# ---------------------------------------------------------------------------
+# live driver: runs the same schedule on a real ContextSwitchEngine
+# ---------------------------------------------------------------------------
+
+def run_schedule_live(engine, schedule: Sequence[Run], inputs: dict,
+                      dynamic: bool = True) -> dict:
+    """Drive the real engine; returns measured wall/clock decomposition.
+
+    dynamic=True  — preload next context while the current one runs
+    dynamic=False — conventional: evict + blocking load on every change
+    """
+    import time as _time
+    t0 = _time.perf_counter()
+    stalls = 0.0
+    for i, r in enumerate(schedule):
+        if not dynamic:
+            # single-configuration FPGA: a net change always reloads.
+            prev = engine.active.name if engine.active else None
+            if prev != r.net:
+                for name in list(engine.resident()):
+                    if name != prev:
+                        engine.evict(name)          # only the active stays
+                ts = _time.perf_counter()
+                engine.preload(r.net, block=True)
+                stalls += _time.perf_counter() - ts
+                engine.switch(r.net)
+                if prev is not None:
+                    engine.evict(prev)              # old config overwritten
+        else:
+            ts = _time.perf_counter()
+            engine.preload(r.net)            # no-op if resident
+            engine.switch(r.net, wait=True)  # stall only if load incomplete
+            stalls += _time.perf_counter() - ts
+            if i + 1 < len(schedule) and schedule[i + 1].net != r.net:
+                engine.preload(schedule[i + 1].net)   # hidden behind run()
+        for _ in range(r.repeat):
+            engine.run(*inputs[r.net])
+    return {"total": _time.perf_counter() - t0, "visible_stalls": stalls}

@@ -1,0 +1,6 @@
+from repro.distributed.mesh import (
+    AXIS_POD, AXIS_DATA, AXIS_MODEL, make_mesh, mesh_axis_size, batch_spec,
+)
+from repro.distributed.sharding import (
+    ShardingRules, DEFAULT_RULES, logical_to_spec, spec_for, shard_params_tree,
+)

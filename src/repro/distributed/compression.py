@@ -1,0 +1,57 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+int8 quantization with a **shared scale** + **error feedback**:
+
+  1. ``pmax`` the per-tensor absmax over the pod axis (scalar collective)
+  2. quantize locally to int8 with the shared scale
+  3. ``psum`` the int8 payload in int16 lanes (exact for <= 256 pods:
+     |sum| <= 127 * 256 < 2^15) — 2x wire bytes vs f32; the quantization
+     itself is 8-bit so a packed transport would reach 4x, noted in
+     DESIGN.md
+  4. dequantize once; the local quantization residual is carried into the
+     next step's gradient (error feedback — keeps SGD convergence, cf.
+     Karimireddy et al. 2019)
+
+Must run inside shard_map with the reduction axis manual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_shared(x: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
+    """int8 quantization with an axis-shared symmetric scale."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_mean(tree, axis: str, ef_tree):
+    """Mean-allreduce `tree` over `axis` with int8 EF compression.
+
+    Returns (reduced_tree, new_ef_tree); dtypes of `tree` preserved.
+    """
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+
+    def one(g, ef):
+        g32 = g.astype(jnp.float32) + ef
+        q, scale = quantize_shared(g32, axis)
+        new_ef = g32 - q.astype(jnp.float32) * scale   # residual stays local
+        total = jax.lax.psum(q.astype(jnp.int16), axis)  # compressed wire
+        red = total.astype(jnp.float32) * scale / n
+        return red.astype(g.dtype), new_ef
+
+    flat_g, treedef = jax.tree.flatten(tree)
+    flat_e = treedef.flatten_up_to(ef_tree)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def wire_bytes_saved(tree) -> tuple[int, int]:
+    """(f32 bytes, compressed bytes) for reporting."""
+    f32 = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    comp = sum(x.size * 2 for x in jax.tree.leaves(tree))
+    return f32, comp

@@ -1,0 +1,42 @@
+"""Mesh construction and axis conventions.
+
+Axis semantics (assignment-fixed production mesh):
+  pod   — data parallelism across pods (DCN-connected; gradient all-reduce
+          only, optionally int8-compressed)
+  data  — within-pod data parallelism + FSDP param sharding
+  model — tensor / expert / sequence(-kv) parallelism over ICI
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """A mesh over however many devices are available (tests/dev)."""
+    ndev = math.prod(shape)
+    devices = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+def mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Activation batch axis spec: ('pod','data') when a pod axis exists."""
+    if AXIS_POD in mesh.axis_names:
+        return P((AXIS_POD, AXIS_DATA))
+    return P(AXIS_DATA)
+
+
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return ((AXIS_POD, AXIS_DATA) if AXIS_POD in mesh.axis_names
+            else (AXIS_DATA,))

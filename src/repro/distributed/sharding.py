@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter in the model zoo is annotated with a tuple of *logical* axis
+names (one per dim).  ``ShardingRules`` maps logical axes to mesh axes; the
+mapping is arch/run-overridable, which is how the perf hillclimbs change
+sharding without touching model code.
+
+A logical axis maps to: a mesh axis name, a tuple of mesh axes, or None
+(replicated).  ``logical_to_spec`` drops mappings whose mesh axis does not
+exist in the current mesh or does not divide the dim size — so the same model
+code runs on a 1-device CPU test mesh and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+
+Axis = Optional[Union[str, tuple[str, ...]]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict[str, Axis] = field(default_factory=dict)
+
+    def with_(self, **kw) -> "ShardingRules":
+        r = dict(self.rules)
+        r.update(kw)
+        return ShardingRules(r)
+
+    def __getitem__(self, k: str) -> Axis:
+        return self.rules.get(k)
+
+
+# Default production rules: TP over `model`, FSDP over `data`, batch over
+# ('pod','data'), EP over `model`.
+DEFAULT_RULES = ShardingRules({
+    # activations
+    "batch": (AXIS_POD, AXIS_DATA),
+    "act_seq": None,
+    "act_heads": AXIS_MODEL,
+    "act_embed": None,
+    "act_ffn": AXIS_MODEL,
+    # attention-score q dim: fallback shard when the head count does not
+    # divide the model axis (starcoder2: 36 heads on a 16-wide axis) —
+    # _axis_ok's used-set keeps it a no-op whenever act_heads applied.
+    "act_attn_q": AXIS_MODEL,
+    # params — attention
+    "embed": AXIS_DATA,            # FSDP axis on the d_model dim
+    "heads": AXIS_MODEL,           # TP on the (q|kv) head dim
+    "kv_heads": AXIS_MODEL,
+    "head_dim": None,
+    # params — mlp
+    "ffn": AXIS_MODEL,
+    # params — embedding table / lm head
+    "vocab": AXIS_MODEL,
+    # params — moe
+    "experts": AXIS_MODEL,         # EP
+    "expert_ffn": None,
+    # params — ssm / xlstm inner dims
+    "ssm_inner": AXIS_MODEL,
+    "ssm_state": None,
+    "conv_width": None,
+    # scanned-layer leading axis is never sharded
+    "layers": None,
+    # KV-cache decode sharding
+    "kv_batch": (AXIS_POD, AXIS_DATA),
+    "kv_seq": None,                # flipped to `model` for seq-sharded decode
+    "kv_pages": None,              # paged cache: page-axis analogue of kv_seq
+})
+
+
+def _axis_ok(mesh: Mesh, axis: Axis, dim: int, used: set[str]) -> Axis:
+    """Keep only mesh axes that exist, are unused in this spec, and divide."""
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    keep = []
+    size = 1
+    for a in axes:
+        if a not in mesh.shape or a in used:
+            continue
+        if dim % (size * mesh.shape[a]) != 0:
+            continue
+        keep.append(a)
+        size *= mesh.shape[a]
+    if not keep:
+        return None
+    return keep[0] if len(keep) == 1 else tuple(keep)
+
+
+def logical_to_spec(mesh: Mesh, logical: tuple[str, ...],
+                    shape: tuple[int, ...],
+                    rules: ShardingRules = DEFAULT_RULES) -> P:
+    assert len(logical) == len(shape), (logical, shape)
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        ax = _axis_ok(mesh, rules[name], dim, used)
+        if ax is not None:
+            used.update((ax,) if isinstance(ax, str) else ax)
+        out.append(ax)
+    return P(*out)
+
+
+def spec_for(mesh: Mesh, logical: tuple[str, ...], shape: tuple[int, ...],
+             rules: ShardingRules = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, logical, shape, rules))
+
+
+def shard_params_tree(mesh: Mesh, params: Any, logical_tree: Any,
+                      rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """NamedSharding pytree matching `params` from its logical-axis pytree.
+
+    `params` may contain jax.Arrays or ShapeDtypeStructs.
+    """
+    def one(p, l):
+        return spec_for(mesh, tuple(l), tuple(p.shape), rules)
+    return jax.tree.map(one, params, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, str) or e is None for e in x))
+
+
+def constrain(x, mesh: Mesh, logical: tuple[str, ...],
+              rules: ShardingRules = DEFAULT_RULES):
+    """Activation sharding constraint by logical axes (no-op off-mesh dims)."""
+    spec = logical_to_spec(mesh, logical, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,38 @@
+"""Pallas TPU kernels for the model zoo's compute hot-spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (auto interpret=True off-TPU)
+  ref.py    — pure-jnp oracle the tests sweep against
+
+Runtime dispatch: the model layers call ``use_kernels()``; modes
+  auto      — Pallas on TPU, jnp reference on CPU (default)
+  interpret — Pallas interpreter everywhere (CPU integration tests)
+  off       — always the jnp reference
+set via ``set_mode`` or env ``REPRO_PALLAS``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_MODE = os.environ.get("REPRO_PALLAS", "auto")
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "interpret", "off"), mode
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def use_kernels() -> bool:
+    if _MODE == "off":
+        return False
+    if _MODE == "interpret":
+        return True
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    DEFAULT_BK, decode_attention_kernel)
+from repro.kernels.decode_attention.ref import decode_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ring", "scale", "block_k",
+                                             "interpret"))
+def decode_attention(q, k, v, pos, *, ring: bool = False,
+                     scale: float | None = None, block_k: int = DEFAULT_BK,
+                     interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, Hkv, S, hd); pos: () int32 -> (B, H, hd).
+
+    Pads the cache length to a block multiple; padded slots have index
+    > pos for the non-ring case and are excluded by an explicit bound for
+    the ring case (the ring wraps at the true S, so we keep S aligned by
+    choosing bk | S instead when possible).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bk = min(block_k, S)
+    while S % bk != 0:          # ring caches must not pad: shrink the block
+        bk //= 2
+    qg = q.reshape(B, Hkv, G, hd)
+    out = decode_attention_kernel(qg, k, v, pos, ring=ring, scale=scale,
+                                  block_k=bk, interpret=interpret)
+    return out.reshape(B, H, hd)
+
+
+__all__ = ["decode_attention", "decode_reference"]

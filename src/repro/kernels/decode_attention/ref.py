@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash-decode: one query token vs a KV cache.
+
+Layout: q (B, H, hd); k/v cache (B, Hkv, S, hd); ``pos`` is the position of
+the current token (its k/v already written at its slot).
+
+Validity:
+  * full cache   — slots [0, pos] are valid.
+  * ring cache   — (sliding window, cache length == window): every slot is
+    valid once the ring has wrapped (pos >= S), else slots [0, pos].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_reference(q, k, v, pos, *, ring: bool = False,
+                     scale: float | None = None) -> jax.Array:
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    G = H // Hkv
+    qh = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,bnsd->bngs", qh, k.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    if ring:
+        valid = (idx <= pos % S) | (pos >= S)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngs,bnsd->bngd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Dispatch: Pallas TPU kernel on TPU; interpret-mode execution of the same
+kernel body on CPU (correctness path); padding to block multiples handled
+here so the kernel sees aligned shapes only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BK, DEFAULT_BQ, flash_attention_kernel)
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = DEFAULT_BQ,
+                    block_k: int = DEFAULT_BK,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, S, hd); k/v: (B, Hkv, S, hd) -> (B, H, S, hd).
+
+    Pads S up to a block multiple; padded key columns sit above the causal
+    diagonal of every real query row, so they are masked for free.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, S, hd = q.shape
+    bq = min(block_q, max(S, 8))
+    bk = min(block_k, max(S, 8))
+    pad = (-S) % max(bq, bk)
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v = zp(q), zp(k), zp(v)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 scale=scale, block_q=bq, block_k=bk,
+                                 interpret=interpret)
+    return out[:, :, :S] if pad else out
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    return mha_reference(q, k, v, causal=causal, window=window, scale=scale)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout: q (B, H, S, hd); k/v (B, Hkv, S, hd) with H % Hkv == 0 (GQA).
+Semantics: causal self-attention over a common position range [0, S),
+optionally banded to a sliding window of width ``window`` (token t attends
+to (t-window, t]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= (i - j) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the grouped-matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gmm.kernel import (
+    DEFAULT_BC, DEFAULT_BD, DEFAULT_BF, gmm_kernel)
+from repro.kernels.gmm.ref import expert_mlp_reference, gmm_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _shrink(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def gmm(x, w, *, block_c: int = DEFAULT_BC, block_f: int = DEFAULT_BF,
+        block_d: int = DEFAULT_BD, interpret: bool | None = None):
+    """Grouped matmul x (E, C, D) @ w (E, D, F) -> (E, C, F)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    E, C, D = x.shape
+    F = w.shape[2]
+    return gmm_kernel(x, w, block_c=_shrink(block_c, C),
+                      block_f=_shrink(block_f, F),
+                      block_d=_shrink(block_d, D), interpret=interpret)
+
+
+def expert_mlp(x, w_gate, w_up, w_down, **kw):
+    """Per-expert gated FFN using three grouped matmuls."""
+    h = jax.nn.silu(gmm(x, w_gate, **kw).astype(jnp.float32))
+    h = h * gmm(x, w_up, **kw).astype(jnp.float32)
+    return gmm(h.astype(x.dtype), w_down, **kw)
+
+
+__all__ = ["gmm", "expert_mlp", "gmm_reference", "expert_mlp_reference"]

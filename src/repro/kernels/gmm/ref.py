@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_reference(x, w):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F) in f32 accumulation."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def expert_mlp_reference(x, w_gate, w_up, w_down):
+    """The fused expert FFN the MoE layer runs per expert group."""
+    import jax
+    h = jax.nn.silu(gmm_reference(x, w_gate).astype(jnp.float32))
+    h = h * gmm_reference(x, w_up).astype(jnp.float32)
+    return gmm_reference(h.astype(x.dtype), w_down)

@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the chunkwise-mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_chunk.kernel import DEFAULT_CHUNK, mlstm_chunk_kernel
+from repro.kernels.mlstm_chunk.ref import (
+    mlstm_chunk_reference, mlstm_recurrent_reference)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, li, lf, *, chunk: int = DEFAULT_CHUNK,
+                interpret: bool | None = None):
+    """q/k/v: (B, H, L, dh); li/lf: (B, H, L) -> (h, (C, n, m)).
+
+    Auto-shrinks the chunk to a divisor of L."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    L = q.shape[2]
+    c = min(chunk, L)
+    while L % c:
+        c //= 2
+    f32 = lambda x: x.astype(jnp.float32)
+    return mlstm_chunk_kernel(f32(q), f32(k), f32(v), f32(li), f32(lf),
+                              chunk=c, interpret=interpret)
+
+
+__all__ = ["mlstm_chunk", "mlstm_chunk_reference",
+           "mlstm_recurrent_reference"]

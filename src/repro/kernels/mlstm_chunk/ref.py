@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the chunkwise-mLSTM kernel: re-exports the model's
+chunkwise and fully-recurrent forms (the recurrent form is the ground truth;
+chunkwise is algebraically identical and is what the kernel implements)."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_chunkwise, mlstm_recurrent
+
+
+def mlstm_chunk_reference(q, k, v, li, lf, chunk: int, state=None):
+    """q/k/v: (B, H, L, dh) f32; li/lf: (B, H, L) f32 log gates."""
+    return mlstm_chunkwise(q, k, v, li, lf, chunk, state)
+
+
+def mlstm_recurrent_reference(q, k, v, li, lf, state=None):
+    return mlstm_recurrent(q, k, v, li, lf, state)

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import (
+    DEFAULT_BD, DEFAULT_BL, ssm_scan_kernel)
+from repro.kernels.ssm_scan.ref import selective_scan_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_l",
+                                             "interpret"))
+def selective_scan(u, dt, Bm, Cm, A, D, init_state=None, *,
+                   block_d: int = DEFAULT_BD, block_l: int = DEFAULT_BL,
+                   interpret: bool | None = None):
+    """Selective scan: returns (y (B, L, d_in) f32, state (B, d_in, N) f32).
+
+    Shapes follow the model's mamba block; block sizes auto-shrink to
+    divisors of (d_in, L)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, L, d_in = u.shape
+    N = A.shape[1]
+    bd = min(block_d, d_in)
+    while d_in % bd:
+        bd //= 2
+    bl = min(block_l, L)
+    while L % bl:
+        bl //= 2
+    if init_state is None:
+        init_state = jnp.zeros((B, d_in, N), jnp.float32)
+    f32 = lambda x: x.astype(jnp.float32)
+    y, s = ssm_scan_kernel(f32(u), f32(dt), f32(Bm), f32(Cm), f32(A),
+                           f32(D).reshape(1, d_in), f32(init_state),
+                           block_d=bd, block_l=bl, interpret=interpret)
+    return y, s
+
+
+__all__ = ["selective_scan", "selective_scan_reference"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the selective-scan kernel (re-exports the model's
+exact sequential scan so kernel tests validate against the single source of
+truth used by the Jamba blocks)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _selective_scan_ref
+
+
+def selective_scan_reference(u, dt, Bm, Cm, A, D, init_state=None):
+    """u/dt: (B, L, d_in) f32; Bm/Cm: (B, L, N); A: (d_in, N); D: (d_in,).
+
+    Returns y (B, L, d_in) and the final state (B, d_in, N)."""
+    return _selective_scan_ref(u.astype(jnp.float32), dt.astype(jnp.float32),
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               A.astype(jnp.float32), D.astype(jnp.float32),
+                               init_state)

@@ -1,0 +1,452 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+# The dry-run — and ONLY the dry-run — runs with 512 placeholder host
+# devices so the production meshes (16x16 and 2x16x16) can be built.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (single-pod 16x16 = 256 chips, or
+     multi-pod 2x16x16 = 512 chips),
+  2. lowers the cell's step function (train_step / prefill / serve_step)
+     from ShapeDtypeStruct stand-ins (zero device allocation),
+  3. compiles it (SPMD partitioning succeeds == the distribution config is
+     coherent: no sharding mismatch, no unsupported collective),
+  4. records memory_analysis() (proves it fits), cost_analysis() FLOPs/bytes,
+     and the collective-byte breakdown parsed from the optimized HLO,
+  5. extrapolates full-depth FLOPs/collective bytes from two reduced-depth
+     *unrolled* compiles (XLA's cost model visits a while-loop body once, so
+     the scanned full-depth program under-counts by ~num_layers; the
+     two-point fit recovers the true totals including the embed/head
+     intercept),
+  6. writes one JSON per cell into --out (benchmarks/roofline reads these).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+  python -m repro.launch.dryrun --arch qwen3-moe-235b-a22b --shape decode_32k \
+      --rule kv_seq=model --tag sp_decode      # hillclimb variant
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import V5E, model_flops, roofline_terms, utilization
+from repro.configs import (
+    ASSIGNED_ARCHS, SHAPES, cell_is_runnable, get_arch, override)
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
+from repro.distributed.mesh import AXIS_MODEL as AXIS_MODEL_NAME
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_sharded_cache, abstract_sharded_params, decode_rules,
+    default_parallel, fit_batch_axes, input_specs)
+from repro.models.model import LM, build_model
+from repro.train.trainer import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# step-function construction per shape kind
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, rules: ShardingRules,
+               *, metrics_depth: int | None = None, run_cfg: RunConfig | None
+               = None, moe_strategy: str = "auto",
+               embed_onehot: bool = False, paged: int = 0,
+               attn_identity: bool = False):
+    """Returns (jitted_fn, example_args: tuple) ready to .lower()."""
+    if metrics_depth is not None:
+        period = len(build_model(cfg).pattern)
+        cfg = override(cfg, num_layers=period * metrics_depth)
+    import copy
+    if run_cfg is None:
+        run_cfg = RunConfig(arch=cfg.name, shape=shape.name,
+                            parallel=default_parallel(cfg, shape))
+    if metrics_depth is not None:
+        run_cfg = copy.deepcopy(run_cfg)
+        run_cfg.parallel.microbatches = 1   # see module docstring step 5
+
+    if shape.kind == "decode":
+        rules = decode_rules(cfg, mesh, rules) if rules is DEFAULT_RULES \
+            else rules
+    if cfg.moe is not None and \
+            cfg.moe.num_experts % mesh.shape.get("model", 1) != 0:
+        # mixtral (8e) on a 16-wide model axis: experts cannot shard the
+        # axis; replicate experts and TP-shard the expert FFN dim instead
+        # (dense dispatch; the top-k waste shows up in useful_fraction).
+        rules = rules.with_(experts=None, expert_ffn=AXIS_MODEL_NAME)
+    model = build_model(cfg, mesh=mesh, rules=rules,
+                        moe_strategy=moe_strategy,
+                        embed_onehot=embed_onehot,
+                        attn_identity=attn_identity,
+                        scan_unroll=metrics_depth is not None)
+
+    inputs = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        step = make_train_step(model, run_cfg, mesh)
+        params = abstract_sharded_params(model, mesh, rules,
+                                         jnp.dtype(cfg.param_dtype))
+        opt_leaf = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                                  sharding=p.sharding)
+        state = {"params": params,
+                 "opt": {"m": jax.tree.map(opt_leaf, params),
+                         "v": jax.tree.map(opt_leaf, params),
+                         "count": jax.ShapeDtypeStruct((), jnp.int32)},
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch = {"tokens": inputs["tokens"]}
+        if "patch_embeds" in inputs:
+            batch["patch_embeds"] = inputs["patch_embeds"]
+        return jax.jit(step, donate_argnums=(0,)), (state, batch)
+
+    # serving: bf16 params (inference residency, paper's context = weights)
+    params = abstract_sharded_params(model, mesh, rules, jnp.bfloat16)
+
+    if shape.kind == "prefill":
+        max_len = shape.seq_len
+
+        def prefill_fn(params, tokens, patch_embeds=None):
+            if patch_embeds is not None:
+                return model.prefill(params, tokens, max_len,
+                                     patch_embeds=patch_embeds)
+            return model.prefill(params, tokens, max_len)
+
+        args = (params, inputs["tokens"])
+        if "patch_embeds" in inputs:
+            args = args + (inputs["patch_embeds"],)
+        return jax.jit(prefill_fn), args
+
+    # decode: serve_step — one new token against a seq_len cache
+    if paged:
+        from repro.launch.specs import abstract_sharded_paged_cache
+        bigs, acts = abstract_sharded_paged_cache(
+            model, mesh, rules, shape.global_batch, shape.seq_len, paged)
+
+        def serve_step_paged(params, bigs, acts, tokens, pos):
+            return model.decode_step_paged(params, bigs, acts, tokens, pos)
+
+        # only the active pages are donated; `bigs` is read-only residency
+        return (jax.jit(serve_step_paged, donate_argnums=(2,)),
+                (params, bigs, acts, inputs["tokens"], inputs["pos"]))
+
+    caches = abstract_sharded_cache(model, mesh, rules,
+                                    shape.global_batch, shape.seq_len)
+
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    return (jax.jit(serve_step, donate_argnums=(1,)),
+            (params, caches, inputs["tokens"], inputs["pos"]))
+
+
+# ---------------------------------------------------------------------------
+# metrics extraction
+# ---------------------------------------------------------------------------
+
+def _cost(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, list):
+            c = c[0]
+        return dict(c)
+    except Exception as e:            # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _memory(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        return {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+    except Exception as e:            # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _arg_bytes_per_device(args, mesh) -> int:
+    """Analytic per-device residency of the step's inputs (params+cache+data).
+
+    CPU memory_analysis does not model the 512-device partition; shard sizes
+    from the NamedShardings are exact."""
+    ndev = mesh.size
+    total = 0
+    for leaf in jax.tree.leaves(args):
+        if not hasattr(leaf, "shape"):
+            continue
+        n = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        sh = getattr(leaf, "sharding", None)
+        if isinstance(sh, NamedSharding):
+            spec = sh.spec
+            denom = 1
+            for dim_ax in spec:
+                if dim_ax is None:
+                    continue
+                axes = (dim_ax,) if isinstance(dim_ax, str) else dim_ax
+                for a in axes:
+                    denom *= mesh.shape[a]
+            n //= denom
+        total += n
+    return total
+
+
+def compile_cell(fn, args) -> tuple:
+    t0 = time.perf_counter()
+    lowered = fn.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return lowered, compiled, t1 - t0, t2 - t1
+
+
+def measure_cell(cfg: ArchConfig, shape: ShapeConfig, mesh_kind: str,
+                 rules: ShardingRules, *, metrics_depths=(1, 2),
+                 moe_strategy: str = "auto", skip_metrics: bool = False,
+                 run_cfg: RunConfig | None = None,
+                 embed_onehot: bool = False, paged: int = 0,
+                 mesh_shape: tuple | None = None,
+                 kernel_subst: bool = False) -> dict:
+    if mesh_shape is not None:
+        # same 256 chips, different logical split (hillclimb variant):
+        # e.g. (32, 8) gives an 8-wide model axis = mixtral's expert count.
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: dict = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_kind,
+                 "chips": int(mesh.size)}
+
+    with mesh:
+        # -- full-depth compile: the runnability/memory proof ---------------
+        fn, args = build_cell(cfg, shape, mesh, rules, run_cfg=run_cfg,
+                              moe_strategy=moe_strategy,
+                              embed_onehot=embed_onehot, paged=paged)
+        lowered, compiled, t_low, t_comp = compile_cell(fn, args)
+        rec["lower_s"], rec["compile_s"] = round(t_low, 2), round(t_comp, 2)
+        rec["memory_analysis"] = _memory(compiled)
+        rec["arg_bytes_per_device"] = _arg_bytes_per_device(args, mesh)
+        rec["cost_scanned"] = {k: v for k, v in _cost(compiled).items()
+                               if k in ("flops", "bytes accessed")}
+        coll_full, per_kind_full = collective_bytes(compiled.as_text())
+        rec["collectives_scanned"] = {
+            "moved_bytes": coll_full,
+            "per_kind": {k: v["count"] for k, v in per_kind_full.items()}}
+        del compiled, lowered
+
+        if skip_metrics:
+            return rec
+
+        # -- two-point depth extrapolation (unrolled reduced-depth) ---------
+        period = len(build_model(cfg).pattern)
+        repeats_full = cfg.num_layers // period
+        pts = []
+        pts_id = []
+        for r in metrics_depths:
+            r = min(r, repeats_full)
+            variants = [(False, pts)] + ([(True, pts_id)] if kernel_subst
+                                         else [])
+            for ident, sink in variants:
+                fn_r, args_r = build_cell(cfg, shape, mesh, rules,
+                                          metrics_depth=r,
+                                          run_cfg=run_cfg,
+                                          moe_strategy=moe_strategy,
+                                          embed_onehot=embed_onehot,
+                                          paged=paged, attn_identity=ident)
+                lo, co, _, _ = compile_cell(fn_r, args_r)
+                cost = _cost(co)
+                coll, per_kind = collective_bytes(co.as_text())
+                sink.append({"repeats": r, "flops": cost.get("flops", 0.0),
+                             "bytes": cost.get("bytes accessed", 0.0),
+                             "coll": coll, "per_kind": per_kind})
+                del co, lo
+            if r == repeats_full:
+                break
+
+        def fit(key):
+            if len(pts) == 1 or pts[0]["repeats"] == pts[-1]["repeats"]:
+                return float(pts[-1][key])
+            (p1, p2) = pts[0], pts[-1]
+            slope = (p2[key] - p1[key]) / (p2["repeats"] - p1["repeats"])
+            c0 = p1[key] - slope * p1["repeats"]
+            return float(c0 + slope * repeats_full)
+
+        flops = fit("flops")
+        byts = fit("bytes")
+        coll = fit("coll")
+        rec["extrapolated"] = {
+            "repeats_points": [p["repeats"] for p in pts],
+            "flops_per_device": flops, "bytes_per_device": byts,
+            "collective_moved_bytes_per_device": coll,
+            "collective_per_kind_at_depth": {
+                k: {"count": v["count"],
+                    "moved_bytes": v["moved_bytes"]}
+                for k, v in pts[-1]["per_kind"].items()},
+        }
+
+        # -- kernel-substituted terms (Pallas flash attention on TPU) -------
+        if kernel_subst and pts_id:
+            from repro.analysis.kernelcost import flash_attention_cost
+
+            def fit_from(pp, key):
+                if len(pp) == 1 or pp[0]["repeats"] == pp[-1]["repeats"]:
+                    return float(pp[-1][key])
+                p1, p2 = pp[0], pp[-1]
+                sl = (p2[key] - p1[key]) / (p2["repeats"] - p1["repeats"])
+                return float(p1[key] - sl * p1["repeats"]
+                             + sl * repeats_full)
+
+            kc = flash_attention_cost(
+                cfg, shape, mesh.size, training=(shape.kind == "train"),
+                remat=(run_cfg is None or
+                       run_cfg.parallel.remat != "none"))
+            f_id = fit_from(pts_id, "flops")
+            b_id = fit_from(pts_id, "bytes")
+            adj_f = f_id + kc["flops"]
+            adj_b = b_id + kc["bytes"]
+            t_adj = roofline_terms(adj_f, adj_b, fit_from(pts, "coll"))
+            rec["kernel_substituted"] = {
+                "flops_per_device": adj_f, "bytes_per_device": adj_b,
+                "attn_region_bytes_measured":
+                    fit_from(pts, "bytes") - b_id,
+                "flash_kernel_bytes": kc["bytes"],
+                **t_adj}
+
+        # -- roofline ---------------------------------------------------------
+        terms = roofline_terms(flops, byts, coll)
+        n_active = cfg.param_count(active_only=True)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                       else (shape.seq_len if shape.kind ==
+                                             "prefill" else 1))
+        mf = model_flops(n_active, tokens, training=(shape.kind == "train"))
+        terms["model_flops"] = mf
+        terms["useful_fraction"] = utilization(mf, flops, mesh.size)
+        rec["roofline"] = terms
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def parse_rules(pairs: list[str]) -> ShardingRules:
+    rules = DEFAULT_RULES
+    for p in pairs:
+        k, _, v = p.partition("=")
+        axis = None if v in ("", "none", "None") else \
+            (tuple(v.split("+")) if "+" in v else v)
+        rules = rules.with_(**{k: axis})
+    return rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch x shape) cell")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for variant runs")
+    ap.add_argument("--rule", action="append", default=[],
+                    metavar="logical=mesh_axis",
+                    help="sharding-rule override (hillclimb knob)")
+    ap.add_argument("--moe-strategy", default="auto",
+                    choices=("auto", "ep", "tp", "ref"))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--cast-bf16", action="store_true",
+                    help="bf16-cast master params before the FSDP gather")
+    ap.add_argument("--remat", default=None, choices=("none", "full", "dots"))
+    ap.add_argument("--embed-onehot", action="store_true",
+                    help="one-hot matmul embedding (vs gather)")
+    ap.add_argument("--paged", type=int, default=0, metavar="PAGE",
+                    help="paged decode cache with this page size")
+    ap.add_argument("--mesh-shape", default=None, metavar="DxM",
+                    help="alternate (data, model) split of the 256 chips")
+    ap.add_argument("--kernel-subst", action="store_true",
+                    help="also report the Pallas-flash-substituted roofline")
+    ap.add_argument("--skip-metrics", action="store_true",
+                    help="compile proof only (no roofline extrapolation)")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                if cell_is_runnable(get_arch(a), SHAPES[s])[0]:
+                    cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    rules = parse_rules(args.rule)
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch_name, shape_name in cells:
+        cfg = get_arch(arch_name)
+        shape = SHAPES[shape_name]
+        ok, why = cell_is_runnable(cfg, shape)
+        if not ok:
+            print(f"SKIP {arch_name} x {shape_name}: {why}")
+            continue
+        run_cfg = RunConfig(arch=cfg.name, shape=shape.name,
+                            parallel=default_parallel(cfg, shape))
+        if args.microbatches is not None:
+            run_cfg.parallel.microbatches = args.microbatches
+        if args.remat is not None:
+            run_cfg.parallel.remat = args.remat
+        if args.cast_bf16:
+            run_cfg.parallel.cast_bf16 = True
+        for mesh_kind in meshes:
+            key = f"{arch_name}_{shape_name}_{mesh_kind}"
+            if args.tag:
+                key += f"_{args.tag}"
+            t0 = time.perf_counter()
+            try:
+                rec = measure_cell(cfg, shape, mesh_kind, rules,
+                                   moe_strategy=args.moe_strategy,
+                                   skip_metrics=(args.skip_metrics or
+                                                 mesh_kind == "multi"),
+                                   run_cfg=run_cfg,
+                                   embed_onehot=args.embed_onehot,
+                                   paged=args.paged,
+                                   mesh_shape=(tuple(
+                                       int(v) for v in
+                                       args.mesh_shape.split("x"))
+                                       if args.mesh_shape else None),
+                                   kernel_subst=args.kernel_subst)
+                rec["variant"] = {"tag": args.tag, "rules": args.rule,
+                                  "embed_onehot": args.embed_onehot,
+                                  "paged": args.paged,
+                                  "mesh_shape": args.mesh_shape,
+                                  "moe_strategy": args.moe_strategy,
+                                  "microbatches": run_cfg.parallel.microbatches,
+                                  "remat": run_cfg.parallel.remat}
+                path = os.path.join(args.out, key + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                print(f"OK   {key}  compile={rec['compile_s']}s "
+                      f"dominant={dom}  "
+                      f"[{time.perf_counter() - t0:.1f}s]")
+            except Exception:
+                failures += 1
+                print(f"FAIL {key}")
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation: the dry-run lowers
+train/prefill/serve steps directly from these.  Modality frontends are STUBS
+per the assignment: the VLM gets precomputed patch embeddings, the audio arch
+gets codec-token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, ParallelConfig
+from repro.distributed.mesh import batch_spec
+from repro.distributed.sharding import (
+    DEFAULT_RULES, ShardingRules, logical_to_spec, shard_params_tree)
+from repro.models.model import LM
+
+
+def decode_rules(cfg: ArchConfig, mesh: Mesh,
+                 base: ShardingRules = DEFAULT_RULES) -> ShardingRules:
+    """KV-cache sharding: heads->model when they divide the axis, else
+    sequence->model (SP decode; required for kv=4 archs on a 16-wide axis —
+    qwen3's 32k cache would not fit HBM otherwise)."""
+    tp = mesh.shape.get("model", 1)
+    if cfg.num_kv_heads % tp == 0:
+        return base.with_(kv_heads="model", kv_seq=None, kv_pages=None)
+    return base.with_(kv_heads=None, kv_seq="model", kv_pages="model")
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def fit_batch_axes(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    """Batch mesh axes whose product divides `batch` (long_500k has B=1)."""
+    axes = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and batch % (size * mesh.shape[a]) == 0:
+            axes.append(a)
+            size *= mesh.shape[a]
+    return tuple(axes)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: ShardingRules = DEFAULT_RULES) -> dict:
+    """Abstract inputs for the given (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    baxes = fit_batch_axes(mesh, B)
+    bspec = (baxes,) if baxes else (None,)
+    out: dict = {}
+    n_patch = (cfg.frontend.num_positions
+               if cfg.frontend.kind == "vision_patches" else 0)
+    if shape.kind in ("train", "prefill"):
+        s_text = S - n_patch
+        out["tokens"] = _sds((B, s_text), jnp.int32, mesh,
+                             P(*bspec, None))
+        if n_patch:
+            out["patch_embeds"] = _sds(
+                (B, n_patch, cfg.frontend.embed_dim), jnp.bfloat16, mesh,
+                P(*bspec, None, None))
+    else:                                     # decode: one new token
+        out["tokens"] = _sds((B, 1), jnp.int32, mesh, P(*bspec, None))
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def abstract_sharded_params(model: LM, mesh: Mesh, rules: ShardingRules,
+                            dtype) -> dict:
+    specs = model.abstract(dtype)
+    sh = shard_params_tree(mesh, specs, model.logical(), rules)
+    return jax.tree.map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+        specs, sh)
+
+
+def abstract_sharded_cache(model: LM, mesh: Mesh, rules: ShardingRules,
+                           batch: int, max_len: int):
+    cache = model.init_cache(batch, max_len, abstract=True)
+    logical = model.cache_logical()
+    sh = shard_params_tree(mesh, cache, logical, rules)
+    return jax.tree.map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+        cache, sh)
+
+
+def abstract_sharded_paged_cache(model: LM, mesh: Mesh, rules: ShardingRules,
+                                 batch: int, max_len: int, page: int):
+    bigs, acts = model.init_paged_cache(batch, max_len, page, abstract=True)
+    lb, la = model.paged_cache_logical()
+
+    def place(tree, logical):
+        sh = shard_params_tree(mesh, tree, logical, rules)
+        return jax.tree.map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+            tree, sh)
+
+    return place(bigs, lb), place(acts, la)
+
+
+def default_parallel(cfg: ArchConfig, shape: ShapeConfig) -> ParallelConfig:
+    """Baseline per-cell parallel knobs (the paper-faithful starting point)."""
+    n = cfg.param_count_cached if hasattr(cfg, "param_count_cached") else None
+    big = cfg.num_layers * cfg.d_model * cfg.d_model
+    p = ParallelConfig()
+    if shape.kind == "train":
+        big = cfg.moe is not None or cfg.d_model >= 4_000
+        p.microbatches = 8 if big else 4
+        # Block remat is the production default at this scale: without it
+        # the backward pass stores every attention-score residual
+        # (O(S^2) per layer) and no 4k-seq cell fits 16 GB HBM.
+        p.remat = "full"
+    return p

@@ -1,0 +1,89 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs on whatever devices exist (1 CPU device in dev; the production pods via
+the same code path — the mesh shape is the only difference).  ``--reduced``
+trains the smoke-scale variant of the arch; the full configs are
+dry-run-only on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced as make_reduced
+from repro.configs.base import RunConfig, OptimizerConfig, ParallelConfig
+from repro.distributed.mesh import make_mesh
+from repro.models.model import build_model
+from repro.train.data import SyntheticTokens
+from repro.train.trainer import Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--dp", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=("none", "full"))
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    dp = args.dp or max(len(jax.devices()) // args.tp, 1)
+    mesh = make_mesh((dp, args.tp), ("data", "model"))
+
+    run_cfg = RunConfig(
+        arch=cfg.name, shape="custom", seed=args.seed,
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=max(args.steps // 10, 1)),
+        parallel=ParallelConfig(dp=dp, tp=args.tp,
+                                microbatches=args.microbatches,
+                                remat=args.remat),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        log_every=args.log_every)
+
+    model = build_model(cfg, mesh=mesh)
+    patch = ((cfg.frontend.num_positions, cfg.frontend.embed_dim)
+             if cfg.frontend.kind == "vision_patches" else None)
+    data = SyntheticTokens(cfg.vocab_size, args.seq, args.batch,
+                           seed=args.seed, patch_spec=patch)
+    trainer = Trainer(model, run_cfg, data, mesh=mesh)
+
+    state = trainer.init_or_restore(jax.random.key(args.seed))
+    n = model.n_params()
+    print(f"arch={cfg.name} params={n/1e6:.1f}M devices={dp}x{args.tp} "
+          f"start_step={trainer.start_step}")
+    t0 = time.perf_counter()
+    state = trainer.train(state, args.steps,
+                          log_cb=lambda m: print(json.dumps(m)))
+    dt = time.perf_counter() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"done: {args.steps} steps, {toks/dt:.0f} tok/s, "
+          f"final loss {trainer.metrics_log[-1]['loss']:.4f}"
+          if trainer.metrics_log else f"done in {dt:.1f}s")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.metrics_log, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+from repro.models.model import LM, build_model
+from repro.models.common import (
+    PSpec, init_params, logical_tree, abstract_params, count_params,
+)

@@ -1,0 +1,74 @@
+"""Parameter-spec machinery.
+
+Models declare a nested dict of ``PSpec`` (shape + logical axes + init kind).
+From that single declaration we derive:
+  * ``init_params``      — materialized, RNG-initialized pytree (tests/examples)
+  * ``abstract_params``  — ShapeDtypeStruct pytree (dry-run: zero allocation)
+  * ``logical_tree``     — logical-axis pytree (sharding rules -> NamedSharding)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float | None = None  # stddev override for normal/scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stacked(n: int, specs: Any) -> Any:
+    """Prepend a scanned-layers axis to every PSpec in a subtree."""
+    def one(s: PSpec) -> PSpec:
+        return PSpec((n,) + s.shape, ("layers",) + s.logical, s.init, s.scale)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _init_one(key, s: PSpec, dtype) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "normal":
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dtype)
+    if s.init == "scaled":
+        std = s.scale if s.scale is not None else 0.02
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(s.init)
+
+
+def init_params(key, specs: Any, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        specs, is_leaf=_is_spec)
+
+
+def logical_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=_is_spec)
+
+
+def count_params(specs: Any) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

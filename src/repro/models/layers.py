@@ -1,0 +1,411 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (full + sliding
+window), gated MLP.  Pure-jnp reference path; on TPU the attention ops
+dispatch to the Pallas kernels via ``repro.kernels``.
+
+All functions are functional: ``params`` in, arrays out.  Attention exposes
+three entry points matching the framework's execution modes:
+  * ``attention``          — training forward (no cache)
+  * ``attention_prefill``  — returns the populated KV cache
+  * ``attention_decode``   — one token against the cache
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec
+
+NEG_INF = -1e30  # bf16-safe large negative
+
+
+# ---------------------------------------------------------------------------
+# norms / mlp
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def mlp_specs(d: int, f: int, gated: bool = True) -> dict:
+    out = {
+        "w_up": PSpec((d, f), ("embed", "ffn")),
+        "w_down": PSpec((f, d), ("ffn", "embed")),
+    }
+    if gated:
+        out["w_gate"] = PSpec((d, f), ("embed", "ffn"))
+    return out
+
+
+def mlp(params, x):
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Contiguous KV cache; for sliding-window archs S == window (ring)."""
+    k: jax.Array          # (B, Hkv, S, hd)
+    v: jax.Array          # (B, Hkv, S, hd)
+
+
+def attn_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "wq": PSpec((d, cfg.num_heads, cfg.head_dim),
+                    ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, cfg.num_kv_heads, cfg.head_dim),
+                    ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, cfg.num_kv_heads, cfg.head_dim),
+                    ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((cfg.num_heads, cfg.head_dim, d),
+                    ("heads", "head_dim", "embed")),
+    }
+
+
+def _qkv(params, x, positions, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain(x, mesh, rules, logical):
+    if mesh is None:
+        return x
+    from repro.distributed.sharding import constrain as _c
+    from repro.distributed.sharding import DEFAULT_RULES
+    return _c(x, mesh, logical, rules if rules is not None else DEFAULT_RULES)
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig, mesh=None, rules=None):
+    """q: (B,S,H,hd), k/v: (B,T,Hkv,hd), mask: (S,T) or (B,S,T) bool.
+
+    KV heads are expanded to H so the (B,H,S,T) scores shard cleanly over
+    the full `model` axis even when Hkv < axis size (GQA kv=4 archs on a
+    16-wide axis).  On TPU the flash kernel does GQA natively; this is the
+    XLA-visible formulation whose sharding GSPMD propagates.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = _constrain(scores, mesh, rules,
+                        ("batch", "act_heads", "act_attn_q", None))
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return out
+
+
+ATTN_CHUNK_THRESHOLD = 2_048   # at/above this, use query-chunked attention
+ATTN_CHUNK = 1_024
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig, chunk: int = ATTN_CHUNK,
+                  unroll: bool = False, mesh=None, rules=None):
+    """Query-chunked SDPA: O(chunk * S) live scores instead of O(S^2).
+
+    Baseline keeps full-K per chunk with masking (the causal/window FLOP
+    waste is visible in the roofline utilization ratio; the Pallas flash
+    kernel removes it on TPU).  ``unroll`` is the dry-run metrics mode.
+    """
+    B, S, H, hd = q.shape
+    if S % chunk != 0:
+        return _sdpa(q, k, v, causal_mask(S, cfg.sliding_window), cfg,
+                     mesh, rules)
+    n = S // chunk
+    w = cfg.sliding_window
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        rows = i * chunk + jnp.arange(chunk)[:, None]
+        cols = jnp.arange(S)[None, :]
+        mask = cols <= rows
+        if w > 0:
+            mask &= (rows - cols) < w
+        return 0, _sdpa(qc, k, v, mask, cfg, mesh, rules)
+
+    qs = q.reshape(B, n, chunk, H, hd).swapaxes(0, 1)
+    _, outs = jax.lax.scan(body, 0, (qs, jnp.arange(n)),
+                           unroll=n if unroll else 1)
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= (i - j) < window
+    return m
+
+
+def _sdpa_auto(q, k, v, cfg: ArchConfig, unroll: bool = False,
+               mesh=None, rules=None):
+    import repro.kernels as kernels
+    S = q.shape[1]
+    if kernels.use_kernels() and S == k.shape[1]:
+        from repro.kernels.flash_attention.ops import flash_attention
+        interp = None if kernels.get_mode() == "auto" else True
+        out = flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), causal=True,
+                              window=cfg.sliding_window, interpret=interp)
+        return out.swapaxes(1, 2)
+    if S >= ATTN_CHUNK_THRESHOLD:
+        return _sdpa_chunked(q, k, v, cfg, unroll=unroll, mesh=mesh,
+                             rules=rules)
+    return _sdpa(q, k, v, causal_mask(S, cfg.sliding_window), cfg, mesh,
+                 rules)
+
+
+def attention(params, x, positions, cfg: ArchConfig, unroll: bool = False,
+              mesh=None, rules=None):
+    """Training forward (no cache)."""
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _sdpa_auto(q, k, v, cfg, unroll, mesh, rules)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def attention_prefill(params, x, positions, cfg: ArchConfig, max_len: int,
+                      cache_dtype=jnp.bfloat16, unroll: bool = False,
+                      mesh=None, rules=None):
+    """Prefill from position 0: returns output and a fixed-size cache.
+
+    Full attention: cache length == max_len.  Sliding window: cache length ==
+    window, laid out as a ring (slot = position % window).
+    """
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _sdpa_auto(q, k, v, cfg, unroll, mesh, rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+    S, W = x.shape[1], cfg.sliding_window
+    kT, vT = k.swapaxes(1, 2), v.swapaxes(1, 2)         # (B, Hkv, S, hd)
+    if W > 0 and S > W:
+        # keep the last `window` tokens, ring-aligned: token t -> slot t % W
+        kT = jnp.roll(kT[:, :, -W:], S % W, axis=2)
+        vT = jnp.roll(vT[:, :, -W:], S % W, axis=2)
+    cache = init_kv_cache(cfg, x.shape[0], max_len, cache_dtype)
+    ck = jax.lax.dynamic_update_slice(cache.k, kT.astype(cache_dtype),
+                                      (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, vT.astype(cache_dtype),
+                                      (0, 0, 0, 0))
+    return out, KVCache(k=ck, v=cv)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, cfg.num_kv_heads, S, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def kv_cache_abstract(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> KVCache:
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, cfg.num_kv_heads, S, cfg.head_dim)
+    return KVCache(k=jax.ShapeDtypeStruct(shape, dtype),
+                   v=jax.ShapeDtypeStruct(shape, dtype))
+
+
+KV_LOGICAL = KVCache(k=("kv_batch", "kv_heads", "kv_seq", "head_dim"),
+                     v=("kv_batch", "kv_heads", "kv_seq", "head_dim"))
+
+
+# ---------------------------------------------------------------------------
+# paged decode cache (vLLM-style, XLA-native)
+#
+# The contiguous decode cache costs ~2 full-cache copies per step on top of
+# the read (the per-layer dynamic-update-slice chain double-buffers through
+# the scan).  Paged layout removes the write path entirely:
+#   big: (B, Hkv, NP, page, hd)  — read-only pages; never an output
+#   act: (B, Hkv, page, hd)      — the one page being written (donated)
+# The step writes one token into `act`; every `page` steps the serving
+# engine commits `act` into `big` with one amortized DUS.
+# ---------------------------------------------------------------------------
+
+class BigKV(NamedTuple):
+    k: jax.Array          # (B, Hkv, NP, page, hd)
+    v: jax.Array
+
+
+class ActKV(NamedTuple):
+    k: jax.Array          # (B, Hkv, page, hd)
+    v: jax.Array
+
+
+DEFAULT_PAGE = 512
+
+BIG_LOGICAL = BigKV(k=("kv_batch", "kv_heads", "kv_pages", None, "head_dim"),
+                    v=("kv_batch", "kv_heads", "kv_pages", None, "head_dim"))
+ACT_LOGICAL = ActKV(k=("kv_batch", "kv_heads", None, "head_dim"),
+                    v=("kv_batch", "kv_heads", None, "head_dim"))
+
+
+def paged_cache_shapes(cfg: ArchConfig, batch: int, max_len: int,
+                       page: int = DEFAULT_PAGE):
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    page = min(page, S)
+    npages = -(-S // page)
+    big = (batch, cfg.num_kv_heads, npages, page, cfg.head_dim)
+    act = (batch, cfg.num_kv_heads, page, cfg.head_dim)
+    return big, act
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     page: int = DEFAULT_PAGE, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    big, act = paged_cache_shapes(cfg, batch, max_len, page)
+    mk = (lambda s: jax.ShapeDtypeStruct(s, dtype)) if abstract else \
+        (lambda s: jnp.zeros(s, dtype))
+    return (BigKV(k=mk(big), v=mk(big)), ActKV(k=mk(act), v=mk(act)))
+
+
+def attention_decode_paged(params, x, pos, big: BigKV, act: ActKV,
+                           cfg: ArchConfig):
+    """One-step decode against a paged cache.  Returns (out, new act).
+
+    `big` is read-only (pages < pos//page are valid); the new token's k/v
+    land in `act` at slot pos % page.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,1,H,hd)
+    page = act.k.shape[2]
+    slot = pos % page
+    a_k = jax.lax.dynamic_update_slice(
+        act.k, k.swapaxes(1, 2).astype(act.k.dtype), (0, 0, slot, 0))
+    a_v = jax.lax.dynamic_update_slice(
+        act.v, v.swapaxes(1, 2).astype(act.v.dtype), (0, 0, slot, 0))
+
+    Bq, Hkv, NP, pg, hd = big.k.shape
+    page_start = (pos // page) * page
+
+    H = q.shape[2]
+    G = H // Hkv
+    qh = q.reshape(B, Hkv, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    # pages stay an explicit einsum dim: the big cache may be sharded on
+    # its page axis (seq-sharded decode) and a (NP, pg) -> S reshape would
+    # force GSPMD to re-layout the whole cache every step.
+    s_big = jnp.einsum("bngk,bnpsk->bngps", qh,
+                       big.k.astype(qh.dtype)).astype(jnp.float32) * scale
+    s_act = jnp.einsum("bngk,bnsk->bngs", qh,
+                       a_k.astype(qh.dtype)).astype(jnp.float32) * scale
+    pos_big = (jnp.arange(NP)[:, None] * pg + jnp.arange(pg)[None, :])
+    s_big = jnp.where(pos_big[None, None, None] < page_start, s_big,
+                      NEG_INF)
+    s_act = jnp.where(jnp.arange(pg)[None, None, None] <=
+                      (pos - page_start), s_act, NEG_INF)
+    # joint softmax across pages + active page (flash-decode combine)
+    m_big = jnp.max(s_big, axis=(-2, -1))
+    m = jnp.maximum(jnp.max(s_act, axis=-1), m_big)           # (B,N,G)
+    e_big = jnp.exp(s_big - m[..., None, None])
+    e_act = jnp.exp(s_act - m[..., None])
+    denom = (jnp.sum(e_big, axis=(-2, -1)) + jnp.sum(e_act, axis=-1))
+    num = (jnp.einsum("bngps,bnpsk->bngk", e_big.astype(q.dtype),
+                      big.v.astype(q.dtype)) +
+           jnp.einsum("bngs,bnsk->bngk", e_act.astype(q.dtype),
+                      a_v.astype(q.dtype)))
+    out = num / denom[..., None].astype(q.dtype)
+    out = out.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, ActKV(k=a_k, v=a_v)
+
+
+def commit_page(big: BigKV, act: ActKV, pos) -> BigKV:
+    """Write the filled active page into the big cache (amortized: called
+    once every `page` steps by the serving engine; donate both)."""
+    page = act.k.shape[2]
+    pidx = pos // page
+    return BigKV(
+        k=jax.lax.dynamic_update_slice(
+            big.k, act.k[:, :, None].astype(big.k.dtype), (0, 0, pidx, 0, 0)),
+        v=jax.lax.dynamic_update_slice(
+            big.v, act.v[:, :, None].astype(big.v.dtype), (0, 0, pidx, 0, 0)))
+
+
+def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
+    """One-step decode.  x: (B, 1, D); pos: scalar int32 (same for batch).
+
+    Full-attention: cache length == max_len, slot = pos.
+    Sliding-window: cache length == window (ring), slot = pos % window.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,1,H,hd)
+    S = cache.k.shape[2]
+    slot = pos % S if cfg.sliding_window > 0 else pos
+    k_new = jax.lax.dynamic_update_slice(
+        cache.k, k.swapaxes(1, 2).astype(cache.k.dtype), (0, 0, slot, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache.v, v.swapaxes(1, 2).astype(cache.v.dtype), (0, 0, slot, 0))
+
+    import repro.kernels as kernels
+    if kernels.use_kernels():
+        from repro.kernels.decode_attention.ops import decode_attention
+        interp = None if kernels.get_mode() == "auto" else True
+        ring = cfg.sliding_window > 0
+        out = decode_attention(q[:, 0], k_new, v_new, pos, ring=ring,
+                               interpret=interp)[:, None]
+    else:
+        idx = jnp.arange(S)
+        if cfg.sliding_window > 0:
+            valid = (idx <= pos % S) | (pos >= S)  # ring not yet full -> mask
+        else:
+            valid = idx <= pos
+        out = decode_sdpa(q, k_new, v_new, valid, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, KVCache(k=k_new, v=v_new)
+
+
+def decode_sdpa(q, k_cache, v_cache, valid, cfg: ArchConfig):
+    """q: (B,1,H,hd); caches: (B,Hkv,S,hd); valid: (S,) bool."""
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[1]
+    G = H // Hkv
+    qh = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bngk,bnsk->bngs", qh,
+                        k_cache.astype(qh.dtype)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngs,bnsk->bngk", probs, v_cache.astype(q.dtype))
+    return out.reshape(B, 1, H, hd)

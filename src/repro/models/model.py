@@ -1,0 +1,460 @@
+"""Unified LM assembly for all assigned architecture families.
+
+Every architecture is a *period* of block types repeated ``num_layers /
+period`` times (dense: period 1; jamba: period 8; xlstm: period 4).  The
+repeat dimension is ``lax.scan``-ned with stacked params, which keeps the HLO
+size independent of depth (critical for the 94-layer dry-runs).
+
+Execution modes:
+  * ``forward``      — training forward, logits over the full sequence
+  * ``prefill``      — builds the decode cache, returns last-position logits
+  * ``decode_step``  — one token against the cache (``serve_step`` lowers this)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingRules, DEFAULT_RULES, constrain
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod, xlstm as xl
+from repro.models.common import (
+    PSpec, stacked, init_params, abstract_params, logical_tree, count_params,
+)
+
+Mixer = str   # attn | mamba | mlstm | slstm
+Ffn = str     # mlp | moe | none
+
+
+def block_pattern(cfg: ArchConfig) -> list[tuple[Mixer, Ffn]]:
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        p = cfg.xlstm.slstm_every
+        return [("slstm", "none") if cfg.is_slstm_layer(i) else
+                ("mlstm", "none") for i in range(p)]
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        if cfg.moe is not None:
+            import math
+            period = math.lcm(cfg.attn_every, cfg.moe.every)
+        return [("attn" if cfg.is_attention_layer(i) else "mamba",
+                 "moe" if cfg.is_moe_layer(i) else "mlp")
+                for i in range(period)]
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    return [("attn", ffn)]
+
+
+def _block_specs(cfg: ArchConfig, typ: tuple[Mixer, Ffn]) -> dict:
+    mixer, ffn = typ
+    d = cfg.d_model
+    out: dict[str, Any] = {"norm1": PSpec((d,), ("embed",), init="ones")}
+    if mixer == "attn":
+        out["attn"] = layers.attn_specs(cfg)
+    elif mixer == "mamba":
+        out["mamba"] = ssm_mod.ssm_specs(cfg)
+    elif mixer == "mlstm":
+        out["mlstm"] = xl.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        out["slstm"] = xl.slstm_specs(cfg)
+    if ffn != "none":
+        out["norm2"] = PSpec((d,), ("embed",), init="ones")
+        if ffn == "mlp":
+            out["mlp"] = layers.mlp_specs(d, cfg.d_ff, cfg.mlp_gated)
+        else:
+            out["moe"] = moe_mod.moe_specs(cfg)
+    return out
+
+
+@dataclass
+class LM:
+    cfg: ArchConfig
+    mesh: Mesh | None = None
+    rules: ShardingRules = field(default_factory=lambda: DEFAULT_RULES)
+    moe_strategy: str = "auto"
+    mlstm_mode: str = "auto"          # auto | parallel | chunkwise
+    cache_dtype: Any = jnp.bfloat16
+    # One-hot matmul embedding lookup: with the table sharded vocab->model,
+    # a gather forces GSPMD to rematerialize the full table per step (the
+    # "involuntary full rematerialization" SPMD warning); the one-hot
+    # contraction keeps the table sharded and reduces the partials with a
+    # (B, S, D)-sized all-reduce instead.
+    embed_onehot: bool = False
+    # Metrics-isolation mode: attention mixers become identity.  The
+    # dry-run's kernel-substituted roofline compiles the model twice
+    # (normal / identity) — the difference isolates the attention region's
+    # HLO cost exactly, which is then replaced by the Pallas flash kernel's
+    # analytic HBM traffic (the XLA-visible jnp path materializes f32
+    # score chains that the kernel keeps in VMEM).
+    attn_identity: bool = False
+    # Dry-run metrics mode: fully unroll the layer scan and query-chunk scans
+    # so cost_analysis() counts every iteration (XLA visits a while body
+    # once); see launch/dryrun.py's two-point depth extrapolation.
+    scan_unroll: bool = False
+
+    # ------------------------------------------------------------------ specs
+    @property
+    def pattern(self) -> list[tuple[Mixer, Ffn]]:
+        return block_pattern(self.cfg)
+
+    @property
+    def repeats(self) -> int:
+        period = len(self.pattern)
+        assert self.cfg.num_layers % period == 0, (self.cfg.num_layers, period)
+        return self.cfg.num_layers // period
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {
+            "embed": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="scaled", scale=0.02),
+            "final_norm": PSpec((cfg.d_model,), ("embed",), init="ones"),
+            "blocks": {f"b{p}": stacked(self.repeats, _block_specs(cfg, t))
+                       for p, t in enumerate(self.pattern)},
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = PSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), init="scaled",
+                                     scale=0.02)
+        if cfg.frontend.kind == "vision_patches":
+            specs["patch_proj"] = PSpec(
+                (cfg.frontend.embed_dim, cfg.d_model), (None, "embed"))
+        return specs
+
+    def init(self, key, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return init_params(key, self.param_specs(), dtype)
+
+    def abstract(self, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return abstract_params(self.param_specs(), dtype)
+
+    def logical(self):
+        return logical_tree(self.param_specs())
+
+    def n_params(self, active_only: bool = False) -> int:
+        if not active_only or self.cfg.moe is None:
+            return count_params(self.param_specs())
+        from repro.configs.base import override
+        cfg_a = override(self.cfg,
+                         moe=override(self.cfg.moe,
+                                      num_experts=self.cfg.moe.top_k))
+        return count_params(LM(cfg_a).param_specs())
+
+    # ------------------------------------------------------------ embeddings
+    def _embed_in(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.dtype)
+        if self.embed_onehot:
+            oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=adt)
+            x = oh @ params["embed"].astype(adt)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+        if cfg.frontend.kind == "vision_patches" and patch_embeds is not None:
+            # decode steps after prefill are text-only: patches already cached
+            p = (patch_embeds.astype(adt) @
+                 params["patch_proj"].astype(adt))
+            x = jnp.concatenate([p, x], axis=1)
+        return x
+
+    def _head(self, params, x):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"])
+        return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+    # --------------------------------------------------------------- blocks
+    def _mlstm_train_mode(self, L: int) -> str:
+        if self.mlstm_mode != "auto":
+            return self.mlstm_mode
+        c = self.cfg.xlstm.chunk_size
+        return "chunkwise" if (L % c == 0 and L > c) else "parallel"
+
+    def _apply_block(self, typ, p, x, positions, mode, pos, cache,
+                     big=None):
+        """One block.  Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        mixer, ffn = typ
+        h = layers.rmsnorm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        nc = cache
+        if mixer == "attn" and self.attn_identity:
+            a = h                       # metrics isolation; see attn_identity
+        elif mixer == "attn" and big is not None:
+            assert mode == "decode"
+            a, nc = layers.attention_decode_paged(p["attn"], h, pos, big,
+                                                  cache, cfg)
+        elif mixer == "attn":
+            if mode == "train":
+                a = layers.attention(p["attn"], h, positions, cfg,
+                                     self.scan_unroll, self.mesh, self.rules)
+            elif mode == "prefill":
+                a, nc = layers.attention_prefill(
+                    p["attn"], h, positions, cfg, self._max_len,
+                    self.cache_dtype, self.scan_unroll, self.mesh,
+                    self.rules)
+            else:
+                a, nc = layers.attention_decode(p["attn"], h, pos, cache, cfg)
+        elif mixer == "mamba":
+            if mode == "decode":
+                a, nc = ssm_mod.mamba_decode(p["mamba"], h, cache, cfg)
+            else:
+                a, st = ssm_mod.mamba_forward(p["mamba"], h, cfg, mode="scan")
+                nc = st if mode == "prefill" else cache
+        elif mixer == "mlstm":
+            if mode == "decode":
+                a, nc = xl.mlstm_block(p["mlstm"], h, cfg, mode="recurrent",
+                                       state=cache)
+            else:
+                m = self._mlstm_train_mode(h.shape[1])
+                a, st = xl.mlstm_block(p["mlstm"], h, cfg, mode=m)
+                nc = st if mode == "prefill" else cache
+        elif mixer == "slstm":
+            a, st = xl.slstm_block(p["slstm"], h, cfg,
+                                   state=cache if mode == "decode" else None)
+            nc = st if mode in ("prefill", "decode") else cache
+        else:
+            raise ValueError(mixer)
+        x = x + a
+        if ffn != "none":
+            h2 = layers.rmsnorm(x, p["norm2"].astype(x.dtype), cfg.norm_eps)
+            if ffn == "mlp":
+                f = layers.mlp({k: v.astype(x.dtype)
+                                for k, v in p["mlp"].items()}, h2)
+            else:
+                f, aux = moe_mod.moe_apply(p["moe"], h2, cfg, self.mesh,
+                                           self.moe_strategy)
+            x = x + f
+        if self.mesh is not None:
+            x = constrain(x, self.mesh, ("batch", "act_seq", "act_embed"),
+                          self.rules)
+        return x, nc, aux
+
+    def _run_blocks(self, params, x, positions, mode, pos, caches,
+                    remat: bool = False):
+        """Scan over repeats; python-unrolled period inside the body."""
+        pattern = self.pattern
+
+        def body(carry, xs):
+            x, aux = carry
+            params_r, cache_r = xs
+            new_caches = {}
+            for i, typ in enumerate(pattern):
+                key = f"b{i}"
+                c = None if cache_r is None else cache_r[key]
+                x, nc, a = self._apply_block(typ, params_r[key], x,
+                                             positions, mode, pos, c)
+                new_caches[key] = nc
+                aux = aux + a
+            if mode == "train":
+                new_caches = 0.0  # nothing to collect
+            return (x, aux), new_caches
+
+        if remat:
+            body = jax.checkpoint(body)
+        unroll = self.repeats if self.scan_unroll else 1
+        # When there is no input cache (train/prefill) we scan over params
+        # only; prefill *produces* caches as the scan outputs.
+        if caches is None:
+            (x, aux), ys = jax.lax.scan(
+                lambda c, p: body(c, (p, None)),
+                (x, jnp.zeros((), jnp.float32)), params["blocks"],
+                unroll=unroll)
+        else:
+            (x, aux), ys = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["blocks"], caches), unroll=unroll)
+        return x, aux, ys
+
+    # ---------------------------------------------------------------- modes
+    def forward(self, params, tokens, patch_embeds=None, remat: bool = False):
+        """Training forward: logits (B, S_total, V) f32, aux loss scalar."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, aux, _ = self._run_blocks(params, x, positions, "train", None,
+                                     None, remat)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return self._head(params, x), aux
+
+    def hidden(self, params, tokens, patch_embeds=None, remat: bool = False):
+        """Final hidden states (pre-head); used by the chunked-loss path."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, aux, _ = self._run_blocks(params, x, positions, "train", None,
+                                     None, remat)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return x, aux
+
+    def prefill(self, params, tokens, max_len: int, patch_embeds=None):
+        """Populate the decode cache.  Returns (last-pos logits, caches)."""
+        cfg = self.cfg
+        self._max_len = max_len
+        x = self._embed_in(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, aux, caches = self._run_blocks(params, x, positions, "prefill",
+                                          None, None)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        logits = self._head(params, x[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step.  tokens: (B, 1) int32; pos: scalar int32 —
+        position of this token.  Returns (logits (B,1,V), new caches)."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens)
+        x, aux, caches = self._run_blocks(params, x, None, "decode", pos,
+                                          caches)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return self._head(params, x), caches
+
+    def decode_step_paged(self, params, bigs, acts, tokens, pos):
+        """One decode step against a paged cache (see layers: BigKV/ActKV).
+
+        ``bigs`` is read-only (per-block stacked BigKV; None for non-attn
+        mixers); ``acts`` carries the active page + recurrent states and is
+        the only cache state the step writes — donate it.
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, tokens)
+        pattern = self.pattern
+
+        # `bigs` is closed over and dynamic-indexed per layer rather than
+        # threaded as scan xs: xs get copied into while-loop state by
+        # buffer assignment (~2x the read-only cache in temps); an
+        # invariant capture is read in place.
+        def body(carry, xs):
+            x, aux, r = carry
+            params_r, act_r = xs
+            big_r = jax.tree.map(
+                lambda b: jax.lax.dynamic_index_in_dim(b, r, 0,
+                                                       keepdims=False),
+                bigs)
+            new_acts = {}
+            for i, typ in enumerate(pattern):
+                key = f"b{i}"
+                big = None if big_r is None else big_r.get(key)
+                x, nc, a = self._apply_block(typ, params_r[key], x, None,
+                                             "decode", pos, act_r[key], big)
+                new_acts[key] = nc
+                aux = aux + a
+            return (x, aux, r + 1), new_acts
+
+        unroll = self.repeats if self.scan_unroll else 1
+        (x, aux, _), acts_new = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            (params["blocks"], acts), unroll=unroll)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return self._head(params, x), acts_new
+
+    # ---------------------------------------------------------------- cache
+    def init_paged_cache(self, batch: int, max_len: int,
+                         page: int = layers.DEFAULT_PAGE,
+                         abstract: bool = False):
+        """(bigs, acts) pytrees for decode_step_paged.  Non-attention
+        mixers keep their (small, per-step) state on the act side."""
+        cfg = self.cfg
+        bigs, acts = {}, {}
+        for i, (mixer, _) in enumerate(self.pattern):
+            key = f"b{i}"
+            if mixer == "attn":
+                big, act = layers.init_paged_cache(
+                    cfg, batch, max_len, page, self.cache_dtype, abstract)
+                bigs[key] = _stack_tree(big, self.repeats, abstract)
+                acts[key] = _stack_tree(act, self.repeats, abstract)
+                continue
+            bigs[key] = None
+            if mixer == "mamba":
+                one = (ssm_mod.ssm_state_abstract(cfg, batch,
+                                                  self.cache_dtype)
+                       if abstract else
+                       ssm_mod.init_ssm_state(cfg, batch, self.cache_dtype))
+            elif mixer == "mlstm":
+                one = (xl.mlstm_state_abstract(cfg, batch, self.cache_dtype)
+                       if abstract else
+                       xl.init_mlstm_state(cfg, batch, self.cache_dtype))
+            else:
+                one = (xl.slstm_state_abstract(cfg, batch) if abstract
+                       else xl.init_slstm_state(cfg, batch))
+            acts[key] = _stack_tree(one, self.repeats, abstract)
+        return bigs, acts
+
+    def paged_cache_logical(self):
+        bigs, acts = {}, {}
+        base = {"mamba": ssm_mod.SSM_LOGICAL, "mlstm": xl.MLSTM_LOGICAL,
+                "slstm": xl.SLSTM_LOGICAL}
+
+        def add_layers(tree):
+            return jax.tree.map(
+                lambda l: ("layers",) + tuple(l), tree,
+                is_leaf=lambda q: isinstance(q, tuple) and
+                all(isinstance(e, str) or e is None for e in q))
+
+        for i, (mixer, _) in enumerate(self.pattern):
+            key = f"b{i}"
+            if mixer == "attn":
+                bigs[key] = add_layers(layers.BIG_LOGICAL)
+                acts[key] = add_layers(layers.ACT_LOGICAL)
+            else:
+                bigs[key] = None
+                acts[key] = add_layers(base[mixer])
+        return bigs, acts
+
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        """Decode-cache pytree matching the scanned-block structure."""
+        cfg = self.cfg
+        out = {}
+        for i, (mixer, _) in enumerate(self.pattern):
+            if mixer == "attn":
+                one = (layers.kv_cache_abstract(cfg, batch, max_len,
+                                                self.cache_dtype) if abstract
+                       else layers.init_kv_cache(cfg, batch, max_len,
+                                                 self.cache_dtype))
+            elif mixer == "mamba":
+                one = (ssm_mod.ssm_state_abstract(cfg, batch, self.cache_dtype)
+                       if abstract else
+                       ssm_mod.init_ssm_state(cfg, batch, self.cache_dtype))
+            elif mixer == "mlstm":
+                one = (xl.mlstm_state_abstract(cfg, batch, self.cache_dtype)
+                       if abstract else
+                       xl.init_mlstm_state(cfg, batch, self.cache_dtype))
+            else:
+                one = (xl.slstm_state_abstract(cfg, batch) if abstract
+                       else xl.init_slstm_state(cfg, batch))
+            out[f"b{i}"] = _stack_tree(one, self.repeats, abstract)
+        return out
+
+    def cache_logical(self):
+        out = {}
+        for i, (mixer, _) in enumerate(self.pattern):
+            base = {"attn": layers.KV_LOGICAL, "mamba": ssm_mod.SSM_LOGICAL,
+                    "mlstm": xl.MLSTM_LOGICAL, "slstm": xl.SLSTM_LOGICAL}[mixer]
+            out[f"b{i}"] = jax.tree.map(
+                lambda l: ("layers",) + tuple(l), base,
+                is_leaf=lambda q: isinstance(q, tuple) and
+                all(isinstance(e, str) or e is None for e in q))
+        return out
+
+
+def _stack_tree(tree, n: int, abstract: bool):
+    if abstract:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), tree)
+
+
+def build_model(cfg: ArchConfig, mesh: Mesh | None = None,
+                rules: ShardingRules = DEFAULT_RULES, **kw) -> LM:
+    return LM(cfg, mesh=mesh, rules=rules, **kw)

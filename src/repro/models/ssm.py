@@ -1,0 +1,165 @@
+"""Mamba-style selective SSM block (jamba's non-attention layers).
+
+Reference path: ``lax.scan`` over time (exact).  A chunked associative-scan
+variant (``ssm_scan_assoc``) is the parallel form used for long prefill and is
+what the Pallas kernel (`repro.kernels.ssm_scan`) implements on TPU.
+
+State for decode: conv ring (B, d_in, d_conv-1) + ssm state (B, d_in, N) f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array     # (B, d_in, d_conv-1) last inputs for the causal conv
+    ssm: jax.Array      # (B, d_in, N) f32 recurrent state
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def ssm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, N, K = _dims(cfg)
+    return {
+        "in_proj": PSpec((d, 2 * d_in), ("embed", "ssm_inner")),
+        "conv_w": PSpec((K, d_in), ("conv_width", "ssm_inner"),
+                        init="scaled", scale=0.1),
+        "conv_b": PSpec((d_in,), ("ssm_inner",), init="zeros"),
+        "x_proj": PSpec((d_in, dt_rank + 2 * N), ("ssm_inner", None)),
+        "dt_proj": PSpec((dt_rank, d_in), (None, "ssm_inner")),
+        "dt_bias": PSpec((d_in,), ("ssm_inner",), init="zeros"),
+        "A_log": PSpec((d_in, N), ("ssm_inner", "ssm_state"), init="zeros"),
+        "D": PSpec((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": PSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _conv1d_causal(x, w, b, state=None):
+    """x: (B, L, d_in); w: (K, d_in) depthwise.  Optional carry-in state
+    (B, d_in, K-1) of previous inputs; returns (y, new_state)."""
+    B, L, D = x.shape
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, D), x.dtype)
+    else:
+        pad = state.swapaxes(1, 2).astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, L+K-1, D)
+    y = sum(xp[:, i:i + L] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):].swapaxes(1, 2)             # (B, D, K-1)
+    return y, new_state
+
+
+def _ssm_inputs(params, x, cfg: ArchConfig):
+    """Shared front half: projections, conv, dt/B/C computation."""
+    d_in, dt_rank, N, K = _dims(cfg)
+    dt_bc = x @ params["x_proj"].astype(x.dtype)            # (B, L, R+2N)
+    dt, Bm, Cm = jnp.split(dt_bc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(x.dtype)
+                         + params["dt_bias"].astype(x.dtype))   # (B, L, d_in)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (d_in, N)
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), \
+        Cm.astype(jnp.float32), A
+
+
+def _selective_scan_ref(u, dt, Bm, Cm, A, D, init_state=None):
+    """u: (B, L, d_in) f32; dt: (B, L, d_in); Bm/Cm: (B, L, N); A: (d_in, N).
+
+    Exact sequential scan (the oracle).  Returns y (B, L, d_in) and the final
+    state (B, d_in, N).
+    """
+    B, L, d_in = u.shape
+    N = A.shape[1]
+    s0 = jnp.zeros((B, d_in, N), jnp.float32) if init_state is None \
+        else init_state
+
+    def step(s, t):
+        # discretize inside the body: per-step temps are (B, d_in, N) only
+        u_t, dt_t, B_t, C_t = t
+        dA_t = jnp.exp(dt_t[..., None] * A)                 # (B, d_in, N)
+        dBu_t = dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+        s = dA_t * s + dBu_t
+        y = jnp.einsum("bdn,bn->bd", s, C_t)
+        return s, y
+
+    xs = (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1) + u * D                           # (B, L, d_in)
+    return y, s_fin
+
+
+def ssm_scan_assoc(u, dt, Bm, Cm, A, D, init_state=None):
+    """Parallel form via associative scan over (a, b): s_t = a_t s_{t-1} + b_t."""
+    dA = jnp.exp(dt[..., None] * A)                         # (B, L, d, N)
+    dBu = dt[..., None] * Bm[:, :, None, :] * u[..., None]
+    if init_state is not None:
+        dBu = dBu.at[:, 0].add(dA[:, 0] * init_state)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a, b = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+    y = jnp.einsum("bldn,bln->bld", b, Cm) + u * D
+    return y, b[:, -1]
+
+
+def mamba_forward(params, x, cfg: ArchConfig, mode: str = "scan",
+                  state: SSMState | None = None):
+    """x: (B, L, D) -> (y, final SSMState).  mode: scan | assoc."""
+    d_in, dt_rank, N, K = _dims(cfg)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)                        # (B, L, d_in) x2
+    u, conv_state = _conv1d_causal(u, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype),
+                                   None if state is None else state.conv)
+    u = jax.nn.silu(u)
+    dt, Bm, Cm, A = _ssm_inputs(params, u, cfg)
+    import repro.kernels as kernels
+    if kernels.use_kernels() and x.shape[1] > 1:
+        from repro.kernels.ssm_scan.ops import selective_scan
+        interp = None if kernels.get_mode() == "auto" else True
+        scan = lambda *a: selective_scan(*a, interpret=interp)
+    else:
+        scan = _selective_scan_ref if mode == "scan" else ssm_scan_assoc
+    y, s_fin = scan(u.astype(jnp.float32), dt, Bm, Cm, A,
+                    params["D"].astype(jnp.float32),
+                    None if state is None else state.ssm)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, SSMState(conv=conv_state, ssm=s_fin)
+
+
+def mamba_decode(params, x, state: SSMState, cfg: ArchConfig):
+    """One-token decode: x (B, 1, D) with carried state."""
+    return mamba_forward(params, x, cfg, mode="scan", state=state)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_in, _, N, K = _dims(cfg)
+    return SSMState(conv=jnp.zeros((batch, d_in, K - 1), dtype),
+                    ssm=jnp.zeros((batch, d_in, N), jnp.float32))
+
+
+def ssm_state_abstract(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d_in, _, N, K = _dims(cfg)
+    return SSMState(conv=jax.ShapeDtypeStruct((batch, d_in, K - 1), dtype),
+                    ssm=jax.ShapeDtypeStruct((batch, d_in, N), jnp.float32))
+
+
+SSM_LOGICAL = SSMState(conv=("kv_batch", "ssm_inner", "conv_width"),
+                       ssm=("kv_batch", "ssm_inner", "ssm_state"))

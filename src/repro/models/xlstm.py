@@ -1,0 +1,351 @@
+"""xLSTM blocks: mLSTM (matrix-memory, parallelizable) and sLSTM (scalar-
+memory, strictly recurrent) per arXiv:2405.04517.
+
+mLSTM has three numerically-equivalent forms (cross-validated in tests):
+  * ``mlstm_recurrent`` — step recurrence (decode path; O(1) state/token)
+  * ``mlstm_parallel``  — quadratic attention-like form (training, short seq)
+  * ``mlstm_chunkwise`` — chunked: quadratic intra-chunk + recurrence across
+    chunks (long prefill; what the Pallas kernel `mlstm_chunk` implements)
+
+All use log-space gate stabilization (running max ``m``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec
+
+NEG_INF = -1e30
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array    # (B, H, dk, dv) f32 matrix memory
+    n: jax.Array    # (B, H, dk) f32 normalizer
+    m: jax.Array    # (B, H) f32 stabilizer
+    conv: jax.Array  # (B, Lc-1, d_in) causal-conv ring
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array    # (B, H, dh)
+    c: jax.Array    # (B, H, dh) f32
+    n: jax.Array    # (B, H, dh) f32
+    m: jax.Array    # (B, H, dh) f32
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = x.mlstm_expand * d
+    H = cfg.num_heads
+    return {
+        "up_proj": PSpec((d, 2 * d_in), ("embed", "ssm_inner")),
+        "conv_w": PSpec((x.conv_width, d_in), ("conv_width", "ssm_inner"),
+                        init="scaled", scale=0.1),
+        "conv_b": PSpec((d_in,), ("ssm_inner",), init="zeros"),
+        "wq": PSpec((d_in, d_in), ("ssm_inner", "ssm_inner")),
+        "wk": PSpec((d_in, d_in), ("ssm_inner", "ssm_inner")),
+        "wv": PSpec((d_in, d_in), ("ssm_inner", "ssm_inner")),
+        "w_if": PSpec((d_in, 2 * H), ("ssm_inner", None),
+                      init="scaled", scale=0.02),
+        "b_if": PSpec((2 * H,), (None,), init="zeros"),
+        "down_proj": PSpec((d_in, d), ("ssm_inner", "embed")),
+        "skip_scale": PSpec((d_in,), ("ssm_inner",), init="ones"),
+    }
+
+
+def slstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    dff = int(4 * d * 2 / 3)
+    return {
+        "w_gates": PSpec((d, 4 * d), ("embed", "ssm_inner")),   # i,f,z,o
+        "r_gates": PSpec((4, H, dh, dh), (None, "act_heads", None, None),
+                         init="scaled", scale=0.02),
+        "b_gates": PSpec((4 * d,), ("ssm_inner",), init="zeros"),
+        "ffn": {
+            "w_gate": PSpec((d, dff), ("embed", "ffn")),
+            "w_up": PSpec((d, dff), ("embed", "ffn")),
+            "w_down": PSpec((dff, d), ("ffn", "embed")),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core math (all inputs per-head, f32)
+#   q,k,v: (B, H, L, dh); li, lf: (B, H, L) log gates
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(q, k, v, li, lf):
+    """Quadratic stabilized form.  Returns h (B,H,L,dv) and final state."""
+    B, H, L, dk = q.shape
+    F = jnp.cumsum(lf, axis=-1)                              # (B,H,L)
+    # d_ts = F_t - F_s + li_s  for s <= t
+    dmat = F[..., :, None] - F[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(mask, dmat, NEG_INF)
+    m = jnp.max(dmat, axis=-1)                               # (B,H,L)
+    D = jnp.exp(dmat - m[..., None])                         # (B,H,L,L)
+    scores = jnp.einsum("bhld,bhsd->bhls", q, k) / jnp.sqrt(dk)
+    C = scores * D
+    n = jnp.maximum(jnp.abs(jnp.sum(C, axis=-1)), jnp.exp(-m))  # (B,H,L)
+    h = jnp.einsum("bhls,bhsd->bhld", C, v) / n[..., None]
+    # final recurrent state (for chunk handoff / tests)
+    g = F[..., -1:]                                          # (B,H,1) total
+    m_fin = jnp.maximum(jnp.max(g[..., 0:1] - F + li, axis=-1), NEG_INF)
+    w = jnp.exp(g - F + li - m_fin[..., None])               # (B,H,L)
+    C_fin = jnp.einsum("bhs,bhsd,bhse->bhde", w, k / jnp.sqrt(dk), v)
+    n_fin = jnp.einsum("bhs,bhsd->bhd", w, k / jnp.sqrt(dk))
+    return h, (C_fin, n_fin, m_fin)
+
+
+def mlstm_step(C, n, m, q, k, v, li, lf):
+    """One recurrence step.  q,k,v: (B,H,dh); li,lf: (B,H)."""
+    dk = q.shape[-1]
+    m_new = jnp.maximum(lf + m, li)                          # (B,H)
+    f_s = jnp.exp(lf + m - m_new)[..., None]
+    i_s = jnp.exp(li - m_new)[..., None]
+    k = k / jnp.sqrt(dk)
+    C_new = f_s[..., None] * C + i_s[..., None] * k[..., :, None] * v[..., None, :]
+    n_new = f_s * n + i_s * k
+    num = jnp.einsum("bhde,bhd->bhe", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    return C_new, n_new, m_new, num / den[..., None]
+
+
+def mlstm_recurrent(q, k, v, li, lf, state=None):
+    """Sequential scan over L (oracle + decode).  Shapes as parallel form."""
+    B, H, L, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)   # "no history"
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, t):
+        C, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = t
+        C, n, m, h = mlstm_step(C, n, m, q_t, k_t, v_t, li_t, lf_t)
+        return (C, n, m), h
+
+    xs = tuple(a.swapaxes(0, 2).swapaxes(1, 2) if a.ndim == 4 else
+               a.swapaxes(0, 2).swapaxes(1, 2)
+               for a in (q, k, v))
+    xs = xs + tuple(a.swapaxes(1, 2).swapaxes(0, 1) for a in (li, lf))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, chunk: int, state=None):
+    """Chunked form: scan of parallel-intra-chunk + recurrent handoff."""
+    B, H, L, dk = q.shape
+    dv = v.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)   # "no history"
+    else:
+        C0, n0, m0 = state
+
+    def chunk_fn(carry, t):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, lic, lfc = t                            # (B,H,c,*)
+        g = jnp.cumsum(lfc, axis=-1)                         # (B,H,c)
+        # intra-chunk decay matrix
+        dmat = g[..., :, None] - g[..., None, :] + lic[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask, dmat, NEG_INF)
+        m_intra = jnp.max(dmat, axis=-1)                     # (B,H,c)
+        m_inter = g + m_p[..., None]                         # (B,H,c)
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(dmat - m_t[..., None])
+        scores = jnp.einsum("bhld,bhsd->bhls", qc, kc) / jnp.sqrt(dk)
+        intra_num = jnp.einsum("bhls,bhse->bhle", scores * D, vc)
+        intra_den = jnp.sum(scores * D, axis=-1)
+        w_inter = jnp.exp(m_inter - m_t)[..., None]          # (B,H,c,1)
+        inter_num = jnp.einsum("bhld,bhde->bhle", qc, C_p) * w_inter
+        inter_den = jnp.einsum("bhld,bhd->bhl", qc, n_p) * w_inter[..., 0]
+        num = intra_num + inter_num
+        den = jnp.maximum(jnp.abs(intra_den + inter_den), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # chunk-final state
+        gT = g[..., -1:]                                     # (B,H,1)
+        m_new = jnp.maximum(gT[..., 0] + m_p,
+                            jnp.max(gT - g + lic, axis=-1))
+        wk = jnp.exp(gT - g + lic - m_new[..., None])        # (B,H,c)
+        ks = kc / jnp.sqrt(dk)
+        C_new = jnp.exp(gT[..., 0] + m_p - m_new)[..., None, None] * C_p + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", wk, ks, vc)
+        n_new = jnp.exp(gT[..., 0] + m_p - m_new)[..., None] * n_p + \
+            jnp.einsum("bhs,bhsd->bhd", wk, ks)
+        return (C_new, n_new, m_new), h
+
+    def to_chunks(a):
+        if a.ndim == 4:
+            return a.reshape(B, H, nc, chunk, a.shape[-1]).transpose(2, 0, 1, 3, 4)
+        return a.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    xs = tuple(to_chunks(a) for a in (q, k, v, li, lf))
+    (C, n, m), hs = jax.lax.scan(chunk_fn, (C0, n0, m0), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, L, dv)
+    return h, (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkv(params, x, cfg: ArchConfig, conv_state=None):
+    from repro.models.ssm import _conv1d_causal  # shared depthwise conv
+    xlcfg = cfg.xlstm
+    H = cfg.num_heads
+    xz = x @ params["up_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)                        # (B,L,d_in)
+    xc, conv_new = _conv1d_causal(
+        xi, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        conv_state)
+    xc = jax.nn.silu(xc)
+    B, L, d_in = xi.shape
+    dh = d_in // H
+
+    def heads(t):
+        return t.reshape(B, L, H, dh).transpose(0, 2, 1, 3)
+    q = heads(xc @ params["wq"].astype(x.dtype)).astype(jnp.float32)
+    k = heads(xc @ params["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = heads(xi @ params["wv"].astype(x.dtype)).astype(jnp.float32)
+    gates = (xc @ params["w_if"].astype(x.dtype) +
+             params["b_if"].astype(x.dtype)).astype(jnp.float32)
+    li, lf_raw = jnp.split(gates, 2, axis=-1)                # (B,L,H)
+    li = li.transpose(0, 2, 1)
+    lf = jax.nn.log_sigmoid(lf_raw).transpose(0, 2, 1)       # log f in (-inf,0)
+    return q, k, v, li, lf, z, xi, conv_new
+
+
+def mlstm_block(params, x, cfg: ArchConfig, mode: str = "parallel",
+                state: MLSTMState | None = None):
+    """x: (B, L, D) -> (y, MLSTMState)."""
+    B, L, D = x.shape
+    H = cfg.num_heads
+    conv_state = None if state is None else state.conv
+    q, k, v, li, lf, z, xi, conv_new = _mlstm_qkv(params, x, cfg, conv_state)
+    inner = None if state is None else (state.C, state.n, state.m)
+    import repro.kernels as kernels
+    if mode == "parallel":
+        assert state is None
+        h, fin = mlstm_parallel(q, k, v, li, lf)
+    elif mode == "chunkwise":
+        assert state is None
+        if kernels.use_kernels():
+            from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+            interp = None if kernels.get_mode() == "auto" else True
+            h, fin = mlstm_chunk(q, k, v, li, lf,
+                                 chunk=cfg.xlstm.chunk_size,
+                                 interpret=interp)
+        else:
+            h, fin = mlstm_chunkwise(q, k, v, li, lf, cfg.xlstm.chunk_size)
+    else:
+        h, fin = mlstm_recurrent(q, k, v, li, lf, inner)
+    d_in = xi.shape[-1]
+    h = h.transpose(0, 2, 1, 3).reshape(B, L, d_in).astype(x.dtype)
+    h = h + params["skip_scale"].astype(x.dtype) * xi        # learnable skip
+    y = (h * jax.nn.silu(z)) @ params["down_proj"].astype(x.dtype)
+    return y, MLSTMState(C=fin[0], n=fin[1], m=fin[2], conv=conv_new)
+
+
+def slstm_block(params, x, cfg: ArchConfig, state: SLSTMState | None = None):
+    """Strictly recurrent sLSTM with exponential gating + post FFN."""
+    B, L, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    gates_x = x @ params["w_gates"].astype(x.dtype) + \
+        params["b_gates"].astype(x.dtype)                    # (B,L,4D)
+    gates_x = gates_x.reshape(B, L, 4, H, dh).astype(jnp.float32)
+    R = params["r_gates"].astype(jnp.float32)                # (4,H,dh,dh)
+
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = SLSTMState(h=z, c=z, n=z, m=z)
+
+    def step(carry, gx):
+        h, c, n, m = carry
+        rec = jnp.einsum("ghde,bhd->gbhe", R, h)             # (4,B,H,dh)
+        gi, gf, gz, go = (gx[:, i] + rec[i] for i in range(4))
+        m_new = jnp.maximum(gf + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(gf + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(gz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        return SLSTMState(h_new, c_new, n_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, gates_x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, L, D).astype(x.dtype)
+    f = params["ffn"]
+    y = y + (jax.nn.gelu(y @ f["w_gate"].astype(x.dtype)) *
+             (y @ f["w_up"].astype(x.dtype))) @ f["w_down"].astype(x.dtype)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# state factories
+# ---------------------------------------------------------------------------
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d_in = cfg.xlstm.mlstm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = d_in // H
+    K = cfg.xlstm.conv_width
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), NEG_INF, jnp.float32),
+        conv=jnp.zeros((batch, d_in, K - 1), dtype))
+
+
+def mlstm_state_abstract(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d_in = cfg.xlstm.mlstm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = d_in // H
+    K = cfg.xlstm.conv_width
+    sd = jax.ShapeDtypeStruct
+    return MLSTMState(C=sd((batch, H, dh, dh), jnp.float32),
+                      n=sd((batch, H, dh), jnp.float32),
+                      m=sd((batch, H), jnp.float32),
+                      conv=sd((batch, d_in, K - 1), dtype))
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=z)
+
+
+def slstm_state_abstract(cfg: ArchConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    s = jax.ShapeDtypeStruct((batch, H, dh), jnp.float32)
+    return SLSTMState(h=s, c=s, n=s, m=s)
+
+
+MLSTM_LOGICAL = MLSTMState(C=("kv_batch", "act_heads", None, None),
+                           n=("kv_batch", "act_heads", None),
+                           m=("kv_batch", "act_heads"),
+                           conv=("kv_batch", "ssm_inner", "conv_width"))
+SLSTM_LOGICAL = SLSTMState(h=("kv_batch", "act_heads", None),
+                           c=("kv_batch", "act_heads", None),
+                           n=("kv_batch", "act_heads", None),
+                           m=("kv_batch", "act_heads", None))

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServingEngine
+from repro.serve.switching import SwitchableServer, ServedModel

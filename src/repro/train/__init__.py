@@ -1,0 +1,8 @@
+from repro.train.checkpoint import (
+    save_pytree, load_pytree, CheckpointManager,
+)
+from repro.train.optimizer import (
+    adamw_init, adamw_update, make_schedule, global_norm,
+)
+from repro.train.trainer import TrainState, Trainer, make_train_step
+from repro.train.data import SyntheticTokens, HierarchicalTask, PrefetchLoader

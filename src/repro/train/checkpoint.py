@@ -1,0 +1,198 @@
+"""Fault-tolerant, mesh-agnostic checkpointing.
+
+Format: one zstd-compressed msgpack blob per checkpoint holding every leaf as
+(dtype, shape, raw bytes) keyed by its tree path, plus a manifest with
+blake2b digests for integrity.  Writes are atomic (tmp + rename); restores
+skip corrupted/partial checkpoints and fall back to the previous step —
+that's the node-failure story: a killed writer never poisons the run.
+
+Mesh-agnostic: leaves are stored as *full logical arrays*; ``load_pytree``
+re-shards to whatever mesh/sharding the restoring job passes (elastic
+restart on a different topology).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+_ZC = zstandard.ZstdCompressor(level=3)
+_ZD = zstandard.ZstdDecompressor()
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _to_host(x) -> np.ndarray:
+    if isinstance(x, jax.Array):
+        return np.asarray(jax.device_get(x))
+    return np.asarray(x)
+
+
+def save_pytree(path: str, tree: Any, extra: dict | None = None) -> str:
+    """Atomic single-file checkpoint of an arbitrary array pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {}
+    digests = {}
+    for p, leaf in flat:
+        k = _path_str(p)
+        a = _to_host(leaf)
+        raw = a.tobytes()
+        payload[k] = {"dtype": str(a.dtype), "shape": list(a.shape),
+                      "data": raw}
+        digests[k] = hashlib.blake2b(raw, digest_size=16).hexdigest()
+    blob = msgpack.packb({"leaves": payload,
+                          "manifest": {"digests": digests,
+                                       "extra": extra or {},
+                                       "time": time.time()}},
+                         use_bin_type=True)
+    comp = _ZC.compress(blob)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)                      # atomic commit
+    return path
+
+
+def load_pytree(path: str, like: Any = None, shardings: Any = None,
+                verify: bool = True) -> Any:
+    """Restore a checkpoint.  ``like`` rebuilds the exact pytree structure;
+    ``shardings`` (a matching pytree of NamedSharding) re-shards on load."""
+    with open(path, "rb") as f:
+        blob = _ZD.decompress(f.read())
+    obj = msgpack.unpackb(blob, raw=False)
+    leaves, digests = obj["leaves"], obj["manifest"]["digests"]
+    if verify:
+        for k, v in leaves.items():
+            got = hashlib.blake2b(v["data"], digest_size=16).hexdigest()
+            if got != digests[k]:
+                raise IOError(f"checkpoint {path}: digest mismatch at {k}")
+    arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"])
+              .reshape(v["shape"]) for k, v in leaves.items()}
+    if like is None:
+        return arrays
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat))
+    for (p, leaf), sh in zip(flat, shard_flat):
+        k = _path_str(p)
+        if k not in arrays:
+            raise KeyError(f"checkpoint {path} missing leaf {k}")
+        a = arrays[k]
+        want = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else a.dtype
+        a = a.astype(want, copy=False)
+        out.append(jax.device_put(a, sh) if sh is not None else jnp_like(a))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def jnp_like(a: np.ndarray):
+    import jax.numpy as jnp
+    return jnp.asarray(a)
+
+
+def checkpoint_extra(path: str) -> dict:
+    with open(path, "rb") as f:
+        blob = _ZD.decompress(f.read())
+    return msgpack.unpackb(blob, raw=False)["manifest"]["extra"]
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention, async save, auto-resume."""
+
+    STEP_RE = re.compile(r"step_(\d+)\.ckpt$")
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}.ckpt")
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            m = self.STEP_RE.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        """Host-offload synchronously, write (a)synchronously, prune."""
+        self.wait()
+        host = jax.tree.map(_to_host, state)
+
+        def _write():
+            save_pytree(self._path(step), host, extra={"step": step,
+                                                       **(extra or {})})
+            self._prune()
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore `step` (or the newest *valid* checkpoint).  Corrupted or
+        partial files are skipped — crash-during-save never bricks a run."""
+        self.wait()
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        last_err: Exception | None = None
+        for s in candidates:
+            try:
+                tree = load_pytree(self._path(s), like=like,
+                                   shardings=shardings)
+                extra = checkpoint_extra(self._path(s))
+                return tree, extra
+            except (IOError, KeyError, ValueError,
+                    msgpack.UnpackException, zstandard.ZstdError) as e:
+                last_err = e
+                continue
+        raise FileNotFoundError(
+            f"no valid checkpoint in {self.dir}: {last_err}")

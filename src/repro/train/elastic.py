@@ -1,0 +1,35 @@
+"""Elastic scaling: resume a run on a different mesh.
+
+Checkpoints store full logical arrays (mesh-agnostic), so elasticity is:
+build the new mesh, derive shardings from the *same* logical-axis rules, and
+``device_put`` on restore.  A lost pod therefore costs one restore, not a
+re-run: resume on ``(pods-1, data, model)`` — the `pod` axis is pure DP, so
+the optimizer state stays valid (batch size drops; the schedule can be
+re-scaled by the caller).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import DEFAULT_RULES, shard_params_tree
+from repro.models.model import LM
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import init_state, state_shardings
+
+
+def reshard_state(state, model: LM, new_mesh: Mesh, rules=DEFAULT_RULES):
+    """Re-place an in-memory state onto a new mesh."""
+    sh = state_shardings(model, state, new_mesh, rules)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), state, sh)
+
+
+def restore_elastic(ckpt_dir: str, model: LM, run_cfg, new_mesh: Mesh,
+                    key, rules=DEFAULT_RULES, step=None):
+    """Restore the newest checkpoint directly onto `new_mesh`."""
+    mgr = CheckpointManager(ckpt_dir, keep=run_cfg.keep_checkpoints)
+    like = jax.eval_shape(lambda: init_state(model, key, run_cfg))
+    sh = state_shardings(model, like, new_mesh, rules)
+    state, extra = mgr.restore(like=like, step=step, shardings=sh)
+    return state, extra

@@ -1,0 +1,84 @@
+"""In-house AdamW + schedules (optax is not available offline).
+
+Optimizer state is a params-shaped pytree, so it inherits the params'
+shardings (FSDP'd moments for free).  Updates are fully jit-compatible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = jnp.asarray(step).astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            t = jnp.clip((step - cfg.warmup_steps) /
+                         max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = 1.0 - t
+        else:  # cosine
+            t = jnp.clip((step - cfg.warmup_steps) /
+                         max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * decay
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), tree), norm
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig,
+                 schedule: Callable | None = None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    sched = schedule or make_schedule(cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = opt_state["count"] + 1
+    lr = sched(count)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,41 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+multi-device tests spawn subprocesses with their own flags."""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, get_arch, reduced  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+def reduced_arch(name: str, **kw):
+    return reduced(get_arch(name), **kw)
+
+
+@pytest.fixture(params=ASSIGNED_ARCHS)
+def arch_name(request):
+    return request.param
+
+
+def tokens_for(cfg, batch=2, seq=32, seed=1):
+    return jax.random.randint(jax.random.key(seed), (batch, seq), 0,
+                              cfg.vocab_size)
+
+
+def patch_for(cfg, batch=2, seed=2):
+    if cfg.frontend.kind != "vision_patches":
+        return None
+    return jax.random.normal(
+        jax.random.key(seed),
+        (batch, cfg.frontend.num_positions, cfg.frontend.embed_dim),
+        jnp.float32)

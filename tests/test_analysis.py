@@ -1,0 +1,81 @@
+"""Analysis-layer units: HLO collective parser, roofline terms, kernel
+cost model."""
+import pytest
+
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.kernelcost import flash_attention_cost
+from repro.analysis.roofline import (
+    V5E, model_flops, roofline_terms, utilization)
+from repro.configs import SHAPES, get_arch
+
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[128,4096]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  %ar = f32[1024]{0} all-reduce(%p1), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%big), dimensions={0}
+  %a2a = bf16[16,256]{1,0} all-to-all(%p2), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%p3), source_target_pairs={{0,1}}
+  %ags = bf16[2,2]{1,0} all-gather-start(%p4), replica_groups={{0,1}}
+}
+"""
+
+
+def test_parse_collectives_counts_and_kinds():
+    per = parse_collectives(HLO)
+    assert per["all-gather"]["count"] == 2        # incl. the -start form
+    assert per["all-reduce"]["count"] == 1
+    assert per["reduce-scatter"]["count"] == 1
+    assert per["all-to-all"]["count"] == 1
+    assert per["collective-permute"]["count"] == 1
+
+
+def test_collective_moved_bytes_model():
+    per = parse_collectives(HLO)
+    # all-gather moved ~= result bytes
+    assert per["all-gather"]["moved_bytes"] >= 128 * 4096 * 2
+    # all-reduce moved ~= 2x payload (ring reduce-scatter + all-gather)
+    assert per["all-reduce"]["moved_bytes"] == pytest.approx(2 * 1024 * 4)
+    total, _ = collective_bytes(HLO)
+    assert total > 0
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 100e9, 1e9)        # 1s compute, tiny rest
+    assert t["dominant"] == "compute"
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    t = roofline_terms(1e12, 819e9 * 2, 1e9)      # 2s memory
+    assert t["dominant"] == "memory"
+    assert t["bound_s"] == pytest.approx(2.0)
+    t = roofline_terms(1e12, 1e9, 50e9 * 3)       # 3s collective
+    assert t["dominant"] == "collective"
+
+
+def test_model_flops_train_vs_serve():
+    assert model_flops(1e9, 1e6, training=True) == 6e15
+    assert model_flops(1e9, 1e6, training=False) == 2e15
+    assert utilization(6e15, 6e15 / 256, 256) == pytest.approx(1.0)
+
+
+def test_flash_cost_monotonic_and_windowed():
+    cfg = get_arch("deepseek-7b")
+    tr = flash_attention_cost(cfg, SHAPES["train_4k"], 256, training=True)
+    pf = flash_attention_cost(cfg, SHAPES["train_4k"], 256, training=False)
+    assert tr["flops"] > pf["flops"]              # bwd + remat
+    assert tr["bytes"] > pf["bytes"]
+    # sliding window bounds the score work
+    mx = get_arch("mixtral-8x7b")                 # window 4096
+    full = flash_attention_cost(cfg, SHAPES["prefill_32k"], 256,
+                                training=False)
+    win = flash_attention_cost(mx, SHAPES["prefill_32k"], 256,
+                               training=False)
+    # mixtral's windowed fraction: 4096/32768 vs causal 0.5
+    assert win["flops"] / win["bytes"] < full["flops"] / full["bytes"]
+
+
+def test_flash_cost_decode_reads_cache_once():
+    cfg = get_arch("deepseek-7b")
+    c = flash_attention_cost(cfg, SHAPES["decode_32k"], 256, training=False)
+    cache = (2 * 128 * cfg.num_kv_heads * 32768 * cfg.head_dim * 2 *
+             cfg.num_layers / 256)
+    assert c["bytes"] == pytest.approx(cache, rel=0.05)

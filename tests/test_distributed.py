@@ -1,0 +1,38 @@
+"""Multi-device distribution semantics, via an 8-fake-device subprocess
+(keeps the main pytest process at 1 device, per the dry-run isolation rule).
+
+Covers: EP MoE all_to_all dispatch, sharded-vs-single-device training
+equivalence, int8 error-feedback gradient compression, ppermute pipeline
+parallelism, elastic restore on a smaller mesh, and sequence-sharded
+(SP) decode.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "_distributed_worker.py")
+
+
+@pytest.fixture(scope="module")
+def worker_results():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, WORKER], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULTS_JSON:")]
+    assert line, out.stdout + out.stderr[-2000:]
+    return json.loads(line[-1][len("RESULTS_JSON:"):])
+
+
+@pytest.mark.parametrize("check", [
+    "moe_ep_vs_ref", "sharded_train_step", "int8_ef_compression",
+    "pipeline_1f1b", "elastic_restore", "sp_decode_seq_sharded_kv"])
+def test_distributed_check(worker_results, check):
+    res = worker_results.get(check)
+    assert res is not None, f"check {check} did not run: {worker_results}"
+    assert res["ok"], res

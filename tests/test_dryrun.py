@@ -1,0 +1,34 @@
+"""Dry-run smoke: one production-mesh cell compiles end-to-end, in a
+subprocess (512 fake devices must never leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+         "--mesh", "single", "--skip-metrics", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.load(open(tmp_path / "tinyllama-1.1b_decode_32k_single.json"))
+    assert rec["chips"] == 256
+    assert rec["compile_s"] > 0
+    assert "error" not in rec["memory_analysis"]
+    # sharded-collective sanity: decode on a 16x16 mesh must communicate
+    assert rec["collectives_scanned"]["moved_bytes"] > 0
+
+
+def test_main_process_still_single_device():
+    import jax
+    assert len(jax.devices()) == 1

@@ -1,0 +1,56 @@
+"""Paper-constant validation (Fig 5 / Supplementary): the transcribed
+hardware model must reproduce the paper's published ratios."""
+import pytest
+
+from repro.core import hwmodel as hw
+
+
+def test_area_ratios_match_paper_claims():
+    for (kind, tech), claim in hw.AREA_RATIO_CLAIMS.items():
+        ours = hw.AREA_LAMBDA2[kind][tech] / hw.AREA_LAMBDA2[kind]["sram_1cfg"]
+        assert ours == pytest.approx(claim, abs=0.005), (kind, tech)
+
+
+def test_headline_area_reductions():
+    # abstract: 63.0 % LUT / 71.1 % CB reduction for the dual-config design
+    lut = 1 - hw.AREA_LAMBDA2["LUT"]["fefet_2cfg"] / \
+        hw.AREA_LAMBDA2["LUT"]["sram_1cfg"]
+    cb = 1 - hw.AREA_LAMBDA2["CB"]["fefet_2cfg"] / \
+        hw.AREA_LAMBDA2["CB"]["sram_1cfg"]
+    assert lut == pytest.approx(hw.HEADLINE_AREA_REDUCTION["LUT"], abs=0.005)
+    assert cb == pytest.approx(hw.HEADLINE_AREA_REDUCTION["CB"], abs=0.005)
+
+
+def test_critical_path_deltas_calibrated():
+    """Fig 5(c): FeFET single-config -8.6 %, dual-config +9.6 % vs SRAM."""
+    d1 = hw.critical_path_delta("fefet_1cfg")
+    d2 = hw.critical_path_delta("fefet_2cfg")
+    assert d1 == pytest.approx(hw.CRITICAL_PATH_CLAIMS["fefet_1cfg"],
+                               abs=0.02)
+    assert d2 == pytest.approx(hw.CRITICAL_PATH_CLAIMS["fefet_2cfg"],
+                               abs=0.02)
+
+
+def test_primitive_delay_power_statements():
+    # stated numbers: 124.3 ps / 13.1 uW 6-input LUT; CB ~7.8 ps, ~2x SRAM
+    assert hw.LUT_READ_DELAY_PS["fefet_1cfg"] == 124.3
+    assert hw.LUT_READ_POWER_UW["fefet_1cfg"] == 13.1
+    assert hw.CB_DELAY_PS["fefet_1cfg"] == pytest.approx(
+        2 * hw.CB_DELAY_PS["sram_1cfg"], rel=0.05)
+    # FeFET LUT power smallest of all techs (paper statement)
+    assert hw.LUT_READ_POWER_UW["fefet_1cfg"] == \
+        min(hw.LUT_READ_POWER_UW.values())
+    # dual-config LUT delay < RRAM single-config (paper statement)
+    assert hw.LUT_READ_DELAY_PS["fefet_2cfg"] < \
+        hw.LUT_READ_DELAY_PS["rram_1cfg"]
+
+
+def test_reconfig_time_formula():
+    # paper: bitstream bits / 3.2 Gb/s ICAP
+    t = hw.reconfig_time_s(180.0)      # resnet50-scale bitstream, megabits
+    assert t == pytest.approx(180e6 / 3.2e9)
+
+
+def test_context_load_time_model():
+    t = hw.context_load_time_s(1_000_000_000)   # 1 GB over 25 GB/s
+    assert t == pytest.approx(0.04)

@@ -1,0 +1,244 @@
+"""Per-kernel correctness sweeps: every Pallas kernel (interpret mode on CPU)
+against its pure-jnp oracle over shapes x dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import (
+    decode_attention, decode_reference)
+from repro.kernels.flash_attention.ops import (
+    attention_reference, flash_attention)
+from repro.kernels.gmm.ops import (
+    expert_mlp, expert_mlp_reference, gmm, gmm_reference)
+from repro.kernels.mlstm_chunk.ops import (
+    mlstm_chunk, mlstm_chunk_reference, mlstm_recurrent_reference)
+from repro.kernels.ssm_scan.ops import (
+    selective_scan, selective_scan_reference)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd", [
+    (2, 4, 2, 128, 64),       # GQA
+    (1, 8, 8, 256, 32),       # MHA
+    (2, 4, 1, 96, 64),        # MQA + padding (96 % 64 != 0)
+    (1, 2, 2, 64, 128),       # head_dim 128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(B, H, Hkv, S, hd, dtype):
+    ks = jax.random.split(jax.random.key(S + hd), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = attention_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("window", [16, 64, 128])
+def test_flash_attention_sliding_window(window):
+    B, H, Hkv, S, hd = 1, 4, 2, 256, 32
+    ks = jax.random.split(jax.random.key(window), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    out = flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    ref = attention_reference(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-3)
+
+
+def test_flash_attention_block_shape_independence():
+    """Numerical result must not depend on the BlockSpec tiling."""
+    B, H, S, hd = 1, 2, 256, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,pos,ring", [
+    (2, 8, 2, 256, 64, 100, False),
+    (1, 4, 4, 512, 32, 511, False),
+    (2, 8, 2, 128, 64, 300, True),      # wrapped ring (SWA)
+    (2, 8, 2, 128, 64, 60, True),       # unwrapped ring
+    (1, 16, 1, 256, 64, 0, False),      # first token
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(B, H, Hkv, S, hd, pos, ring, dtype):
+    ks = jax.random.split(jax.random.key(S + pos), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    out = decode_attention(q, k, v, pos, ring=ring, block_k=64)
+    ref = decode_reference(q, k, v, pos, ring=ring)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+def test_decode_matches_flash_last_row():
+    """Decoding the final position == last row of full flash attention."""
+    B, H, S, hd = 1, 4, 128, 32
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    full = flash_attention(q, k, v, block_q=32, block_k=32)
+    dec = decode_attention(q[:, :, -1], k, v, S - 1, block_k=32)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,d_in,N", [
+    (2, 64, 128, 16), (1, 128, 64, 8), (2, 96, 192, 16), (1, 256, 32, 4),
+])
+@pytest.mark.parametrize("with_init", [False, True])
+def test_ssm_scan_matches_oracle(B, L, d_in, N, with_init):
+    ks = jax.random.split(jax.random.key(L + d_in), 7)
+    u = jax.random.normal(ks[0], (B, L, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, d_in)))
+    Bm = jax.random.normal(ks[2], (B, L, N))
+    Cm = jax.random.normal(ks[3], (B, L, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (d_in, N)) * 0.5)
+    D = jax.random.normal(ks[5], (d_in,))
+    s0 = jax.random.normal(ks[6], (B, d_in, N)) if with_init else None
+    y, s = selective_scan(u, dt, Bm, Cm, A, D, s0, block_d=64, block_l=32)
+    yr, sr = selective_scan_reference(u, dt, Bm, Cm, A, D, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-4)
+
+
+def test_ssm_scan_chunk_handoff():
+    """Scanning [0:L] == scanning [0:L/2] then [L/2:L] with carried state."""
+    B, L, d_in, N = 1, 64, 32, 8
+    ks = jax.random.split(jax.random.key(11), 6)
+    u = jax.random.normal(ks[0], (B, L, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, d_in)))
+    Bm = jax.random.normal(ks[2], (B, L, N))
+    Cm = jax.random.normal(ks[3], (B, L, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (d_in, N)) * 0.5)
+    D = jax.random.normal(ks[5], (d_in,))
+    y_full, s_full = selective_scan(u, dt, Bm, Cm, A, D, block_l=16)
+    h = L // 2
+    y1, s1 = selective_scan(u[:, :h], dt[:, :h], Bm[:, :h], Cm[:, :h], A, D,
+                            block_l=16)
+    y2, s2 = selective_scan(u[:, h:], dt[:, h:], Bm[:, h:], Cm[:, h:], A, D,
+                            s1, block_l=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunkwise mLSTM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,L,dh,c", [
+    (2, 2, 64, 32, 16), (1, 4, 128, 64, 32), (2, 1, 96, 48, 32),
+])
+def test_mlstm_chunk_matches_recurrent_oracle(B, H, L, dh, c):
+    ks = jax.random.split(jax.random.key(L + dh), 5)
+    q = jax.random.normal(ks[0], (B, H, L, dh))
+    k = jax.random.normal(ks[1], (B, H, L, dh))
+    v = jax.random.normal(ks[2], (B, H, L, dh))
+    li = jax.random.normal(ks[3], (B, H, L)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, L)) + 1.0)
+    h, (C, n, m) = mlstm_chunk(q, k, v, li, lf, chunk=c)
+    hr, (Cr, nr, mr) = mlstm_recurrent_reference(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(nr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+
+
+def test_mlstm_chunk_matches_chunkwise_oracle():
+    B, H, L, dh = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.key(3), 5)
+    q = jax.random.normal(ks[0], (B, H, L, dh))
+    k = jax.random.normal(ks[1], (B, H, L, dh))
+    v = jax.random.normal(ks[2], (B, H, L, dh))
+    li = jax.random.normal(ks[3], (B, H, L)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, L)))
+    h, _ = mlstm_chunk(q, k, v, li, lf, chunk=32)
+    hr, _ = mlstm_chunk_reference(q, k, v, li, lf, 32)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 64, 128, 256), (2, 128, 64, 96), (8, 32, 32, 64), (1, 16, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_matches_oracle(E, C, D, F, dtype):
+    ks = jax.random.split(jax.random.key(E + C), 2)
+    x = jax.random.normal(ks[0], (E, C, D), dtype)
+    w = jax.random.normal(ks[1], (E, D, F), dtype)
+    out = gmm(x, w, block_c=32, block_f=32, block_d=32)
+    ref = gmm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=(0.5 if dtype == jnp.bfloat16 else 1e-4))
+
+
+def test_expert_mlp_matches_oracle():
+    E, C, D, F = 4, 32, 64, 128
+    ks = jax.random.split(jax.random.key(9), 4)
+    x = jax.random.normal(ks[0], (E, C, D))
+    wg = jax.random.normal(ks[1], (E, D, F)) / 8
+    wu = jax.random.normal(ks[2], (E, D, F)) / 8
+    wd = jax.random.normal(ks[3], (E, F, D)) / 8
+    out = expert_mlp(x, wg, wu, wd, block_c=16, block_f=32, block_d=32)
+    ref = expert_mlp_reference(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: whole models with kernels in interpret mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "mixtral-8x7b",
+                                  "xlstm-125m", "jamba-v0.1-52b"])
+def test_model_forward_kernel_vs_reference(name):
+    import repro.kernels as kernels
+    from repro.configs import get_arch, override, reduced
+    from repro.models.model import build_model
+    cfg = override(reduced(get_arch(name)), dtype="float32")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    try:
+        kernels.set_mode("off")
+        l0, _ = m.forward(p, toks)
+        kernels.set_mode("interpret")
+        l1, _ = m.forward(p, toks)
+    finally:
+        kernels.set_mode("off")
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=5e-4,
+                               rtol=1e-3)

@@ -1,0 +1,234 @@
+"""Model-zoo behaviour: per-arch smoke, decode/prefill/train consistency,
+family-specific form equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import patch_for, reduced_arch, tokens_for
+from repro.configs import ASSIGNED_ARCHS, get_arch, override, reduced
+from repro.models import xlstm as xl
+from repro.models.model import build_model
+
+
+# ---------------------------------------------------------------------------
+# smoke: every assigned arch (reduced config) trains/forwards on CPU
+# ---------------------------------------------------------------------------
+
+def test_arch_forward_smoke(arch_name):
+    cfg = reduced_arch(arch_name)
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    toks = tokens_for(cfg)
+    logits, aux = m.forward(p, toks, patch_embeds=patch_for(cfg))
+    n_patch = (cfg.frontend.num_positions
+               if cfg.frontend.kind == "vision_patches" else 0)
+    assert logits.shape == (2, 32 + n_patch, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits)).any()
+    assert np.isfinite(float(aux))
+
+
+def test_arch_train_step_smoke(arch_name):
+    from repro.configs.base import RunConfig
+    from repro.train.trainer import init_state, make_train_step
+    cfg = reduced_arch(arch_name)
+    m = build_model(cfg)
+    rc = RunConfig(arch=cfg.name)
+    state = init_state(m, jax.random.key(0), rc)
+    step = jax.jit(make_train_step(m, rc))
+    batch = {"tokens": tokens_for(cfg)}
+    if cfg.frontend.kind == "vision_patches":
+        batch["patch_embeds"] = patch_for(cfg)
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually moved
+    d0 = jax.tree.leaves(state["params"])[0]
+    d1 = jax.tree.leaves(state2["params"])[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+# ---------------------------------------------------------------------------
+# decode == forward (teacher forcing) for every family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "mixtral-8x7b",
+                                  "xlstm-125m", "jamba-v0.1-52b",
+                                  "musicgen-medium", "qwen3-moe-235b-a22b"])
+def test_prefill_decode_matches_forward(name):
+    cfg = override(reduced_arch(name), dtype="float32",
+                   param_dtype="float32")
+    m = build_model(cfg)
+    m.cache_dtype = jnp.float32
+    p = m.init(jax.random.key(0))
+    S, S0 = 24, 16
+    toks = tokens_for(cfg, batch=2, seq=S)
+    full_logits, _ = m.forward(p, toks)
+
+    logits0, caches = m.prefill(p, toks[:, :S0], max_len=S)
+    np.testing.assert_allclose(np.asarray(logits0[:, -1]),
+                               np.asarray(full_logits[:, S0 - 1]),
+                               atol=2e-3, rtol=1e-3)
+    logits = logits0
+    for t in range(S0, S):
+        logits, caches = m.decode_step(p, caches, toks[:, t:t + 1],
+                                       jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=5e-3, rtol=1e-2)
+
+
+def test_sliding_window_decode_ring():
+    """Mixtral-style SWA: ring cache beyond the window matches forward."""
+    cfg = override(reduced_arch("mixtral-8x7b"), sliding_window=8,
+                   dtype="float32", param_dtype="float32")
+    m = build_model(cfg)
+    m.cache_dtype = jnp.float32
+    p = m.init(jax.random.key(0))
+    S, S0 = 24, 4
+    toks = tokens_for(cfg, batch=1, seq=S)
+    full_logits, _ = m.forward(p, toks)
+    logits, caches = m.prefill(p, toks[:, :S0], max_len=S)
+    for t in range(S0, S):
+        logits, caches = m.decode_step(p, caches, toks[:, t:t + 1],
+                                       jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=5e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# family-specific equivalences
+# ---------------------------------------------------------------------------
+
+def test_mlstm_three_forms_agree():
+    B, H, L, dh = 2, 2, 64, 16
+    ks = jax.random.split(jax.random.key(5), 5)
+    q = jax.random.normal(ks[0], (B, H, L, dh))
+    k = jax.random.normal(ks[1], (B, H, L, dh))
+    v = jax.random.normal(ks[2], (B, H, L, dh))
+    li = jax.random.normal(ks[3], (B, H, L)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, L)))
+    h_par, fin_par = xl.mlstm_parallel(q, k, v, li, lf)
+    h_rec, fin_rec = xl.mlstm_recurrent(q, k, v, li, lf)
+    h_chk, fin_chk = xl.mlstm_chunkwise(q, k, v, li, lf, chunk=16)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_rec),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_rec),
+                               atol=1e-4)
+    for a, b in zip(fin_chk, fin_rec):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_mamba_scan_vs_associative():
+    from repro.models.ssm import mamba_forward, ssm_specs
+    from repro.models.common import init_params
+    cfg = reduced_arch("jamba-v0.1-52b")
+    specs = ssm_specs(cfg)
+    p = init_params(jax.random.key(0), specs)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+    y1, s1 = mamba_forward(p, x, cfg, mode="scan")
+    y2, s2 = mamba_forward(p, x, cfg, mode="assoc")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1.ssm), np.asarray(s2.ssm),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_moe_ref_vs_tp_strategy():
+    from repro.models.moe import moe_dense_ref, moe_specs, moe_tp
+    from repro.models.common import init_params
+    cfg = reduced_arch("mixtral-8x7b")
+    specs = moe_specs(cfg)
+    p = init_params(jax.random.key(0), specs)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    y_ref, aux_ref = moe_dense_ref(p, x, cfg)
+    y_tp, aux_tp = moe_tp(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_tp),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(float(aux_ref), float(aux_tp), rtol=1e-5)
+
+
+def test_block_pattern_jamba_interleave():
+    cfg = get_arch("jamba-v0.1-52b")
+    from repro.models.model import block_pattern
+    pat = block_pattern(cfg)
+    assert len(pat) == 8
+    assert sum(1 for m, _ in pat if m == "attn") == 1        # 1:7 interleave
+    assert sum(1 for _, f in pat if f == "moe") == 4         # every other
+    assert cfg.num_layers % len(pat) == 0
+
+
+def test_block_pattern_xlstm():
+    cfg = get_arch("xlstm-125m")
+    from repro.models.model import block_pattern
+    pat = block_pattern(cfg)
+    assert len(pat) == 4
+    assert sum(1 for m, _ in pat if m == "slstm") == 1
+
+
+def test_param_count_analytic_close_to_specs():
+    """Analytic count (roofline MODEL_FLOPS) vs actual spec count."""
+    for name in ASSIGNED_ARCHS:
+        cfg = get_arch(name)
+        m = build_model(cfg)
+        analytic = cfg.param_count()
+        exact = m.n_params()
+        assert abs(analytic - exact) / exact < 0.15, (name, analytic, exact)
+
+
+def test_full_config_exactness():
+    """Assignment numbers transcribed exactly."""
+    c = get_arch("qwen3-moe-235b-a22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == \
+        (94, 4096, 64, 4)
+    assert c.moe.num_experts == 128 and c.moe.top_k == 8
+    assert c.vocab_size == 151_936 and c.moe.d_ff_expert == 1536
+    c = get_arch("starcoder2-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (32, 4608, 36, 4, 18432, 49152)
+    c = get_arch("pixtral-12b")
+    assert (c.num_layers, c.d_model, c.vocab_size) == (40, 5120, 131072)
+    c = get_arch("mixtral-8x7b")
+    assert c.sliding_window == 4096 and c.moe.num_experts == 8
+    c = get_arch("jamba-v0.1-52b")
+    assert c.attn_every == 8 and c.moe.num_experts == 16 and c.moe.every == 2
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "jamba-v0.1-52b"])
+def test_paged_decode_matches_dense(name):
+    """vLLM-style paged decode: logits identical to the contiguous cache."""
+    cfg = override(reduced_arch(name), dtype="float32",
+                   param_dtype="float32")
+    m = build_model(cfg)
+    m.cache_dtype = jnp.float32
+    p = m.init(jax.random.key(0))
+    S, S0, page = 32, 8, 8          # S0 on a page boundary
+    toks = tokens_for(cfg, batch=2, seq=S)
+    full_logits, _ = m.forward(p, toks)
+
+    # dense prefill, then convert the cache to pages
+    _, caches = m.prefill(p, toks[:, :S0], max_len=S)
+    bigs, acts = m.init_paged_cache(2, S, page=page)
+    for key in list(bigs):
+        if bigs[key] is None:                      # recurrent state block
+            acts[key] = caches[key]
+            continue
+        k, v = caches[key].k, caches[key].v        # (R, B, Hkv, S, hd)
+        R, B, Hkv, Smax, hd = k.shape
+        from repro.models.layers import ActKV, BigKV
+        bigs[key] = BigKV(k=k.reshape(R, B, Hkv, Smax // page, page, hd),
+                          v=v.reshape(R, B, Hkv, Smax // page, page, hd))
+
+    from repro.models.layers import commit_page
+    for t in range(S0, S):
+        logits, acts = m.decode_step_paged(p, bigs, acts, toks[:, t:t + 1],
+                                           jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=5e-3, rtol=1e-2)
+        if t % page == page - 1:                   # page filled: commit
+            for key in list(bigs):
+                if bigs[key] is not None:
+                    bigs[key] = jax.vmap(commit_page, in_axes=(0, 0, None))(
+                        bigs[key], acts[key], t)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests for system invariants beyond the scheduler:
+sharding-spec legality, checkpoint roundtrips, quantization bounds, ring
+cache indexing."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+mesh_shapes = st.fixed_dictionaries({
+    "pod": st.sampled_from([1, 2]),
+    "data": st.sampled_from([1, 2, 4, 8, 16, 32]),
+    "model": st.sampled_from([1, 2, 4, 8, 16]),
+})
+logical_names = st.sampled_from(
+    ["batch", "embed", "heads", "kv_heads", "ffn", "vocab", "experts",
+     "act_heads", "act_attn_q", "kv_seq", "layers", "head_dim"])
+dims = st.integers(1, 512)
+
+
+@given(mesh_shapes, st.lists(st.tuples(logical_names, dims), min_size=1,
+                             max_size=5))
+@settings(max_examples=300, deadline=None)
+def test_spec_always_legal(mesh_shape, logical_dims):
+    """Every produced PartitionSpec (a) only uses existing mesh axes,
+    (b) never reuses an axis, (c) always divides the dim."""
+    mesh = FakeMesh(mesh_shape)
+    logical = tuple(n for n, _ in logical_dims)
+    shape = tuple(d for _, d in logical_dims)
+    spec = logical_to_spec(mesh, logical, shape)
+    used = []
+    for ax, dim in zip(spec, shape):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        total = 1
+        for a in axes:
+            assert a in mesh_shape
+            assert a not in used
+            used.append(a)
+            total *= mesh_shape[a]
+        assert dim % total == 0
+
+
+@given(st.lists(st.tuples(st.sampled_from(["f32", "bf16", "i32"]),
+                          st.lists(st.integers(1, 7), min_size=0,
+                                   max_size=3)),
+                min_size=1, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_checkpoint_roundtrip_arbitrary_pytree(leaf_specs, seed):
+    import tempfile
+    from repro.train.checkpoint import load_pytree, save_pytree
+    rng = np.random.default_rng(seed)
+    dts = {"f32": jnp.float32, "bf16": jnp.bfloat16, "i32": jnp.int32}
+    tree = {}
+    for i, (dt, shape) in enumerate(leaf_specs):
+        a = rng.standard_normal(shape) * 100
+        tree[f"leaf{i}"] = jnp.asarray(a, dts[dt])
+    tmpdir = tempfile.mkdtemp()
+    path = f"{tmpdir}/ck_{seed}"
+    save_pytree(path, tree)
+    out = load_pytree(path)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(tree[k]))
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([4, 8, 16, 64]))
+@settings(max_examples=200, deadline=None)
+def test_ring_cache_slot_validity(pos, window):
+    """Sliding-window ring indexing: the valid-slot rule must mark exactly
+    min(pos+1, window) slots valid and include the current token's slot."""
+    idx = np.arange(window)
+    valid = (idx <= pos % window) | (pos >= window)
+    assert valid.sum() == min(pos + 1, window)
+    assert valid[pos % window]
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_int8_quantization_error_bound(xs):
+    """Shared-scale int8: |dequant - x| <= scale/2 + eps, residual == err."""
+    from hypothesis import assume
+    x = jnp.asarray(xs, jnp.float32)
+    amax = float(jnp.max(jnp.abs(x)))
+    assume(amax == 0.0 or amax > 1e-30)    # subnormal scales are degenerate
+    scale = amax / 127.0 if amax > 0 else 1.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    deq = q * scale
+    err = np.asarray(jnp.abs(deq - x))
+    assert (err <= scale / 2 * 1.001 + 1e-5 * max(amax, 1.0)).all()
+
+
+@given(st.integers(1, 64), st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_moe_dispatch_conservation(tokens, experts):
+    """Capacity-padded dispatch: with capacity >= tokens, every (token,
+    choice) lands in exactly one slot and combine reconstructs weights."""
+    from repro.models.moe import _combine_local, _dispatch_local
+    k = min(2, experts)
+    rng = np.random.default_rng(tokens * 131 + experts)
+    xt = jnp.asarray(rng.standard_normal((tokens, 4)), jnp.float32)
+    top_i = jnp.asarray(rng.integers(0, experts, (tokens, k)))
+    top_p = jnp.asarray(np.abs(rng.standard_normal((tokens, k))) + 0.1,
+                        jnp.float32)
+    cap = tokens * k                    # nothing can drop
+    buf, slot, kept = _dispatch_local(xt, top_p, top_i, experts, cap)
+    assert bool(kept.all())
+    # identity expert: combine must return sum_k p_k * x
+    y = _combine_local(buf, top_p, top_i, slot, kept, cap)
+    want = (np.asarray(top_p).sum(1, keepdims=True) * np.asarray(xt))
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-5, atol=1e-5)

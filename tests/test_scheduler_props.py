@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) for the reconfiguration scheduler —
+the paper's timing model invariants must hold for *arbitrary* schedules."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.scheduler import (
+    Run, simulate_conventional, simulate_dynamic, simulate_preloaded,
+    time_saving)
+
+nets = st.sampled_from(["n0", "n1", "n2"])
+runs = st.lists(
+    st.builds(Run, net=nets,
+              exec_time=st.floats(0.1, 50.0, allow_nan=False),
+              repeat=st.integers(1, 4)),
+    min_size=1, max_size=12)
+loads = st.fixed_dictionaries({
+    "n0": st.floats(0.1, 30.0), "n1": st.floats(0.1, 30.0),
+    "n2": st.floats(0.1, 30.0)})
+
+
+@given(runs, loads)
+@settings(max_examples=200, deadline=None)
+def test_preloaded_never_slower_and_bounded(schedule, load_time):
+    conv = simulate_conventional(schedule, load_time)
+    pre = simulate_preloaded(schedule, load_time)
+    assert pre <= conv + 1e-9
+    s = time_saving(conv, pre)
+    assert 0.0 <= s < 1.0          # paper: ideal bound 100 %
+
+
+@given(runs, loads)
+@settings(max_examples=200, deadline=None)
+def test_dynamic_between_preloaded_and_conventional(schedule, load_time):
+    conv = simulate_conventional(schedule, load_time)
+    dyn = simulate_dynamic(schedule, load_time, num_slots=2)
+    pre = simulate_preloaded(schedule, load_time)
+    assert pre <= dyn + 1e-9 <= conv + 1e-9
+
+
+@given(runs, loads, st.integers(2, 4))
+@settings(max_examples=150, deadline=None)
+def test_more_slots_never_hurt(schedule, load_time, slots):
+    d2 = simulate_dynamic(schedule, load_time, num_slots=slots)
+    d3 = simulate_dynamic(schedule, load_time, num_slots=slots + 1)
+    assert d3 <= d2 + 1e-9
+
+
+@given(loads, st.floats(0.1, 40.0), st.floats(0.1, 40.0),
+       st.floats(0.1, 40.0), st.integers(1, 6))
+@settings(max_examples=150, deadline=None)
+def test_cyclic_three_net_saving_bounded_half(load_time, e0, e1, e2, reps):
+    """Paper Fig 6(f): cycling three nets through two slots means every run
+    needs a fresh (overlapped) load; the ideal saving bound is 50 %."""
+    execs = [e0, e1, e2]
+    schedule = [Run(f"n{i % 3}", execs[i % 3]) for i in range(3 * reps)]
+    conv = simulate_conventional(schedule, load_time)
+    dyn = simulate_dynamic(schedule, load_time, num_slots=2)
+    s = time_saving(conv, dyn)
+    assert -1e-9 <= s <= 0.5 + 1e-9
+
+
+@given(runs, loads)
+@settings(max_examples=100, deadline=None)
+def test_zero_load_time_makes_all_equal(schedule, load_time):
+    zero = {k: 0.0 for k in load_time}
+    conv = simulate_conventional(schedule, zero)
+    dyn = simulate_dynamic(schedule, zero)
+    pre = simulate_preloaded(schedule, zero)
+    assert abs(conv - dyn) < 1e-9
+    assert abs(conv - pre) < 1e-9
+
+
+def test_paper_case2_exact_numbers():
+    """Fig 6(c/d) structure: two preloaded nets, switch ~0: saving equals
+    reconfig_fraction of the conventional total."""
+    load = {"a": 10.0, "b": 10.0}
+    sched = [Run("a", 1.0), Run("b", 1.0)] * 5
+    conv = simulate_conventional(sched, load)
+    pre = simulate_preloaded(sched, load)
+    # conventional: 10 loads (every change) + 10 exec = 110; ours: 10
+    assert conv == pytest.approx(110.0)
+    assert pre == pytest.approx(10.0)
+    assert time_saving(conv, pre) == pytest.approx(100 / 110, rel=1e-6)
+
+
+def test_dynamic_hides_load_behind_exec():
+    """Fig 6(e): load(next) < exec(current) => fully hidden."""
+    load = {"a": 2.0, "b": 2.0, "c": 2.0}
+    sched = [Run("a", 5.0), Run("b", 5.0), Run("c", 5.0)]
+    dyn = simulate_dynamic(sched, load, num_slots=2)
+    # first load visible (2) + 3 x 5 exec; b,c loads hidden
+    assert dyn == pytest.approx(17.0)
+    conv = simulate_conventional(sched, load)
+    assert conv == pytest.approx(21.0)

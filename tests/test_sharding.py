@@ -1,0 +1,96 @@
+"""Sharding-rule unit behaviour (single device; multi-device semantics are
+covered by tests/test_distributed.py subprocesses and the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed.sharding import (
+    DEFAULT_RULES, ShardingRules, logical_to_spec)
+
+
+class FakeMesh:
+    """Just enough mesh for logical_to_spec (shape lookup only)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def test_non_dividing_axis_dropped():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # heads=36 does not divide 16 -> replicated
+    spec = logical_to_spec(mesh, ("batch", "heads"), (256, 36))
+    assert spec[1] is None
+    spec = logical_to_spec(mesh, ("batch", "heads"), (256, 32))
+    assert spec[1] == "model"
+
+
+def test_axis_used_once_per_spec():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # both dims map to model; only the first one gets it
+    spec = logical_to_spec(mesh, ("heads", "ffn"), (32, 64))
+    assert spec == P("model", None)
+
+
+def test_act_attn_q_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # heads shard -> q-chunk replicated
+    s = logical_to_spec(mesh, ("batch", "act_heads", "act_attn_q", None),
+                        (256, 32, 1024, 4096))
+    assert s == P(("data",), "model", None, None)
+    # starcoder2: 36 heads -> fallback to q-chunk sharding
+    s = logical_to_spec(mesh, ("batch", "act_heads", "act_attn_q", None),
+                        (256, 36, 1024, 4096))
+    assert s == P(("data",), None, "model", None)
+
+
+def test_missing_mesh_axis_ignored():
+    mesh = FakeMesh({"data": 4})
+    spec = logical_to_spec(mesh, ("batch", "heads"), (8, 32))
+    assert spec == P(("data",), None)
+
+
+def test_pod_axis_composes_with_data():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(mesh, ("batch", None), (256, 1))
+    assert spec[0] == ("pod", "data")
+
+
+def test_rules_override():
+    r = DEFAULT_RULES.with_(kv_seq="model", kv_heads=None)
+    assert r["kv_seq"] == "model"
+    assert r["kv_heads"] is None
+    assert DEFAULT_RULES["kv_seq"] is None      # original untouched
+
+
+def test_decode_rules_pick_seq_for_small_kv():
+    from repro.launch.specs import decode_rules
+    mesh = FakeMesh({"data": 16, "model": 16})
+    r = decode_rules(get_arch("qwen3-moe-235b-a22b"), mesh)   # kv=4
+    assert r["kv_seq"] == "model" and r["kv_heads"] is None
+    r = decode_rules(get_arch("deepseek-7b"), mesh)           # kv=32
+    assert r["kv_heads"] == "model" and r["kv_seq"] is None
+
+
+def test_fit_batch_axes_long_500k():
+    from repro.launch.specs import fit_batch_axes
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert fit_batch_axes(mesh, 1) == ()            # B=1: unshardable
+    assert fit_batch_axes(mesh, 32) == ("pod", "data")
+    assert fit_batch_axes(mesh, 2) == ("pod",)
+
+
+def test_cell_applicability_matrix():
+    from repro.configs import ASSIGNED_ARCHS, SHAPES, cell_is_runnable
+    runnable = {(a, s) for a in ASSIGNED_ARCHS for s in SHAPES
+                if cell_is_runnable(get_arch(a), SHAPES[s])[0]}
+    # exactly the DESIGN.md skip list: 7 pure-attention archs skip long_500k
+    assert len(runnable) == 33
+    for a in ("xlstm-125m", "jamba-v0.1-52b", "mixtral-8x7b"):
+        assert (a, "long_500k") in runnable
+    for a in ("tinyllama-1.1b", "deepseek-7b", "pixtral-12b",
+              "qwen3-moe-235b-a22b", "codeqwen1.5-7b", "starcoder2-7b",
+              "musicgen-medium"):
+        assert (a, "long_500k") not in runnable
