@@ -12,9 +12,9 @@ import traceback
 
 
 def modules():
-    from benchmarks import (bench_switch, fig5_critical_path,
-                            fig5_primitives, fig6_cases, fig6b_accuracy,
-                            figS1_pipeline, roofline_table)
+    from benchmarks import (bench_serve_queue, bench_switch,
+                            fig5_critical_path, fig5_primitives, fig6_cases,
+                            fig6b_accuracy, figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -22,6 +22,7 @@ def modules():
         ("fig6_cases", fig6_cases.run),
         ("figS1_pipeline", figS1_pipeline.run),
         ("bench_switch", bench_switch.run),
+        ("bench_serve_queue", bench_serve_queue.run),
         ("roofline_table", roofline_table.run),
     ]
 

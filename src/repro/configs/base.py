@@ -1,17 +1,16 @@
 """Config system: architecture + shape + run configs.
 
-Plain dataclasses (constructed via ``dacite`` from dicts/JSON so launchers can
-override any field from the CLI).  One ``ArchConfig`` per assigned
-architecture lives in ``repro/configs/<id>.py``; the registry in
-``repro/configs/__init__.py`` resolves ``--arch <id>``.
+Plain dataclasses (constructed from dicts/JSON via the stdlib-only
+``from_dict`` below so launchers can override any field from the CLI).  One
+``ArchConfig`` per assigned architecture lives in ``repro/configs/<id>.py``;
+the registry in ``repro/configs/__init__.py`` resolves ``--arch <id>``.
 """
 from __future__ import annotations
 
 import dataclasses
+import typing
 from dataclasses import dataclass, field
 from typing import Any, Optional
-
-import dacite
 
 # ---------------------------------------------------------------------------
 # Architecture config
@@ -258,8 +257,66 @@ class RunConfig:
     use_pallas: bool = False      # True on TPU; CPU paths use the jnp ref
 
 
+def _unwrap_optional(tp):
+    """Optional[X] -> (X, True); anything else -> (tp, False)."""
+    if typing.get_origin(tp) is typing.Union:
+        args = [a for a in typing.get_args(tp) if a is not type(None)]
+        if len(args) == 1:
+            return args[0], True
+    return tp, False
+
+
+def _build(tp, value, path: str):
+    """Recursively construct `tp` from plain dicts/lists (stdlib only).
+
+    Strict: unknown dataclass keys raise, like dacite's strict mode did
+    (typos in CLI/JSON overrides must not pass silently)."""
+    tp, is_opt = _unwrap_optional(tp)
+    if value is None:
+        if is_opt:
+            return None
+        raise ValueError(f"{path}: None not allowed for {tp!r}")
+    if dataclasses.is_dataclass(tp):
+        if dataclasses.is_dataclass(value):        # already constructed
+            return value
+        if not isinstance(value, dict):
+            raise TypeError(f"{path}: expected dict for {tp.__name__}, "
+                            f"got {type(value).__name__}")
+        hints = typing.get_type_hints(tp)
+        names = {f.name for f in dataclasses.fields(tp) if f.init}
+        unknown = set(value) - names
+        if unknown:
+            raise ValueError(
+                f"{path}: unknown key(s) {sorted(unknown)} for {tp.__name__}")
+        kwargs = {k: _build(hints[k], v, f"{path}.{k}")
+                  for k, v in value.items()}
+        return tp(**kwargs)
+    origin = typing.get_origin(tp)
+    if origin in (list, tuple):
+        if not isinstance(value, (list, tuple)):
+            raise TypeError(f"{path}: expected a sequence for {tp!r}, "
+                            f"got {type(value).__name__}")
+        args = typing.get_args(tp) or (Any,)
+        built = [_build(args[0], v, f"{path}[{i}]")
+                 for i, v in enumerate(value)]
+        return tuple(built) if origin is tuple else built
+    if origin is dict:
+        if not isinstance(value, dict):
+            raise TypeError(f"{path}: expected a dict for {tp!r}, "
+                            f"got {type(value).__name__}")
+        _, vt = typing.get_args(tp) or (Any, Any)
+        return {k: _build(vt, v, f"{path}[{k!r}]") for k, v in value.items()}
+    if tp is float and isinstance(value, int) and not isinstance(value, bool):
+        return float(value)                        # JSON has no int/float split
+    if (origin is None and isinstance(tp, type) and tp is not Any
+            and not isinstance(value, tp)):
+        raise TypeError(f"{path}: expected {tp.__name__}, "
+                        f"got {type(value).__name__}")
+    return value
+
+
 def from_dict(cls, d: dict[str, Any]):
-    return dacite.from_dict(cls, d, config=dacite.Config(strict=True))
+    return _build(cls, d, cls.__name__)
 
 
 def override(cfg, **kw):

@@ -2,6 +2,7 @@ from repro.core.context import (
     ContextState, ContextDescriptor, ContextSlot, ContextSwitchEngine,
     ContextStore,
 )
+from repro.core.policy import EnsureDecision, ReconfigPolicy
 from repro.core.scheduler import (
     simulate_conventional, simulate_preloaded, simulate_dynamic, time_saving,
 )

@@ -12,7 +12,7 @@ executes (Fig S1a's 8-cycles-for-4-images pipeline).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,30 +72,42 @@ class SuperSubCascade:
             sub_pred = local_to_global[sub_pred]
         return {"super": super_pred, "sub": sub_pred}
 
+    def _specialist_pass(self, x, super_pred: int) -> dict:
+        """Switch to the specialist for `super_pred` and finish the batch."""
+        m = self.specialists.get(super_pred, self.generalist)
+        self.engine.preload(m.name)           # no-op if resident/in flight
+        self.engine.switch(m.name, wait=True)
+        logits = self.engine.run(x)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        if m is not self.generalist:
+            # specialist predicts within-superclass ids -> map to global ids
+            l2g = np.where(self.sub_of_super == super_pred)[0]
+            pred = l2g[pred]
+        return {"super": super_pred, "sub": pred}
+
     def dynamic_infer_pipelined(self, batches: Sequence[Any]) -> list:
-        """Fig S1(a): while the super net classifies batch i+1, the
-        specialist for batch i streams into the shadow slot."""
-        results = []
-        pending: list[tuple[Any, int]] = []   # (batch, super_pred)
+        """Fig S1(a): one batch is always in flight — while batch i's
+        specialist weights stream into the shadow slot, the super net
+        classifies batch i+1 (and batch i's own specialist pass overlaps
+        the load too).  Prime with batch 0, drain batch i-1 after
+        classifying batch i, flush the last batch at the end; the
+        specialist load is never awaited in the same step it was issued,
+        so it hides behind real execution (engine stats show
+        ``hidden_load_seconds > 0`` — tested)."""
+        results: list[dict] = []
+        in_flight: Optional[tuple[Any, int]] = None   # (batch, super_pred)
         self.engine.preload(self.super_net.name, block=True)
         for x in batches:
-            self.engine.switch(self.super_net.name)
+            self.engine.switch(self.super_net.name, wait=True)
             sup = self.engine.run(x)
             sp = int(np.asarray(jnp.argmax(sup.mean(0))))
             member = self.specialists.get(sp, self.generalist)
-            self.engine.preload(member.name)  # overlaps next super batch
-            pending.append((x, sp))
-            # drain: specialist pass for the oldest pending batch
-            if len(pending) >= 1:
-                bx, bsp = pending.pop(0)
-                m = self.specialists.get(bsp, self.generalist)
-                self.engine.switch(m.name, wait=True)
-                logits = self.engine.run(bx)
-                pred = np.asarray(jnp.argmax(logits, -1))
-                if m is not self.generalist:
-                    l2g = np.where(self.sub_of_super == bsp)[0]
-                    pred = l2g[pred]
-                results.append({"super": bsp, "sub": pred})
+            self.engine.preload(member.name)  # streams while we keep running
+            if in_flight is not None:         # drain the previous batch
+                results.append(self._specialist_pass(*in_flight))
+            in_flight = (x, sp)
+        if in_flight is not None:             # flush
+            results.append(self._specialist_pass(*in_flight))
         return results
 
     # ------------------------------------------------------------ accuracy

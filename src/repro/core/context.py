@@ -31,6 +31,8 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.core.policy import ReconfigPolicy
+
 
 class ContextState(enum.Enum):
     EMPTY = "empty"
@@ -85,17 +87,30 @@ def _overlay(base, delta):
 
 
 class ContextSwitchEngine:
-    """Dual-slot (by default) context-switching executor."""
+    """Dual-slot (by default) context-switching executor.
+
+    All slot-allocation / eviction / prefetch *decisions* are delegated to
+    a ``ReconfigPolicy`` (``repro.core.policy``) — the same object the
+    discrete-event simulator runs — so the engine only performs the
+    physical work: device transfers, slot state flips, stats.
+    """
 
     def __init__(self, num_slots: int = 2, mesh=None,
-                 store: "ContextStore | None" = None):
+                 store: "ContextStore | None" = None,
+                 policy: ReconfigPolicy | None = None):
         assert num_slots >= 2, "dynamic reconfiguration needs >= 2 slots"
+        if policy is None:
+            policy = ReconfigPolicy(num_slots=num_slots)
+        assert policy.num_slots == num_slots, \
+            (policy.num_slots, num_slots)
+        self.policy = policy
         self.slots = [ContextSlot(i) for i in range(num_slots)]
         self.mesh = mesh
         self.store = store
         self._contexts: dict[str, ContextDescriptor] = {}
         self._executables: dict[tuple, Any] = {}
         self._pending: dict[str, Future] = {}
+        self._deferred: dict[str, Future] = {}    # waiting for a free slot
         self._lock = threading.RLock()
         # one configuration port, like the FPGA's single config interface:
         self._loader = ThreadPoolExecutor(max_workers=1,
@@ -103,9 +118,15 @@ class ContextSwitchEngine:
         self.stats = {
             "loads": 0, "load_seconds": 0.0, "bytes_loaded": 0,
             "switches": 0, "switch_seconds": 0.0, "evictions": 0,
-            "hidden_load_seconds": 0.0,
+            "hidden_load_seconds": 0.0, "context_changes": 0,
         }
-        self._exec_busy_until = 0.0       # for overlap accounting
+        # overlap accounting (all guarded by self._lock).  One loader
+        # thread => at most one load window open at a time.
+        self._exec_busy_until = 0.0
+        self._runs_in_flight = 0
+        self._run_started_at: Optional[float] = None
+        self._load_started_at: Optional[float] = None
+        self._load_hidden_accum = 0.0     # exec∩load overlap, completed runs
 
     # ------------------------------------------------------------- registry
     def register(self, desc: ContextDescriptor,
@@ -142,60 +163,129 @@ class ContextSwitchEngine:
                 return s
         return None
 
-    def _victim_slot(self) -> ContextSlot:
-        """EMPTY first, then a READY (never ACTIVE, never LOADING)."""
-        for s in self.slots:
-            if s.state == ContextState.EMPTY:
-                return s
-        for s in self.slots:
-            if s.state == ContextState.READY:
-                return s
-        raise RuntimeError(
-            "no loadable slot: all slots ACTIVE/LOADING "
-            "(the paper's design point: one executes while one loads)")
-
     # ------------------------------------------------------------- loading
-    def preload(self, name: str, block: bool = False) -> Future:
+    def _active_name(self) -> Optional[str]:
+        a = self.active
+        return a.name if a is not None else None
+
+    def _evict_name_unlocked(self, name: str, demote_ok: bool = False):
+        """Free the slot holding `name` (policy already decided this)."""
+        for s in self.slots:
+            if s.name == name and s.state in (ContextState.READY,
+                                              ContextState.ACTIVE):
+                if s.state == ContextState.ACTIVE and not demote_ok:
+                    raise RuntimeError(
+                        f"policy evicted ACTIVE context {name!r} "
+                        "without allow_evict_active")
+                s.state = ContextState.EMPTY
+                s.name, s.buffers, s.bytes_resident = None, None, 0
+                self.stats["evictions"] += 1
+                return
+        # slot already gone (e.g. explicit evict raced ahead) — fine.
+
+    def _submit_unlocked(self, desc: ContextDescriptor) -> Future:
+        fut = self._loader.submit(self._do_load, desc)
+        return fut
+
+    def preload(self, name: str, block: bool = False,
+                allow_evict_active: bool = False) -> Future:
         """Start loading `name` into a non-active slot (overlaps execution).
 
         This is the paper's dynamic reconfiguration: the call returns
         immediately; the active context keeps executing.  Repeated preloads
-        of an in-flight name return the same future; when every slot is
-        busy (one ACTIVE + others LOADING) the request queues behind the
-        single configuration port and claims its slot when it runs.
+        of an in-flight name return the same future.  Victim selection is
+        the policy's: it evicts the LRU non-active resident; when every
+        slot is pinned (ACTIVE or loading) the request is *deferred* and
+        resubmitted automatically as soon as a slot frees up.
+
+        ``allow_evict_active`` marks a quiescent point (no run in flight):
+        the policy may then overwrite even the currently selected context,
+        exactly like the simulator's between-runs decision.
         """
         desc = self._contexts[name]
         with self._lock:
-            if self._find_slot(name) is not None:       # already resident
+            slot = self._find_slot(name)
+            if slot is not None:                        # already resident
                 f: Future = Future()
-                f.set_result(self._find_slot(name))
+                f.set_result(slot)
                 return f
             pending = self._pending.get(name)
             if pending is not None and not pending.done():
                 return pending                          # already in flight
-            fut = self._loader.submit(self._do_load, desc)
-            self._pending[name] = fut
+            decision = self.policy.ensure(
+                name, active=None if allow_evict_active
+                else self._active_name())
+            if decision is None:                        # all slots pinned
+                ph: Future = Future()
+                self._pending[name] = ph
+                self._deferred[name] = ph
+                fut = ph
+            else:
+                for v in decision.evictions:
+                    self._evict_name_unlocked(
+                        v, demote_ok=allow_evict_active)
+                fut = self._submit_unlocked(desc)
+                self._pending[name] = fut
         if block:
             fut.result()
         return fut
 
+    def prefetch(self, upcoming: "list[str]",
+                 limit: Optional[int] = None) -> "list[Future]":
+        """Stream upcoming contexts into shadow slots per the policy's
+        lookahead plan (hidden behind the active context's execution).
+
+        One atomic policy consultation under the engine lock — the same
+        ``ReconfigPolicy.prefetch`` call the simulator makes, so live and
+        simulated prefetch/evict decisions are literally the same code.
+        """
+        futs: list[Future] = []
+        with self._lock:
+            known = [n for n in upcoming
+                     if n in self._contexts and n not in self._deferred]
+            for dec in self.policy.prefetch(
+                    known, active=self._active_name(), limit=limit):
+                for v in dec.evictions:
+                    self._evict_name_unlocked(v)
+                fut = self._submit_unlocked(self._contexts[dec.net])
+                self._pending[dec.net] = fut
+                futs.append(fut)
+            self._kick_deferred_unlocked()   # evictions may free deferred
+        return futs
+
+    def _kick_deferred_unlocked(self):
+        """Resubmit deferred loads whose slot just became available (FIFO:
+        the configuration port serves requests in arrival order)."""
+        for name in list(self._deferred):
+            decision = self.policy.ensure(name, active=self._active_name())
+            if decision is None:
+                break                                   # still no room
+            ph = self._deferred.pop(name)
+            for v in decision.evictions:
+                self._evict_name_unlocked(v)
+            real = self._submit_unlocked(self._contexts[name])
+
+            def _chain(f: Future, ph: Future = ph):
+                exc = f.exception()
+                if exc is not None:
+                    ph.set_exception(exc)
+                else:
+                    ph.set_result(f.result())
+            real.add_done_callback(_chain)
+
     def _claim_slot(self, name: str) -> ContextSlot:
-        """Runs on the loader thread: by the time a queued load executes,
-        the port is free and a non-active slot is claimable."""
+        """Runs on the loader thread.  The policy freed a slot when this
+        load was admitted, so an EMPTY slot exists by the time the single
+        port gets to it; the wait loop is a defensive backstop."""
         deadline = time.monotonic() + 60.0
         while True:
             with self._lock:
-                try:
-                    slot = self._victim_slot()
-                except RuntimeError:
-                    slot = None
-                if slot is not None:
-                    if slot.state == ContextState.READY:
-                        self.stats["evictions"] += 1
-                    slot.state = ContextState.LOADING
-                    slot.name = name
-                    slot.ready_event.clear()
-                    return slot
+                for slot in self.slots:
+                    if slot.state == ContextState.EMPTY:
+                        slot.state = ContextState.LOADING
+                        slot.name = name
+                        slot.ready_event.clear()
+                        return slot
             if time.monotonic() > deadline:             # pragma: no cover
                 raise RuntimeError(f"no slot became loadable for {name!r}")
             time.sleep(0.001)
@@ -203,39 +293,61 @@ class ContextSwitchEngine:
     def _do_load(self, desc: ContextDescriptor):
         slot = self._claim_slot(desc.name)
         t0 = time.perf_counter()
-        host = desc.weights_fn()
-        # stream tensor-by-tensor (the two-step WL programming analogue);
-        # device_put is async w.r.t. this thread until the final barrier.
-        if desc.shardings is not None:
-            bufs = jax.tree.map(jax.device_put, host, desc.shardings)
-        else:
-            bufs = jax.tree.map(jax.device_put, host)
-        jax.block_until_ready(bufs)
-        wire_bytes = _nbytes(bufs)            # what actually crossed H2D
-        if desc.base is not None:
-            # partial reconfiguration: only the delta crossed the wire;
-            # unchanged tensors are shared with the base's device buffers
-            # (zero-copy on device).
-            base_slot = self._find_slot(desc.base)
-            if base_slot is None:
-                raise RuntimeError(
-                    f"delta context {desc.name!r} needs base "
-                    f"{desc.base!r} resident")
-            bufs = _overlay(base_slot.buffers, bufs)
+        with self._lock:
+            self._load_started_at = t0
+            self._load_hidden_accum = 0.0
+        try:
+            host = desc.weights_fn()
+            # stream tensor-by-tensor (the two-step WL programming
+            # analogue); device_put is async w.r.t. this thread until the
+            # final barrier.
+            if desc.shardings is not None:
+                bufs = jax.tree.map(jax.device_put, host, desc.shardings)
+            else:
+                bufs = jax.tree.map(jax.device_put, host)
+            jax.block_until_ready(bufs)
+            wire_bytes = _nbytes(bufs)        # what actually crossed H2D
+            if desc.base is not None:
+                # partial reconfiguration: only the delta crossed the wire;
+                # unchanged tensors are shared with the base's device
+                # buffers (zero-copy on device).
+                base_slot = self._find_slot(desc.base)
+                if base_slot is None:
+                    raise RuntimeError(
+                        f"delta context {desc.name!r} needs base "
+                        f"{desc.base!r} resident")
+                bufs = _overlay(base_slot.buffers, bufs)
+        except BaseException:
+            with self._lock:                 # failed load never wedges a slot
+                slot.state = ContextState.EMPTY
+                slot.name, slot.buffers, slot.bytes_resident = None, None, 0
+                slot.ready_event.set()
+                self.policy.abort(desc.name)
+                self._load_started_at = None
+                self._kick_deferred_unlocked()
+            raise
         dt = time.perf_counter() - t0
+        now = time.perf_counter()
         with self._lock:
             slot.buffers = bufs
             slot.bytes_resident = _nbytes(bufs)
             slot.state = ContextState.READY
             slot.ready_event.set()
+            self.policy.complete(desc.name)
             self.stats["loads"] += 1
             self.stats["load_seconds"] += dt
             self.stats["bytes_loaded"] += wire_bytes
-            # overlap accounting: time this load spent while execution was
-            # in flight counts as *hidden* reconfiguration
-            hidden = max(0.0, min(self._exec_busy_until, time.perf_counter())
-                         - (time.perf_counter() - dt))
-            self.stats["hidden_load_seconds"] += max(0.0, min(hidden, dt))
+            # overlap accounting: execution time inside [t0, now] counts
+            # this load as *hidden* reconfiguration.  Runs that completed
+            # during the window accumulated their clamped overlap in
+            # _load_hidden_accum (see run()); a run still in flight
+            # contributes the part since max(run_start, load_start).
+            hidden = self._load_hidden_accum
+            if self._run_started_at is not None:
+                hidden += now - max(self._run_started_at, t0)
+            self.stats["hidden_load_seconds"] += max(0.0, min(dt, hidden))
+            self._load_started_at = None
+            self._kick_deferred_unlocked()
         return slot
 
     # ------------------------------------------------------------ switching
@@ -248,26 +360,59 @@ class ContextSwitchEngine:
         t_exec and reconfiguration is only partially hidden).
         """
         t0 = time.perf_counter()
-        slot = self._find_slot(name)
-        if slot is None:
-            pending = self._pending.get(name)
+        deadline = t0 + timeout
+        checked_done: Optional[Future] = None
+        while True:
+            # residency check and activation under ONE lock acquisition: a
+            # concurrent eviction (loader kick, another client's prefetch)
+            # between them could otherwise activate an emptied slot.
+            with self._lock:
+                slot = self._find_slot(name)
+                if slot is not None:
+                    prev = None
+                    for s in self.slots:
+                        if s.state == ContextState.ACTIVE:
+                            s.state = ContextState.READY
+                            prev = s.name
+                    slot.state = ContextState.ACTIVE
+                    self.policy.activate(name)
+                    dt = time.perf_counter() - t0
+                    self.stats["switches"] += 1
+                    if prev != name:     # an actual select-signal flip
+                        self.stats["context_changes"] += 1
+                    self.stats["switch_seconds"] += dt
+                    self._kick_deferred_unlocked()  # prev became evictable
+                    return dt
+                pending = self._pending.get(name)
             if pending is None:
                 raise KeyError(f"context {name!r} not resident; preload first")
+            if pending.done():
+                if pending.exception() is not None:
+                    pending.result()         # surface the load failure
+                if pending is checked_done:
+                    # re-checked residency under the lock after this future
+                    # resolved and the slot is still gone: evicted again
+                    raise KeyError(
+                        f"context {name!r} not resident; preload first")
+                # the load may have finished between our locked residency
+                # check and here — loop once to re-check under the lock
+                checked_done = pending
+                continue
             if not wait:
                 raise RuntimeError(f"context {name!r} still loading")
-            pending.result(timeout)
-            slot = self._find_slot(name)
-            if slot is None:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
                 raise TimeoutError(f"context {name!r} did not become READY")
+            pending.result(remaining)
+
+    def deactivate(self):
+        """Park the select signal: ACTIVE -> READY (slot stays resident)."""
         with self._lock:
             for s in self.slots:
                 if s.state == ContextState.ACTIVE:
                     s.state = ContextState.READY
-            slot.state = ContextState.ACTIVE
-        dt = time.perf_counter() - t0
-        self.stats["switches"] += 1
-        self.stats["switch_seconds"] += dt
-        return dt
+            self.policy.deactivate()
+            self._kick_deferred_unlocked()
 
     @property
     def active(self) -> Optional[ContextSlot]:
@@ -285,9 +430,24 @@ class ContextSwitchEngine:
         desc = self._contexts[slot.name]
         fn = self._get_executable(desc, inputs)
         t0 = time.perf_counter()
-        out = fn(slot.buffers, *inputs)
-        out = jax.block_until_ready(out)
-        self._exec_busy_until = time.perf_counter()
+        with self._lock:
+            self._runs_in_flight += 1
+            if self._run_started_at is None:
+                self._run_started_at = t0
+        try:
+            out = fn(slot.buffers, *inputs)
+            out = jax.block_until_ready(out)
+        finally:
+            now = time.perf_counter()
+            with self._lock:
+                self._runs_in_flight -= 1
+                self._exec_busy_until = now
+                if self._load_started_at is not None:
+                    # clamp this run's overlap to the open load window
+                    self._load_hidden_accum += max(
+                        0.0, now - max(t0, self._load_started_at))
+                if self._runs_in_flight == 0:
+                    self._run_started_at = None
         return out
 
     def run_async(self, *inputs):
@@ -300,6 +460,13 @@ class ContextSwitchEngine:
         return fn(slot.buffers, *inputs)
 
     # --------------------------------------------------------------- misc
+    def hidden_load_fraction(self) -> float:
+        """Share of reconfiguration time hidden behind execution (the
+        paper's headline metric) — single source for every report."""
+        with self._lock:
+            total = self.stats["load_seconds"]
+            return self.stats["hidden_load_seconds"] / total if total else 0.0
+
     def resident(self) -> list[str]:
         return [s.name for s in self.slots
                 if s.state in (ContextState.READY, ContextState.ACTIVE)]
@@ -314,6 +481,8 @@ class ContextSwitchEngine:
             s.state = ContextState.EMPTY
             s.name, s.buffers, s.bytes_resident = None, None, 0
             self.stats["evictions"] += 1
+            self.policy.release(name)
+            self._kick_deferred_unlocked()
 
     def shutdown(self):
         self._loader.shutdown(wait=True)

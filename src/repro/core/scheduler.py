@@ -16,8 +16,10 @@ Invariants checked by property tests:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.core.policy import ReconfigPolicy
 
 
 @dataclass(frozen=True)
@@ -63,7 +65,8 @@ def simulate_preloaded(schedule: Sequence[Run],
 def simulate_dynamic(schedule: Sequence[Run],
                      load_time: dict[str, float],
                      num_slots: int = 2,
-                     switch_time: float = 0.0) -> float:
+                     switch_time: float = 0.0,
+                     policy: Optional[ReconfigPolicy] = None) -> float:
     """Dynamic reconfiguration with `num_slots` resident slots.
 
     Event simulation: while run i executes in its slot, the loader (one
@@ -73,43 +76,47 @@ def simulate_dynamic(schedule: Sequence[Run],
     before run i = remaining load time for its net.  This is the paper's
     'reconfigure while executing' timeline (Fig 6e), generalized to
     arbitrary schedules and slot counts.
+
+    Which net loads where — and which resident is evicted — is decided by
+    the shared ``ReconfigPolicy``, the exact object that drives the live
+    ``ContextSwitchEngine``; this function only advances the clock.  Pass
+    ``policy`` to inspect its decision trace afterwards.
     """
-    resident: list[str] = []                 # LRU order, newest last
+    pol = policy if policy is not None else ReconfigPolicy(num_slots)
+    assert pol.num_slots == num_slots, (pol.num_slots, num_slots)
     t = 0.0
     loader_free_at = 0.0
     load_done_at: dict[str, float] = {}
 
-    def occupied() -> int:
-        return len(resident) + len(load_done_at)
+    def fire_completions(now: float):
+        """Report finished loads to the policy, in completion order."""
+        for net, done in sorted(load_done_at.items(), key=lambda kv: kv[1]):
+            if done <= now:
+                pol.complete(net)
+                del load_done_at[net]
 
-    def ensure_queued(net: str, now: float, active: str | None):
-        """Queue a load, evicting an LRU non-active resident if needed."""
+    def queue_load(net: str, now: float):
         nonlocal loader_free_at
-        if net in resident or net in load_done_at:
-            return True
-        while occupied() >= num_slots:
-            victim = next((n for n in resident if n != active), None)
-            if victim is None:
-                return False                 # only the active net resident
-            resident.remove(victim)
         start = max(now, loader_free_at)
         loader_free_at = start + load_time[net]
         load_done_at[net] = loader_free_at
-        return True
 
     for i, r in enumerate(schedule):
-        ensure_queued(r.net, t, active=None)
-        if r.net not in resident:            # visible stall: remaining load
+        fire_completions(t)
+        decision = pol.ensure(r.net, active=None)   # quiescent: between runs
+        if decision is not None and decision.load:
+            queue_load(r.net, t)
+        if not pol.is_resident(r.net):       # visible stall: remaining load
             t = max(t, load_done_at.pop(r.net))
-            resident.append(r.net)
-        else:
-            resident.remove(r.net)
-            resident.append(r.net)           # MRU
+            pol.complete(r.net)
+        pol.activate(r.net)
         t += switch_time
+        fire_completions(t)
         # prefetch upcoming nets while this one executes (hidden loads)
-        for nxt in schedule[i + 1:]:
-            if not ensure_queued(nxt.net, t, active=r.net):
-                break
+        upcoming = [nxt.net for nxt in schedule[i + 1:]]
+        for dec in pol.prefetch(upcoming, active=r.net):
+            queue_load(dec.net, t)
+        fire_completions(t)                  # zero-cost loads land instantly
         t += r.exec_time * r.repeat
     return t
 
@@ -123,11 +130,22 @@ def time_saving(baseline: float, ours: float) -> float:
 # ---------------------------------------------------------------------------
 
 def run_schedule_live(engine, schedule: Sequence[Run], inputs: dict,
-                      dynamic: bool = True) -> dict:
+                      dynamic: bool = True, lookahead: int | None = 1,
+                      settle: bool = False) -> dict:
     """Drive the real engine; returns measured wall/clock decomposition.
 
-    dynamic=True  — preload next context while the current one runs
-    dynamic=False — conventional: evict + blocking load on every change
+    dynamic=True  — preload upcoming contexts while the current one runs;
+                    which ones (and which resident gets evicted) comes from
+                    ``engine.policy`` — the same ``ReconfigPolicy`` object
+                    ``simulate_dynamic`` runs, so the model and the
+                    measurement execute literally the same decision code.
+    dynamic=False — conventional: evict + blocking load on every change.
+
+    ``lookahead`` bounds the prefetch window (None = policy default);
+    ``settle`` waits for each preload before proceeding — decision points
+    then happen in the same order as the simulator's, making the policy
+    trace deterministic (used by the sim/live agreement tests; leave False
+    for real overlap).
     """
     import time as _time
     t0 = _time.perf_counter()
@@ -148,11 +166,17 @@ def run_schedule_live(engine, schedule: Sequence[Run], inputs: dict,
                     engine.evict(prev)              # old config overwritten
         else:
             ts = _time.perf_counter()
-            engine.preload(r.net)            # no-op if resident
+            # quiescent point (previous run finished): the policy may
+            # overwrite any slot, including the previously active one
+            fut = engine.preload(r.net, allow_evict_active=True)
+            if settle:
+                fut.result()
             engine.switch(r.net, wait=True)  # stall only if load incomplete
             stalls += _time.perf_counter() - ts
-            if i + 1 < len(schedule) and schedule[i + 1].net != r.net:
-                engine.preload(schedule[i + 1].net)   # hidden behind run()
+            upcoming = [nxt.net for nxt in schedule[i + 1:]]
+            for f in engine.prefetch(upcoming, limit=lookahead):
+                if settle:                   # hidden behind run() otherwise
+                    f.result()
         for _ in range(r.repeat):
             engine.run(*inputs[r.net])
     return {"total": _time.perf_counter() - t0, "visible_stalls": stalls}

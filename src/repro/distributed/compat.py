@@ -1,0 +1,26 @@
+"""JAX version compatibility shims (hermetic images pin older releases).
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwargs ``axis_names`` /
+``check_vma``).  This adapter exposes the new-style signature on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              axis_names=None, check_vma=None):
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = bool(check_vma)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, mesh: Mesh, params_stacked, x,
                    num_microbatches: int, axis: str = "pipe"):
@@ -66,7 +68,7 @@ def pipeline_apply(stage_fn: Callable, mesh: Mesh, params_stacked, x,
             jnp.where(idx == S - 1, outs, jnp.zeros_like(outs)), axis)
         return outs.reshape((B,) + x_local.shape[1:])
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(axis), P()),
-                       out_specs=P(), axis_names={axis}, check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P()),
+                   out_specs=P(), axis_names={axis}, check_vma=False)
     return fn(params_stacked, x)

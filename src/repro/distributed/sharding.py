@@ -91,7 +91,9 @@ def _axis_ok(mesh: Mesh, axis: Axis, dim: int, used: set[str]) -> Axis:
         size *= mesh.shape[a]
     if not keep:
         return None
-    return keep[0] if len(keep) == 1 else tuple(keep)
+    if isinstance(axis, str):
+        return keep[0]
+    return tuple(keep)     # tuple rule stays a tuple (P equality on old jax)
 
 
 def logical_to_spec(mesh: Mesh, logical: tuple[str, ...],

@@ -1,0 +1,24 @@
+"""Pallas-TPU version compatibility: ``pltpu.CompilerParams`` was named
+``TPUCompilerParams`` before jax 0.5 (same fields — ``dimension_semantics``
+et al.).  Kernels import ``pltpu`` from here to run on either release."""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl                     # noqa: F401
+from jax.experimental.pallas import tpu as _tpu
+
+_COMPILER_PARAMS = getattr(_tpu, "CompilerParams",
+                           getattr(_tpu, "TPUCompilerParams", None))
+
+
+class _PltpuShim:
+    def __getattr__(self, name):
+        if name == "CompilerParams":
+            if _COMPILER_PARAMS is None:           # fail fast + diagnosable
+                raise AttributeError(
+                    "this jax release exposes neither "
+                    "pallas.tpu.CompilerParams nor TPUCompilerParams")
+            return _COMPILER_PARAMS
+        return getattr(_tpu, name)
+
+
+pltpu = _PltpuShim()

@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import pltpu
 
 DEFAULT_BD = 256     # channels per program
 DEFAULT_BL = 128     # time steps per tile

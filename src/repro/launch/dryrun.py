@@ -46,7 +46,7 @@ from repro.configs import (
 from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
 from repro.distributed.mesh import AXIS_MODEL as AXIS_MODEL_NAME
 from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh_auto, make_production_mesh
 from repro.launch.specs import (
     abstract_sharded_cache, abstract_sharded_params, decode_rules,
     default_parallel, fit_batch_axes, input_specs)
@@ -218,8 +218,7 @@ def measure_cell(cfg: ArchConfig, shape: ShapeConfig, mesh_kind: str,
     if mesh_shape is not None:
         # same 256 chips, different logical split (hillclimb variant):
         # e.g. (32, 8) gives an 8-wide model axis = mixtral's expert count.
-        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_auto(mesh_shape, ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     rec: dict = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_kind,

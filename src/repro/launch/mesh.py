@@ -8,9 +8,18 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes):
+    """jax.make_mesh with Auto axis types where the API exists (the
+    ``axis_types`` kwarg and ``AxisType`` arrived after 0.4; older
+    releases are Auto-only, so omitting it is equivalent)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)

@@ -1,11 +1,20 @@
 """Serving launcher: context-switching inference over N registered models.
 
-``python -m repro.launch.serve --archs supersub-super,supersub-sub --steps 8``
+``python -m repro.launch.serve --archs supersub-super,supersub-sub --steps 4``
 
-Demonstrates the paper's architecture live: the active model serves batched
-requests while the next model's weights stream into the shadow slot; the
-switch itself is an O(1) activation flip.  Prints the measured
-switch/load/execution decomposition (EXPERIMENTS.md §Serving reads this).
+Two modes:
+
+  * ``--mode queue`` (default) — the async ``SwitchScheduler``: requests
+    for all models are submitted up front; the scheduler coalesces
+    same-model requests into streaks, ranks the next model by queue
+    pressure + load cost, and streams it into the shadow slot while the
+    active streak executes.  Reports throughput, p50/p99 latency, and the
+    hidden-load fraction.
+  * ``--mode sync``  — the old synchronous round-robin driver (worst case
+    for switching; kept as the baseline the paper compares against).
+
+Both route every slot/eviction/prefetch decision through the shared
+``ReconfigPolicy`` — there is no scheduling logic in this file.
 """
 from __future__ import annotations
 
@@ -19,58 +28,104 @@ import numpy as np
 
 from repro.configs import get_arch, reduced as make_reduced
 from repro.models.model import build_model
+from repro.serve.scheduler import SwitchScheduler
 from repro.serve.switching import ServedModel, SwitchableServer
+
+
+def build_server(names: list[str], slots: int, max_len: int,
+                 temperature: float = 0.0,
+                 load_delay_s: float = 0.0) -> tuple[SwitchableServer, dict]:
+    """Register reduced versions of `names` behind one SwitchableServer.
+
+    ``load_delay_s`` sleeps in each ``weights_fn`` to emulate streaming a
+    full-size context over the host->device link (benchmarks use it: the
+    reduced CPU test models are in-memory, real contexts are not)."""
+    server = SwitchableServer(num_slots=slots)
+    cfgs = {}
+    for i, name in enumerate(names):
+        cfg = make_reduced(get_arch(name))
+        cfgs[name] = cfg
+        model = build_model(cfg)
+        params = model.init(jax.random.key(i))
+
+        def weights_fn(p=params):
+            if load_delay_s:
+                time.sleep(load_delay_s)
+            return p
+        server.register(ServedModel(name=name, model=model,
+                                    weights_fn=weights_fn,
+                                    max_len=max_len,
+                                    temperature=temperature))
+    return server, cfgs
+
+
+def request_stream(names, cfgs, n_requests, batch, seq, seed):
+    """Round-robin mixed-model traffic (worst case for switching)."""
+    rng = np.random.default_rng(seed)
+    for r in range(n_requests):
+        name = names[r % len(names)]
+        toks = rng.integers(0, cfgs[name].vocab_size, (batch, seq))
+        yield name, toks
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--archs", default="supersub-super,supersub-sub")
+    ap.add_argument("--mode", choices=("queue", "sync"), default="queue")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=1)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     names = args.archs.split(",")
-    server = SwitchableServer(num_slots=args.slots)
-    rng = np.random.default_rng(args.seed)
+    server, cfgs = build_server(names, args.slots, args.seq + args.steps + 8)
+    reqs = list(request_stream(names, cfgs, args.requests,
+                               args.batch, args.seq, args.seed))
 
-    for i, name in enumerate(names):
-        cfg = make_reduced(get_arch(name))
-        model = build_model(cfg)
-        params = model.init(jax.random.key(i))
-
-        def weights_fn(p=params):
-            return p
-        server.register(ServedModel(name=name, model=model,
-                                    weights_fn=weights_fn,
-                                    max_len=args.seq + 8))
-
-    # round-robin request stream across models (worst case for switching)
     t0 = time.perf_counter()
-    for r in range(args.requests):
-        name = names[r % len(names)]
-        cfg = make_reduced(get_arch(name))
-        toks = rng.integers(0, cfg.vocab_size, (args.batch, args.seq))
-        out = server.serve_batch(name, toks)
-        nxt = names[(r + 1) % len(names)]
-        if nxt != name:
-            server.preload(nxt)           # hidden behind this batch
+    if args.mode == "queue":
+        with SwitchScheduler(server) as sched:
+            futs = [(sched.submit(n, t, steps=args.steps),
+                     time.perf_counter()) for n, t in reqs]
+            lat = []
+            for f, t_in in futs:
+                f.result()
+                lat.append(time.perf_counter() - t_in)
+        extra = {**sched.snapshot()}
+        if lat:
+            extra["latency_p50_s"] = round(float(np.percentile(lat, 50)), 4)
+            extra["latency_p99_s"] = round(float(np.percentile(lat, 99)), 4)
+    else:
+        for i, (name, toks) in enumerate(reqs):
+            server.engine.preload(name)
+            server.engine.switch(name, wait=True)
+            server.engine.prefetch([n for n, _ in reqs[i + 1:]], limit=1)
+            server.serve_batch(name, toks, steps=args.steps)
+        extra = {}
     wall = time.perf_counter() - t0
 
     stats = server.engine.stats
-    print(json.dumps({
+    report = {
+        "mode": args.mode,
         "wall_s": round(wall, 3),
+        "requests_per_s": round(args.requests / wall, 2) if wall else 0.0,
         "switches": stats["switches"],
+        "context_changes": stats["context_changes"],
         "mean_switch_us": round(1e6 * stats["switch_seconds"]
                                 / max(stats["switches"], 1), 1),
         "loads": stats["loads"],
         "mean_load_ms": round(1e3 * stats["load_seconds"]
                               / max(stats["loads"], 1), 2),
         "bytes_loaded": stats["bytes_loaded"],
+        "hidden_load_fraction": round(
+            server.engine.hidden_load_fraction(), 3),
+        **extra,
         "log_tail": server.log[-3:],
-    }, indent=1, default=str))
+    }
+    print(json.dumps(report, indent=1, default=str))
     server.shutdown()
     return 0
 

@@ -1,2 +1,3 @@
 from repro.serve.engine import ServingEngine
 from repro.serve.switching import SwitchableServer, ServedModel
+from repro.serve.scheduler import SwitchScheduler

@@ -55,7 +55,14 @@ class ServingEngine:
         self._step = jax.jit(_step, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
-    def generate(self, tokens, steps: int, patch_embeds=None) -> np.ndarray:
+    def _key(self, seed: Optional[int]):
+        """Per-request sampling key: `seed` overrides the engine default
+        (the switching server threads a fresh per-request seed through
+        here so temperature>0 requests are independent draws)."""
+        return jax.random.PRNGKey(self.seed if seed is None else seed)
+
+    def generate(self, tokens, steps: int, patch_embeds=None,
+                 seed: Optional[int] = None) -> np.ndarray:
         """tokens: (B, S) prompt; returns (B, steps) generated ids."""
         B, S = tokens.shape
         t0 = time.perf_counter()
@@ -65,7 +72,7 @@ class ServingEngine:
         else:
             logits, caches = self._prefill(self.params, tokens)
             n_patch = 0
-        key = jax.random.PRNGKey(self.seed)
+        key = self._key(seed)
         tok = _sample(logits[:, -1], key, self.temperature)[:, None]
         jax.block_until_ready(tok)
         self.stats.prefill_s += time.perf_counter() - t0
@@ -86,7 +93,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def generate_paged(self, tokens, steps: int,
-                       page: int = 256) -> np.ndarray:
+                       page: int = 256,
+                       seed: Optional[int] = None) -> np.ndarray:
         """Paged-cache decode loop: the big cache is read-only per step
         (one donated active page); filled pages are committed every `page`
         steps.  Identical outputs to generate() — tested."""
@@ -97,7 +105,7 @@ class ServingEngine:
 
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, tokens)
-        key = jax.random.PRNGKey(self.seed)
+        key = self._key(seed)
         tok = _sample(logits[:, -1], key, self.temperature)[:, None]
         self.stats.prefill_s += time.perf_counter() - t0
 
@@ -146,7 +154,8 @@ class ServingEngine:
         return np.concatenate(out, axis=1)
 
     # ------------------------------------------------------------------
-    def generate_fused(self, tokens, steps: int) -> jax.Array:
+    def generate_fused(self, tokens, steps: int,
+                       seed: Optional[int] = None) -> jax.Array:
         """Whole decode loop in one XLA program (benchmark path)."""
         model, T = self.model, self.temperature
 
@@ -166,8 +175,7 @@ class ServingEngine:
                 body, (tok, caches, key), jnp.arange(steps))
             return toks[:, :, 0].T                       # (B, steps)
 
-        return jax.jit(run)(self.params, tokens,
-                            jax.random.PRNGKey(self.seed))
+        return jax.jit(run)(self.params, tokens, self._key(seed))
 
 
 def _sample(logits, key, temperature: float):

@@ -1,0 +1,256 @@
+"""Switch-aware asynchronous request scheduler.
+
+The paper's timing result — reconfiguration hidden behind execution — only
+materializes at serving scale if *something* orders the traffic so that
+(a) requests for the resident model run back-to-back (one switch amortized
+over many batches) and (b) the next model's weights stream into the shadow
+slot while the current streak executes.  A synchronous single-caller server
+leaves both to the client.  ``SwitchScheduler`` is that something:
+
+    clients ──submit(name, tokens)──▶ per-context queues
+                                         │   pick next context:
+                                         │   policy.rank_contexts
+                                         │   (queue pressure − load cost,
+                                         │    age-boosted for fairness)
+                                         ▼
+                                   service streak ──▶ SwitchableServer
+                                         │                 │
+                                         │   engine.prefetch(next ranked)
+                                         │   (shadow-slot load hidden
+                                         ▼    behind the active streak)
+                                      futures resolve
+
+All slot/eviction/prefetch decisions route through the engine's shared
+``ReconfigPolicy`` (``repro.core.policy``) — the scheduler only shapes the
+traffic.  Same-shape greedy requests inside a streak are stacked into one
+forward pass; everything else is served back-to-back after a single switch.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class _Request:
+    name: str
+    tokens: np.ndarray
+    steps: int
+    seed: int
+    future: Future
+    submitted_at: float
+
+
+class SwitchScheduler:
+    """Async front door over a ``SwitchableServer``.
+
+    ``submit`` enqueues and returns a ``Future``; one scheduler thread
+    drains per-context queues in policy-ranked order, coalescing each
+    chosen context's backlog into a single service streak and preloading
+    the next-ranked context into the shadow slot before the streak runs.
+
+    ``max_streak`` bounds how many requests one context may serve before
+    the scheduler re-ranks (starvation bound); ``age_weight`` converts
+    request age (seconds) into extra queue pressure so a low-traffic
+    context eventually wins over a flooded one.
+    """
+
+    def __init__(self, server, max_streak: int = 16,
+                 age_weight: float = 10.0, cost_weight: float = 1.0):
+        self.server = server
+        self.max_streak = max_streak
+        self.age_weight = age_weight
+        self.cost_weight = cost_weight
+        self._queues: dict[str, deque[_Request]] = defaultdict(deque)
+        self._cv = threading.Condition()
+        self._stopping = False
+        self._thread: Optional[threading.Thread] = None
+        self._load_cost: dict[str, float] = {}   # measured seconds, EMA
+        self.stats = {
+            "requests": 0, "batches": 0, "streaks": 0,
+            "stacked_requests": 0, "busy_seconds": 0.0,
+        }
+
+    # ------------------------------------------------------------- client
+    def submit(self, name: str, tokens, steps: int = 1,
+               seed: Optional[int] = None) -> Future:
+        """Enqueue one request; resolves to the (B, steps) output array."""
+        if name not in self.server.served():
+            raise KeyError(f"model {name!r} not registered")
+        fut: Future = Future()
+        req = _Request(name=name, tokens=np.asarray(tokens), steps=steps,
+                       seed=self.server.next_seed() if seed is None else seed,
+                       future=fut, submitted_at=time.perf_counter())
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("scheduler is stopped")
+            self._queues[name].append(req)
+            self.stats["requests"] += 1
+            self._cv.notify()
+        return fut
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "SwitchScheduler":
+        assert self._thread is None, "already started"
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="switch-scheduler")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop the loop; with ``drain`` every queued request is served
+        first, otherwise leftovers get a RuntimeError.  Requests that can
+        no longer drain (scheduler never started, or its thread died) are
+        always failed rather than left with futures that never resolve."""
+        with self._cv:
+            self._stopping = True
+            self._drain = drain
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        for q in self._queues.values():
+            while q:
+                q.popleft().future.set_exception(
+                    RuntimeError("scheduler stopped before serving this "
+                                 "request"))
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop(drain=exc[0] is None)
+
+    # ------------------------------------------------------------ ranking
+    def _pressures(self, now: float) -> dict[str, float]:
+        """Queue pressure per context: backlog size plus age boost (an old
+        request in a quiet queue counts as much as `age_weight`·seconds of
+        backlog, so no context starves)."""
+        out = {}
+        for name, q in self._queues.items():
+            if q:
+                age = now - q[0].submitted_at
+                out[name] = len(q) + self.age_weight * age
+        return out
+
+    def _ranked(self, now: float) -> list[str]:
+        return self.server.engine.policy.rank_contexts(
+            self._pressures(now), self._load_cost,
+            cost_weight=self.cost_weight)
+
+    def _note_load_cost(self, name: str, seconds: float):
+        prev = self._load_cost.get(name)
+        self._load_cost[name] = (seconds if prev is None
+                                 else 0.5 * prev + 0.5 * seconds)
+
+    # --------------------------------------------------------------- loop
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._stopping and not any(
+                        self._queues.values()):
+                    self._cv.wait(timeout=0.1)
+                if self._stopping and (not getattr(self, "_drain", True)
+                                       or not any(self._queues.values())):
+                    return
+                now = time.perf_counter()
+                ranked = self._ranked(now)
+                name = ranked[0]
+                streak: list[_Request] = []
+                q = self._queues[name]
+                while q and len(streak) < self.max_streak:
+                    streak.append(q.popleft())
+                # next context with pending work (after this streak drains)
+                upcoming = [n for n in ranked[1:] if self._queues[n]]
+                if not upcoming and q:
+                    upcoming = [name]        # more of the same backlog
+            try:
+                self._serve_streak(name, streak, upcoming)
+            except BaseException as e:       # backstop: never die with
+                for r in streak:             # unresolved futures behind
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+    def _serve_streak(self, name: str, streak: list[_Request],
+                      upcoming: list[str]):
+        engine = self.server.engine
+        t0 = time.perf_counter()
+        try:
+            was_resident = engine.policy.holds(name)
+            engine.preload(name)
+            engine.switch(name, wait=True)
+        except BaseException as e:           # context unloadable: fail the
+            for r in streak:                 # streak, keep the loop alive
+                if not r.future.done():
+                    r.future.set_exception(e)
+            return
+        if not was_resident:
+            self._note_load_cost(name, time.perf_counter() - t0)
+        # the paper's dynamic reconfiguration: next context streams into
+        # the shadow slot while this streak executes (policy picks victims).
+        # Prefetch is advisory: a failure must not take the streak down
+        # (the next streak pays a demand load instead).
+        try:
+            engine.prefetch(upcoming, limit=1)
+        except Exception:
+            pass
+        for group in self._stack(streak):
+            try:
+                out = self._run_group(name, group)
+            except BaseException as e:       # a bad batch fails only itself
+                for r in group:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                continue
+            off = 0
+            for r in group:
+                n = r.tokens.shape[0]
+                r.future.set_result(out[off:off + n])
+                off += n
+            self.stats["batches"] += 1
+        self.stats["streaks"] += 1
+        self.stats["busy_seconds"] += time.perf_counter() - t0
+
+    # ------------------------------------------------------------ batching
+    def _stack(self, streak: list[_Request]) -> list[list[_Request]]:
+        """Coalesce same-shape requests into joint forward passes.
+
+        Only greedy (temperature==0) contexts stack — stacked rows share
+        one sampling key, which would correlate temperature>0 draws.
+        Non-stackable requests run back-to-back, still amortizing the
+        switch across the streak.
+        """
+        sm = self.server._served[streak[0].name]
+        if sm.temperature > 0.0:
+            return [[r] for r in streak]
+        groups: dict[tuple, list[_Request]] = {}
+        order: list[tuple] = []
+        for r in streak:
+            key = (r.tokens.shape[1], r.steps)
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(r)
+        self.stats["stacked_requests"] += sum(
+            len(g) - 1 for g in groups.values() if len(g) > 1)
+        return [groups[k] for k in order]
+
+    def _run_group(self, name: str, group: list[_Request]) -> np.ndarray:
+        tokens = (group[0].tokens if len(group) == 1 else
+                  np.concatenate([r.tokens for r in group], axis=0))
+        return self.server.serve_batch(name, tokens, steps=group[0].steps,
+                                       seed=group[0].seed)
+
+    # ------------------------------------------------------------- report
+    def snapshot(self) -> dict:
+        engine = self.server.engine
+        eng = engine.stats
+        return {**self.stats, "switches": eng["switches"],
+                "loads": eng["loads"], "evictions": eng["evictions"],
+                "hidden_load_fraction": engine.hidden_load_fraction()}

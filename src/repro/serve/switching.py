@@ -4,13 +4,23 @@ serving tier.
 ``SwitchableServer`` keeps N model contexts behind a ``ContextSwitchEngine``:
 the active model serves batched requests while the next model's weights
 stream into the shadow slot; switching models is an O(1) activation flip.
-Per-context decode state (KV caches / SSM states) is snapshotted with the
-slot, which goes beyond the paper (an FPGA loses flip-flop state on switch).
+Which context loads/evicts when is decided by the engine's shared
+``ReconfigPolicy`` — the same object the analytical simulator runs.
+
+One ``ServingEngine`` (jitted prefill/decode) is cached per context, so a
+multi-step request never re-compiles; sampling threads a fresh per-request
+seed so temperature>0 requests are independent draws.  Per-context decode
+state (KV caches / SSM states) can be snapshotted with the slot, which goes
+beyond the paper (an FPGA loses flip-flop state on switch).
+
+For request-level scheduling (queueing, coalescing, shadow-slot prefetch
+under mixed traffic) see ``repro.serve.scheduler.SwitchScheduler``.
 """
 from __future__ import annotations
 
+import itertools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
@@ -18,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.context import ContextDescriptor, ContextSwitchEngine
+from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
 from repro.serve.engine import ServingEngine, _sample
 
@@ -32,11 +43,14 @@ class ServedModel:
 
 
 class SwitchableServer:
-    def __init__(self, num_slots: int = 2, mesh=None):
-        self.engine = ContextSwitchEngine(num_slots=num_slots, mesh=mesh)
+    def __init__(self, num_slots: int = 2, mesh=None,
+                 policy: Optional[ReconfigPolicy] = None):
+        self.engine = ContextSwitchEngine(num_slots=num_slots, mesh=mesh,
+                                          policy=policy)
         self._served: dict[str, ServedModel] = {}
-        self._gen_fns: dict[str, Callable] = {}
+        self._engines: dict[str, ServingEngine] = {}   # jit cache per context
         self._state_snapshots: dict[str, Any] = {}
+        self._req_seq = itertools.count()
         self.log: list[dict] = []
 
     # ------------------------------------------------------------------
@@ -50,46 +64,78 @@ class SwitchableServer:
         self.engine.register(ContextDescriptor(
             name=sm.name, apply_fn=apply_fn, weights_fn=sm.weights_fn))
 
+    def served(self) -> list[str]:
+        return list(self._served)
+
     def preload(self, name: str, block: bool = False):
         return self.engine.preload(name, block=block)
 
+    def next_seed(self) -> int:
+        """Monotonic per-request sampling seed (identical prompts at
+        temperature>0 must be independent draws, not clones)."""
+        return next(self._req_seq)
+
+    def _serving_engine(self, name: str, params) -> ServingEngine:
+        """Per-context ServingEngine cache: prefill/decode are jitted once
+        at first use ("synthesis time"), then reused across every request
+        and every switch — only the params pointer is refreshed (the slot
+        may have been evicted and reloaded since)."""
+        eng = self._engines.get(name)
+        if eng is None:
+            sm = self._served[name]
+            eng = ServingEngine(sm.model, params, sm.max_len, sm.temperature)
+            self._engines[name] = eng
+        else:
+            eng.params = params
+        return eng
+
     # ------------------------------------------------------------------
-    def serve_batch(self, name: str, tokens, steps: int = 1) -> np.ndarray:
+    def serve_batch(self, name: str, tokens, steps: int = 1,
+                    seed: Optional[int] = None) -> np.ndarray:
         """Serve one batch on `name`, switching contexts if needed.
 
         The switch is O(1) when `name` is resident (paper case 2); if it is
         still loading, the visible stall is only the *remaining* load time
         (paper case 3 — reconfiguration partially hidden).
         """
-        sm = self._served[name]
         t0 = time.perf_counter()
-        self.engine.preload(name)            # no-op if resident
-        sw = self.engine.switch(name, wait=True)
-        slot = self.engine.active
-        key = jax.random.PRNGKey(0)
-        if steps == 1:
-            out = np.asarray(self.engine.run(jnp.asarray(tokens), key))
+        if seed is None:
+            seed = self.next_seed()
+        active = self.engine.active
+        if active is not None and active.name == name:
+            sw = 0.0                         # already selected: no flip
         else:
-            eng = ServingEngine(sm.model, slot.buffers, sm.max_len,
-                                sm.temperature)
-            out = eng.generate(jnp.asarray(tokens), steps)
+            self.engine.preload(name)        # no-op if resident
+            sw = self.engine.switch(name, wait=True)
+        slot = self.engine.active
+        if steps == 1:
+            out = np.asarray(self.engine.run(jnp.asarray(tokens),
+                                             jax.random.PRNGKey(seed)))
+        else:
+            eng = self._serving_engine(name, slot.buffers)
+            out = eng.generate(jnp.asarray(tokens), steps, seed=seed)
         self.log.append({"name": name, "switch_s": sw,
                          "total_s": time.perf_counter() - t0,
-                         "batch": int(np.asarray(tokens).shape[0])})
+                         "batch": int(np.asarray(tokens).shape[0]),
+                         "steps": steps, "seed": seed})
         return out
 
     def serve_stream(self, requests: list[tuple[str, Any]],
                      lookahead: bool = True) -> list[np.ndarray]:
         """Serve a stream of (model_name, batch) requests.
 
-        With ``lookahead`` the next request's model is preloaded while the
-        current batch executes — the paper's dynamic reconfiguration.
+        With ``lookahead`` the policy streams the next needed model into
+        the shadow slot while the current batch executes — the paper's
+        dynamic reconfiguration (victim choice and all, via
+        ``engine.prefetch``; no inline slot logic here).
         """
         outs = []
         for i, (name, toks) in enumerate(requests):
-            if lookahead and i + 1 < len(requests) and \
-                    requests[i + 1][0] != name:
-                self.engine.preload(requests[i + 1][0])
+            self.engine.preload(name)
+            self.engine.switch(name, wait=True)
+            if lookahead:
+                self.engine.prefetch([n for n, _ in requests[i + 1:]],
+                                     limit=1)   # hidden behind this batch
             outs.append(self.serve_batch(name, toks))
         return outs
 

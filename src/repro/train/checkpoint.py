@@ -24,10 +24,26 @@ from typing import Any, Optional
 import jax
 import msgpack
 import numpy as np
-import zstandard
 
-_ZC = zstandard.ZstdCompressor(level=3)
-_ZD = zstandard.ZstdDecompressor()
+try:
+    import zstandard
+    _ZC = zstandard.ZstdCompressor(level=3)
+    _ZD = zstandard.ZstdDecompressor()
+    _DECOMP_ERROR: type[Exception] = zstandard.ZstdError
+except ModuleNotFoundError:          # hermetic env: stdlib zlib, same API
+    import zlib
+
+    class _ZlibCodec:
+        @staticmethod
+        def compress(b: bytes) -> bytes:
+            return zlib.compress(b, 3)
+
+        @staticmethod
+        def decompress(b: bytes) -> bytes:
+            return zlib.decompress(b)
+
+    _ZC = _ZD = _ZlibCodec()         # type: ignore[assignment]
+    _DECOMP_ERROR = zlib.error
 
 
 def _path_str(path) -> str:
@@ -191,7 +207,7 @@ class CheckpointManager:
                 extra = checkpoint_extra(self._path(s))
                 return tree, extra
             except (IOError, KeyError, ValueError,
-                    msgpack.UnpackException, zstandard.ZstdError) as e:
+                    msgpack.UnpackException, _DECOMP_ERROR) as e:
                 last_err = e
                 continue
         raise FileNotFoundError(

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig
+from repro.distributed.compat import shard_map
 from repro.distributed.mesh import batch_spec, data_axis_names
 from repro.distributed.sharding import (
     DEFAULT_RULES, ShardingRules, logical_to_spec, shard_params_tree)
@@ -203,7 +204,7 @@ def make_train_step(model: LM, run_cfg: RunConfig,
             loss = jax.lax.pmean(loss, "pod")
             return loss, m, grads, ef
 
-        wrapped = jax.shard_map(
+        wrapped = shard_map(
             per_pod, mesh=mesh,
             in_specs=(P(), P("pod"), P()),
             out_specs=(P(), P(), P(), P()),

@@ -20,6 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_arch, override, reduced  # noqa: E402
 from repro.configs.base import OptimizerConfig, ParallelConfig, RunConfig  # noqa: E402
+from repro.distributed.compat import shard_map  # noqa: E402
 from repro.distributed.mesh import make_mesh  # noqa: E402
 from repro.distributed.sharding import DEFAULT_RULES, shard_params_tree  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
@@ -96,7 +97,7 @@ def check_compression():
         red, ef = compressed_psum_mean({"g": g[0]}, "pod", {"g": ef[0]})
         return red["g"], ef["g"]
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P("pod"), P("pod")),
         out_specs=(P(), P("pod")), check_vma=False))
     red, ef_out = f(g, ef)

@@ -1,0 +1,213 @@
+"""The unified reconfiguration policy: unit semantics, simulator
+invariants under random schedules, and the "simulate what you fly"
+property — the discrete-event simulator and a live ContextSwitchEngine
+driven through the same ``ReconfigPolicy`` code must agree on
+eviction/prefetch ordering.  (Seeded ``random`` schedules, not
+hypothesis: the hermetic CI image has no third-party strategy libs.)"""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.context import ContextDescriptor, ContextSwitchEngine
+from repro.core.policy import EnsureDecision, ReconfigPolicy
+from repro.core.scheduler import (
+    Run, run_schedule_live, simulate_conventional, simulate_dynamic,
+    simulate_preloaded)
+
+
+# ------------------------------------------------------------------ unit
+def test_lru_eviction_order():
+    p = ReconfigPolicy(num_slots=2)
+    for n in ("a", "b"):
+        assert p.ensure(n).load
+        p.complete(n)
+    p.activate("a")
+    p.activate("b")                       # LRU order now: a, b
+    d = p.ensure("c", active="b")
+    assert d.evictions == ("a",)          # least-recently activated goes
+    assert p.holds("c") and not p.holds("a")
+
+
+def test_active_never_evicted():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("a"), p.complete("a"), p.activate("a")
+    p.ensure("b"), p.complete("b")
+    # both slots full; only the non-active resident is a candidate
+    d = p.ensure("c", active="a")
+    assert d.evictions == ("b",)
+
+
+def test_pending_load_is_pinned():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("a"), p.complete("a"), p.activate("a")
+    p.ensure("b", active="a")             # queued, never completed
+    assert p.is_pending("b")
+    assert p.ensure("c", active="a") is None   # a active, b pinned: refuse
+    assert not p.holds("c")               # refusal must not mutate
+
+
+def test_protect_shields_earlier_needs():
+    p = ReconfigPolicy(num_slots=3)
+    for n in ("a", "b", "x"):
+        p.ensure(n), p.complete(n)
+    for n in ("x", "b"):
+        p.activate(n)                     # LRU: a, x, b
+    d = p.ensure("c", active="b", protect=["a"])
+    assert d.evictions == ("x",)          # a is needed sooner: spared
+
+
+def test_prefetch_plans_in_need_order_and_stops_when_full():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("a"), p.complete("a"), p.activate("a")
+    decs = p.prefetch(["b", "c", "b"], active="a")
+    # one free slot: b fits, c would need to evict b (needed sooner) or
+    # the active a -> planning stops
+    assert [d.net for d in decs] == ["b"]
+    assert p.is_pending("b") and not p.holds("c")
+
+
+def test_prefetch_limit_and_dedup():
+    p = ReconfigPolicy(num_slots=4)
+    p.ensure("a"), p.complete("a"), p.activate("a")
+    decs = p.prefetch(["b", "b", "c", "d"], active="a", limit=2)
+    assert [d.net for d in decs] == ["b", "c"]
+
+
+def test_ensure_noop_when_held():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("a")
+    assert p.ensure("a") == EnsureDecision(net="a")
+    p.complete("a")
+    assert p.ensure("a") == EnsureDecision(net="a")
+
+
+def test_activate_requires_residency():
+    p = ReconfigPolicy(num_slots=2)
+    with pytest.raises(KeyError):
+        p.activate("ghost")
+
+
+def test_rank_contexts_prefers_resident_on_pressure_tie():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("warm"), p.complete("warm")
+    ranked = p.rank_contexts({"warm": 3.0, "cold": 3.0},
+                             load_cost={"cold": 1.0, "warm": 1.0})
+    assert ranked[0] == "warm"            # resident => zero switch-in cost
+    # overwhelming pressure still wins over residency
+    ranked = p.rank_contexts({"warm": 1.0, "cold": 5.0},
+                             load_cost={"cold": 1.0})
+    assert ranked[0] == "cold"
+
+
+def test_rank_contexts_deterministic_tiebreak():
+    p = ReconfigPolicy(num_slots=2)
+    assert p.rank_contexts({"b": 1.0, "a": 1.0}) == ["a", "b"]
+    assert p.rank_contexts({"a": 0.0, "b": 1.0}) == ["b"]   # idle dropped
+
+
+def test_release_and_abort_free_slots():
+    p = ReconfigPolicy(num_slots=2)
+    p.ensure("a"), p.complete("a")
+    p.ensure("b")
+    p.abort("b")
+    p.release("a")
+    assert p.occupied() == 0
+
+
+# ------------------------------------------- simulator invariants (random)
+def _random_case(rng: random.Random, max_nets=3):
+    nets = [f"n{i}" for i in range(rng.randint(2, max_nets))]
+    loads = {f"n{i}": rng.uniform(0.1, 30.0) for i in range(max_nets)}
+    sched = [Run(rng.choice(nets), rng.uniform(0.1, 50.0),
+                 rng.randint(1, 4))
+             for _ in range(rng.randint(1, 12))]
+    return sched, loads
+
+
+def test_dynamic_between_preloaded_and_conventional_random():
+    rng = random.Random(7)
+    for _ in range(300):
+        sched, loads = _random_case(rng)
+        conv = simulate_conventional(sched, loads)
+        pre = simulate_preloaded(sched, loads)
+        dyn = simulate_dynamic(sched, loads, num_slots=2)
+        assert pre <= dyn + 1e-9 <= conv + 1e-9
+
+
+def test_more_slots_never_hurt_random():
+    rng = random.Random(11)
+    for _ in range(200):
+        sched, loads = _random_case(rng)
+        slots = rng.randint(2, 4)
+        d = simulate_dynamic(sched, loads, num_slots=slots)
+        d2 = simulate_dynamic(sched, loads, num_slots=slots + 1)
+        assert d2 <= d + 1e-9
+
+
+def test_zero_load_time_equalizes_random():
+    rng = random.Random(13)
+    for _ in range(100):
+        sched, loads = _random_case(rng)
+        zero = {k: 0.0 for k in loads}
+        assert abs(simulate_dynamic(sched, zero)
+                   - simulate_conventional(sched, zero)) < 1e-9
+
+
+# --------------------------------------- sim/live decision-trace agreement
+def _instant_desc(name):
+    return ContextDescriptor(
+        name=name, apply_fn=lambda p, x: x + p["w"],
+        weights_fn=lambda: {"w": jnp.ones((4,), jnp.float32)})
+
+
+def test_sim_and_live_engine_agree_on_policy_trace():
+    """The tentpole property: `simulate_dynamic` and a live
+    ``ContextSwitchEngine`` driven through the same schedule produce the
+    exact same (load, evict, activate) decision sequence, because both
+    route every decision through ``ReconfigPolicy``.  Zero-cost loads +
+    ``settle`` serialize the live engine's decision points so the
+    comparison is deterministic."""
+    rng = random.Random(1234)
+    nets = ["a", "b", "c"]
+    for trial in range(25):
+        slots = rng.choice([2, 2, 3])
+        sched = [Run(rng.choice(nets), 0.0, 1)
+                 for _ in range(rng.randint(1, 10))]
+
+        sim_pol = ReconfigPolicy(slots)
+        simulate_dynamic(sched, {n: 0.0 for n in nets},
+                         num_slots=slots, policy=sim_pol)
+
+        live_pol = ReconfigPolicy(slots)
+        eng = ContextSwitchEngine(num_slots=slots, policy=live_pol)
+        for n in nets:
+            eng.register(_instant_desc(n))
+        inputs = {n: (jnp.zeros((4,), jnp.float32),) for n in nets}
+        run_schedule_live(eng, sched, inputs, dynamic=True,
+                          lookahead=None, settle=True)
+        eng.shutdown()
+
+        assert sim_pol.actions() == live_pol.actions(), (
+            trial, [r.net for r in sched], slots,
+            sim_pol.actions(), live_pol.actions())
+
+
+def test_live_dynamic_runs_correct_outputs():
+    """Policy-driven eviction/prefetch never serves stale weights."""
+    scales = {"a": 1.0, "b": 2.0, "c": 3.0}
+    eng = ContextSwitchEngine(num_slots=2)
+    for n, s in scales.items():
+        eng.register(ContextDescriptor(
+            name=n, apply_fn=lambda p, x: x * p["w"],
+            weights_fn=lambda s=s: {"w": jnp.full((4,), s)}))
+    sched = [Run(n, 0.0, 1) for n in "abcacba"]
+    x = jnp.ones((4,))
+    for r in sched:
+        eng.preload(r.net, allow_evict_active=True)
+        eng.switch(r.net, wait=True)
+        out = np.asarray(eng.run(x))
+        np.testing.assert_allclose(out, scales[r.net])
+        eng.prefetch([q.net for q in sched], limit=1)
+    eng.shutdown()

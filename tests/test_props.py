@@ -1,11 +1,14 @@
 """Hypothesis property tests for system invariants beyond the scheduler:
 sharding-spec legality, checkpoint roundtrips, quantization bounds, ring
 cache indexing."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (hermetic env)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec

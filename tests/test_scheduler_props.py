@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) for the reconfiguration scheduler —
 the paper's timing model invariants must hold for *arbitrary* schedules."""
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (hermetic env); "
+    "seeded-random policy properties run in test_policy.py")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.scheduler import (
