@@ -65,8 +65,10 @@ def _run_queue(server, reqs):
                 lambda _, i=i: done_at.__setitem__(
                     i, time.perf_counter()))
             futs.append(f)
-        for f in futs:
+        for i, f in enumerate(futs):
             f.result()
+            if done_at[i] == 0.0:    # result() can beat the done-callback
+                done_at[i] = time.perf_counter()
     return time.perf_counter() - t0, [d - t0 for d in done_at]
 
 

@@ -11,15 +11,13 @@ import itertools
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.calibrate import (
     CASE2_BATCHES, NET_NAMES, TARGETS, calibrated, case2_savings,
     case3_savings, patched_savings)
 from repro.core.context import ContextDescriptor, ContextSwitchEngine
 from repro.core.scheduler import (
-    Run, run_schedule_live, simulate_conventional, simulate_dynamic,
-    simulate_preloaded, time_saving)
+    Run, run_schedule_live, time_saving)
 
 
 def _fmt(v):

@@ -8,7 +8,6 @@ import numpy as np
 from benchmarks._members import build_cascade_members
 from repro.core.cascade import SuperSubCascade
 from repro.core.context import ContextSwitchEngine
-from repro.core.scheduler import Run, simulate_conventional, simulate_dynamic
 from repro.train.data import HierarchicalTask
 
 

@@ -1,20 +1,26 @@
 """Benchmark driver: one module per paper table/figure + ours.
 
 ``PYTHONPATH=src python -m benchmarks.run``   prints ``name,value,notes``
-CSV; ``--only fig6`` filters by prefix.
+CSV; ``--only fig6`` filters by prefix; ``--json [DIR]`` additionally
+writes one machine-readable ``BENCH_<name>.json`` per module (throughput
+and latency fields pulled out of the rows) so the perf trajectory can be
+tracked across PRs by diffing the emitted files.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 
 def modules():
-    from benchmarks import (bench_serve_queue, bench_switch,
-                            fig5_critical_path, fig5_primitives, fig6_cases,
-                            fig6b_accuracy, figS1_pipeline, roofline_table)
+    from benchmarks import (bench_continuous, bench_serve_queue,
+                            bench_switch, fig5_critical_path,
+                            fig5_primitives, fig6_cases, fig6b_accuracy,
+                            figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -23,14 +29,39 @@ def modules():
         ("figS1_pipeline", figS1_pipeline.run),
         ("bench_switch", bench_switch.run),
         ("bench_serve_queue", bench_serve_queue.run),
+        ("bench_continuous", bench_continuous.run),
         ("roofline_table", roofline_table.run),
     ]
+
+
+def _json_report(name: str, rows: list[tuple], wall_s: float) -> dict:
+    """Shape a module's CSV rows into the tracked-metrics JSON: every row
+    keyed by name, with throughput / latency / hidden-load convenience
+    sections so cross-PR tooling doesn't parse notes strings."""
+    report: dict = {"name": name, "wall_s": round(wall_s, 3),
+                    "rows": {}, "throughput": {}, "latency": {}}
+    for row in rows:
+        n, v, note = (tuple(row) + ("",))[:3]
+        report["rows"][str(n)] = {"value": v, "notes": str(note)}
+        key = str(n)
+        if "req_per_s" in key or "tok_per_s" in key or "per_s" in key:
+            report["throughput"][key] = v
+        if "latency" in key or key.endswith("_wall_s"):
+            report["latency"][key] = v
+        if "hidden_load_fraction" in key:
+            report.setdefault("hidden_load", {})[key] = v
+    return report
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="also write BENCH_<name>.json per module to DIR")
     args = ap.parse_args(argv)
+    if args.json is not None:
+        os.makedirs(args.json, exist_ok=True)
     failures = 0
     print("name,value,notes")
     for name, fn in modules():
@@ -38,14 +69,25 @@ def main(argv=None) -> int:
             continue
         t0 = time.perf_counter()
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 n, v, note = (tuple(row) + ("",))[:3]
                 print(f"{n},{v},{note}")
         except Exception:
             failures += 1
+            rows = None
             print(f"{name},ERROR,")
             traceback.print_exc()
-        print(f"_{name}_wall_s,{time.perf_counter() - t0:.2f},")
+        wall = time.perf_counter() - t0
+        print(f"_{name}_wall_s,{wall:.2f},")
+        if args.json is not None:
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            report = (_json_report(name, rows, wall) if rows is not None
+                      else {"name": name, "error": True,
+                            "wall_s": round(wall, 3)})
+            with open(path, "w") as f:
+                json.dump(report, f, indent=1, sort_keys=True)
+                f.write("\n")
     return 1 if failures else 0
 
 

@@ -11,10 +11,9 @@ executes (Fig S1a's 8-cycles-for-4-images pipeline).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -29,7 +29,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.core.policy import ReconfigPolicy
 
@@ -427,8 +426,28 @@ class ContextSwitchEngine:
         slot = self.active
         if slot is None:
             raise RuntimeError("no ACTIVE context; call switch() first")
-        desc = self._contexts[slot.name]
-        fn = self._get_executable(desc, inputs)
+        fn = self._get_executable(self._contexts[slot.name], inputs)
+        return self.run_step(fn, *inputs, slot=slot)
+
+    def run_step(self, fn, *inputs, block: bool = True, slot=None):
+        """Token-granular execution: run one externally-jitted program
+        against the ACTIVE slot's weight buffers, with the engine's
+        hidden-load (overlap) accounting.
+
+        This is how the continuous-batching step engine drives the fabric:
+        each decode step is one ``run_step`` call, so a context switch
+        between any two steps is an O(1) select flip and a shadow-slot
+        load overlaps *steps*, not whole batches.  ``fn`` receives the
+        slot buffers as its first argument (``fn(params, *inputs)``) — the
+        engine never captures weights, the slot may be evicted and
+        reloaded between calls.  ``slot`` pins a pre-resolved slot so a
+        caller that looked up an executable for it (``run``) can't race a
+        concurrent switch into mismatched fn/buffers.
+        """
+        if slot is None:
+            slot = self.active
+        if slot is None:
+            raise RuntimeError("no ACTIVE context; call switch() first")
         t0 = time.perf_counter()
         with self._lock:
             self._runs_in_flight += 1
@@ -436,7 +455,8 @@ class ContextSwitchEngine:
                 self._run_started_at = t0
         try:
             out = fn(slot.buffers, *inputs)
-            out = jax.block_until_ready(out)
+            if block:
+                out = jax.block_until_ready(out)
         finally:
             now = time.perf_counter()
             with self._lock:

@@ -9,7 +9,6 @@ replaces SPICE/VTR, per DESIGN.md §9 assumption (3)/(4).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 # ---------------------------------------------------------------------------
 # Fig 5(a): area (lambda^2) — layouts drawn with lambda design rules

@@ -11,7 +11,6 @@ stage->stage+1 with ppermute.  Bubble fraction = (S-1)/(M+S-1).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

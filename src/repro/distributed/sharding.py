@@ -12,7 +12,6 @@ code runs on a 1-device CPU test mesh and the 512-chip production mesh.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Optional, Union
 

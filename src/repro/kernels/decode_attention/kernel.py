@@ -8,9 +8,11 @@ TPU-native design:
   * grid = (B, Hkv, S/bk): the cache-scan axis is innermost/"arbitrary";
     the running-softmax state (m, l, acc) persists in VMEM scratch, so HBM
     traffic is exactly one read of the K/V cache + one vector write.
-  * ``pos`` arrives via scalar prefetch (SMEM): tiles beyond the valid
-    length are skipped *before* their DMA is issued — the bandwidth saving
-    that makes early-decode steps cheap.
+  * ``pos`` arrives via scalar prefetch (SMEM) as a per-request ``(B,)``
+    vector: tiles beyond a request's valid length are skipped *before*
+    their DMA is issued — the bandwidth saving that makes early-decode
+    steps cheap, now per batch row (continuous batching mixes requests at
+    very different positions in one step).
 """
 from __future__ import annotations
 
@@ -28,8 +30,9 @@ DEFAULT_BK = 512
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale: float, ring: bool,
                    bk: int, nk: int, S: int):
+    b = pl.program_id(0)
     j = pl.program_id(2)
-    pos = pos_ref[0]
+    pos = pos_ref[b]
 
     @pl.when(j == 0)
     def _init():
@@ -73,7 +76,8 @@ def decode_attention_kernel(q, k, v, pos, *, ring: bool = False,
                             scale: float | None = None,
                             block_k: int = DEFAULT_BK,
                             interpret: bool = False) -> jax.Array:
-    """q: (B, Hkv, G, hd); k/v: (B, Hkv, S, hd); pos: () int32."""
+    """q: (B, Hkv, G, hd); k/v: (B, Hkv, S, hd); pos: (B,) int32 — the
+    valid length per batch row (scalars are broadcast by the wrapper)."""
     B, Hkv, G, hd = q.shape
     S = k.shape[2]
     bk = min(block_k, S)
@@ -108,4 +112,4 @@ def decode_attention_kernel(q, k, v, pos, *, ring: bool = False,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="decode_attention",
-    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v)
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)), q, k, v)

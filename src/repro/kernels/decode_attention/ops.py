@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import (
     DEFAULT_BK, decode_attention_kernel)
@@ -20,7 +19,13 @@ def _on_tpu() -> bool:
 def decode_attention(q, k, v, pos, *, ring: bool = False,
                      scale: float | None = None, block_k: int = DEFAULT_BK,
                      interpret: bool | None = None) -> jax.Array:
-    """q: (B, H, hd); k/v: (B, Hkv, S, hd); pos: () int32 -> (B, H, hd).
+    """q: (B, H, hd); k/v: (B, Hkv, S, hd); pos: () or (B,) int32
+    -> (B, H, hd).
+
+    ``pos`` may be a scalar (whole batch at one position — the classic
+    run-to-completion decode loop) or a per-request vector (continuous
+    batching: every row is at its own position; masking and tile skipping
+    are per row).
 
     Pads the cache length to a block multiple; padded slots have index
     > pos for the non-ring case and are excluded by an explicit bound for

@@ -1,7 +1,9 @@
 """Pure-jnp oracle for flash-decode: one query token vs a KV cache.
 
 Layout: q (B, H, hd); k/v cache (B, Hkv, S, hd); ``pos`` is the position of
-the current token (its k/v already written at its slot).
+the current token (its k/v already written at its slot) — a scalar, or a
+per-request (B,) vector when rows sit at different positions (continuous
+batching).
 
 Validity:
   * full cache   — slots [0, pos] are valid.
@@ -27,11 +29,13 @@ def decode_reference(q, k, v, pos, *, ring: bool = False,
     qh = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bngd,bnsd->bngs", qh, k.astype(jnp.float32)) * scale
     idx = jnp.arange(S)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))[
+        :, None, None, None]                               # (B,1,1,1)
     if ring:
         valid = (idx <= pos % S) | (pos >= S)
     else:
         valid = idx <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bngs,bnsd->bngd", p, v.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)

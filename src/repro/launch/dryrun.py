@@ -40,7 +40,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo import collective_bytes
-from repro.analysis.roofline import V5E, model_flops, roofline_terms, utilization
+from repro.analysis.roofline import model_flops, roofline_terms, utilization
 from repro.configs import (
     ASSIGNED_ARCHS, SHAPES, cell_is_runnable, get_arch, override)
 from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
@@ -49,8 +49,8 @@ from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
 from repro.launch.mesh import make_mesh_auto, make_production_mesh
 from repro.launch.specs import (
     abstract_sharded_cache, abstract_sharded_params, decode_rules,
-    default_parallel, fit_batch_axes, input_specs)
-from repro.models.model import LM, build_model
+    default_parallel, input_specs)
+from repro.models.model import build_model
 from repro.train.trainer import make_train_step
 
 

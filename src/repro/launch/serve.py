@@ -2,7 +2,7 @@
 
 ``python -m repro.launch.serve --archs supersub-super,supersub-sub --steps 4``
 
-Two modes:
+Three modes:
 
   * ``--mode queue`` (default) — the async ``SwitchScheduler``: requests
     for all models are submitted up front; the scheduler coalesces
@@ -10,6 +10,11 @@ Two modes:
     pressure + load cost, and streams it into the shadow slot while the
     active streak executes.  Reports throughput, p50/p99 latency, and the
     hidden-load fraction.
+  * ``--mode continuous`` — the token-granular ``ContinuousScheduler``:
+    requests join/leave a persistent slot-pooled step engine at every
+    decode step; context choice is re-decided at step boundaries and the
+    next context streams into the shadow slot behind the remaining steps
+    (``--pool`` sets the slot-pool width).
   * ``--mode sync``  — the old synchronous round-robin driver (worst case
     for switching; kept as the baseline the paper compares against).
 
@@ -28,7 +33,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced as make_reduced
 from repro.models.model import build_model
-from repro.serve.scheduler import SwitchScheduler
+from repro.serve.scheduler import ContinuousScheduler, SwitchScheduler
 from repro.serve.switching import ServedModel, SwitchableServer
 
 
@@ -71,7 +76,10 @@ def request_stream(names, cfgs, n_requests, batch, seq, seed):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--archs", default="supersub-super,supersub-sub")
-    ap.add_argument("--mode", choices=("queue", "sync"), default="queue")
+    ap.add_argument("--mode", choices=("queue", "continuous", "sync"),
+                    default="queue")
+    ap.add_argument("--pool", type=int, default=8,
+                    help="continuous mode: step-engine slot-pool width")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -86,8 +94,10 @@ def main(argv=None) -> int:
                                args.batch, args.seq, args.seed))
 
     t0 = time.perf_counter()
-    if args.mode == "queue":
-        with SwitchScheduler(server) as sched:
+    if args.mode in ("queue", "continuous"):
+        sched_cls = (SwitchScheduler if args.mode == "queue" else
+                     lambda s: ContinuousScheduler(s, batch_size=args.pool))
+        with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]
             lat = []

@@ -12,9 +12,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig, ParallelConfig
-from repro.distributed.mesh import batch_spec
 from repro.distributed.sharding import (
-    DEFAULT_RULES, ShardingRules, logical_to_spec, shard_params_tree)
+    DEFAULT_RULES, ShardingRules, shard_params_tree)
 from repro.models.model import LM
 
 

@@ -13,7 +13,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced as make_reduced
 from repro.configs.base import RunConfig, OptimizerConfig, ParallelConfig

@@ -363,20 +363,31 @@ def commit_page(big: BigKV, act: ActKV, pos) -> BigKV:
 
 
 def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
-    """One-step decode.  x: (B, 1, D); pos: scalar int32 (same for batch).
+    """One-step decode.  x: (B, 1, D); pos: scalar int32 (whole batch at
+    one position — the run-to-completion loop) or (B,) int32 (continuous
+    batching: every row is at its own position).
 
     Full-attention: cache length == max_len, slot = pos.
     Sliding-window: cache length == window (ring), slot = pos % window.
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _qkv(params, x, positions, cfg)     # q: (B,1,H,hd)
     S = cache.k.shape[2]
     slot = pos % S if cfg.sliding_window > 0 else pos
-    k_new = jax.lax.dynamic_update_slice(
-        cache.k, k.swapaxes(1, 2).astype(cache.k.dtype), (0, 0, slot, 0))
-    v_new = jax.lax.dynamic_update_slice(
-        cache.v, v.swapaxes(1, 2).astype(cache.v.dtype), (0, 0, slot, 0))
+    kT = k.swapaxes(1, 2).astype(cache.k.dtype)   # (B, Hkv, 1, hd)
+    vT = v.swapaxes(1, 2).astype(cache.v.dtype)
+    if per_row:
+        # per-row write slot: scatter one token into each row's cache line
+        rows = jnp.arange(B)
+        slot = jnp.minimum(slot, S - 1)           # freed slots park at S-1
+        k_new = cache.k.at[rows, :, slot, :].set(kT[:, :, 0, :])
+        v_new = cache.v.at[rows, :, slot, :].set(vT[:, :, 0, :])
+    else:
+        k_new = jax.lax.dynamic_update_slice(cache.k, kT, (0, 0, slot, 0))
+        v_new = jax.lax.dynamic_update_slice(cache.v, vT, (0, 0, slot, 0))
 
     import repro.kernels as kernels
     if kernels.use_kernels():
@@ -387,17 +398,18 @@ def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
                                interpret=interp)[:, None]
     else:
         idx = jnp.arange(S)
+        pv = pos[:, None] if per_row else pos     # broadcast -> (B,S) / (S,)
         if cfg.sliding_window > 0:
-            valid = (idx <= pos % S) | (pos >= S)  # ring not yet full -> mask
+            valid = (idx <= pv % S) | (pv >= S)   # ring not yet full -> mask
         else:
-            valid = idx <= pos
+            valid = idx <= pv
         out = decode_sdpa(q, k_new, v_new, valid, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return out, KVCache(k=k_new, v=v_new)
 
 
 def decode_sdpa(q, k_cache, v_cache, valid, cfg: ArchConfig):
-    """q: (B,1,H,hd); caches: (B,Hkv,S,hd); valid: (S,) bool."""
+    """q: (B,1,H,hd); caches: (B,Hkv,S,hd); valid: (S,) or (B,S) bool."""
     B, _, H, hd = q.shape
     Hkv = k_cache.shape[1]
     G = H // Hkv
@@ -405,7 +417,9 @@ def decode_sdpa(q, k_cache, v_cache, valid, cfg: ArchConfig):
     scores = jnp.einsum("bngk,bnsk->bngs", qh,
                         k_cache.astype(qh.dtype)).astype(jnp.float32)
     scores = scores / jnp.sqrt(hd).astype(jnp.float32)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    if valid.ndim == 1:
+        valid = valid[None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bngs,bnsk->bngk", probs, v_cache.astype(q.dtype))
     return out.reshape(B, 1, H, hd)

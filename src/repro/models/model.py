@@ -12,7 +12,6 @@ Execution modes:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -308,8 +307,9 @@ class LM:
         return logits, caches
 
     def decode_step(self, params, caches, tokens, pos):
-        """One decode step.  tokens: (B, 1) int32; pos: scalar int32 —
-        position of this token.  Returns (logits (B,1,V), new caches)."""
+        """One decode step.  tokens: (B, 1) int32; pos: scalar int32
+        (whole batch at one position) or (B,) int32 (continuous batching:
+        per-request positions).  Returns (logits (B,1,V), new caches)."""
         cfg = self.cfg
         x = self._embed_in(params, tokens)
         x, aux, caches = self._run_blocks(params, x, None, "decode", pos,
@@ -359,6 +359,18 @@ class LM:
         return self._head(params, x), acts_new
 
     # ---------------------------------------------------------------- cache
+    def insert_cache_rows(self, caches, rows, slots):
+        """Per-slot cache reset/admission for the continuous-batching step
+        engine: write ``rows`` (a decode-cache pytree for b requests,
+        leaves (R, b, ...)) into batch rows ``slots`` ((b,) int32) of
+        ``caches`` (leaves (R, B, ...)).  Only the named rows change — a
+        freed slot is recycled by overwriting it with a fresh prefill, so
+        admission never disturbs in-flight requests."""
+        slots = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(
+            lambda c, r: c.at[:, slots].set(r.astype(c.dtype)),
+            caches, rows)
+
     def init_paged_cache(self, batch: int, max_len: int,
                          page: int = layers.DEFAULT_PAGE,
                          abstract: bool = False):

@@ -20,7 +20,6 @@ their residual only (standard dropping MoE).
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -8,7 +8,6 @@ State for decode: conv ring (B, d_in, d_conv-1) + ssm state (B, d_in, N) f32.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax

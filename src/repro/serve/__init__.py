@@ -1,3 +1,3 @@
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import ServingEngine, StepEngine
 from repro.serve.switching import SwitchableServer, ServedModel
-from repro.serve.scheduler import SwitchScheduler
+from repro.serve.scheduler import ContinuousScheduler, SwitchScheduler

@@ -1,18 +1,35 @@
-"""Batched serving engine: prefill + decode loops over the model zoo.
+"""Serving execution layer: continuous-batching step engine + batch loops.
 
-Two decode drivers:
-  * ``generate``             — host loop calling the jitted single step
-                               (realistic serving; cache donated every step)
-  * ``generate_fused``       — whole decode loop as one ``lax.scan`` (bench)
+The core abstraction is ``StepEngine`` — a persistent, fixed-shape decode
+batch advanced one token at a time:
 
-Sampling: greedy or temperature; deterministic per request id.
+  * ``BatchState``   — slot-pooled KV cache (one cache row per slot, a
+                       free-list over rows) + per-slot token/position, all
+                       under ONE jitted ``step(params, state) -> (tokens,
+                       state)`` with a fixed batch shape (no recompiles as
+                       requests come and go)
+  * ``admit``        — prefill a prompt into a free slot's cache row
+                       (``LM.insert_cache_rows``: only that row changes)
+  * ``step``         — one decode step for every live slot; per-request
+                       positions go down to the attention kernel as a
+                       ``(B,)`` vector
+  * retirement       — EOS / step-limit frees the slot back to the pool
+
+Requests join, leave, and (one level up, in ``serve/scheduler.py``) switch
+model contexts at *step* boundaries — the paper's hide-the-load principle
+at token granularity instead of batch granularity.
+
+``ServingEngine`` keeps the classic run-to-completion API; ``generate`` is
+now a thin wrapper that admits the whole batch into a ``StepEngine`` and
+steps it to completion (token-for-token identical — tested).  Sampling:
+greedy or temperature; draws match ``jax.random.categorical`` exactly,
+including single-row admissions (the per-row gumbel trick below).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +49,240 @@ class ServeStats:
         return self.tokens / self.decode_s if self.decode_s else 0.0
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching step engine
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Device half of the batch state (a pytree; donated every step).
+
+    ``key``/``t`` implement the same cumulative fold-in schedule the
+    run-to-completion loop uses, so a batch admitted at t=0 samples
+    token-for-token identically to ``generate``.
+    """
+    caches: Any           # decode-cache pytree, leaves (R, B, ...)
+    tok: jax.Array        # (B, 1) int32 — last sampled token per slot
+    pos: jax.Array        # (B,) int32  — cache position `tok` is fed at
+    key: jax.Array        # PRNG key, folded once per step
+    t: jax.Array          # () int32    — global step counter
+
+
+@dataclass
+class Generation:
+    """Host-side handle for one admitted request (one slot row)."""
+    rid: int
+    prompt_len: int
+    max_new: int
+    slot: int = -1
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    meta: Any = None                      # scheduler payload (futures etc.)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+
+class StepEngine:
+    """Continuous-batching decode engine for one model context.
+
+    Fixed batch shape ``batch_size``; requests occupy slots.  All device
+    work happens in three jitted programs: ``_admit_<S>`` (per prompt
+    length), ``_step``, and the cache-row insert fused into admit.  The
+    engine is deliberately un-timed and thread-free: callers (the classic
+    ``generate`` wrapper, the token-granular ``ContinuousScheduler``)
+    decide when to step, when to switch contexts, and what to measure.
+
+    ``params`` is passed per call: under the context-switching server the
+    weights live in a ``ContextSwitchEngine`` slot that may be evicted and
+    reloaded between steps; the engine never captures them.
+    """
+
+    def __init__(self, model: LM, batch_size: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.seed = seed
+        self.eos_id = eos_id
+
+        B, T, V = batch_size, temperature, model.cfg.vocab_size
+
+        def _step(params, state: DecodeState, live):
+            key = jax.random.fold_in(state.key, state.t)
+            logits, caches = model.decode_step(params, state.caches,
+                                               state.tok, state.pos)
+            nxt = _sample(logits[:, -1], key, T)              # (B,)
+            pos = jnp.where(live, state.pos + 1, state.pos)
+            pos = jnp.minimum(pos, max_len - 1)               # parked slots
+            return nxt, DecodeState(caches=caches, tok=nxt[:, None],
+                                    pos=pos, key=key, t=state.t + 1)
+
+        def _admit(params, state: DecodeState, tokens, slots):
+            """Prefill (b, S) prompts into cache rows `slots`; sample their
+            first tokens with the *current* (unfolded) key — the same draw
+            ``generate`` makes from its prefill logits.  Row r of a
+            (B, V) gumbel field reproduces ``categorical``'s row r exactly,
+            so a single-row admission in a half-full batch samples the
+            same token it would in a full batched prefill."""
+            S = tokens.shape[1]
+            logits, rows = model.prefill(params, tokens, max_len)
+            last = logits[:, -1]                               # (b, V) f32
+            if T > 0.0:
+                g = jax.random.gumbel(state.key, (B, V), jnp.float32)
+                first = jnp.argmax(last / T + g[slots], axis=-1)
+            else:
+                first = jnp.argmax(last, axis=-1)
+            first = first.astype(jnp.int32)
+            caches = model.insert_cache_rows(state.caches, rows, slots)
+            tok = state.tok.at[slots].set(first[:, None])
+            pos = state.pos.at[slots].set(jnp.int32(S))
+            return first, DecodeState(caches=caches, tok=tok, pos=pos,
+                                      key=state.key, t=state.t)
+
+        self._step_fn = jax.jit(_step, donate_argnums=(1,))
+        self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
+
+        # Execution hook: when set, every device program runs as
+        # ``runner(fn, params, *args)`` — the continuous scheduler points
+        # this at ``ContextSwitchEngine.run_step`` so steps execute
+        # against the ACTIVE slot's buffers with hidden-load accounting.
+        self.runner = None
+
+        self.state: Optional[DecodeState] = None
+        self.slots: list[Optional[Generation]] = [None] * B
+        self._free: list[int] = list(range(B))
+        self._live = np.zeros(B, dtype=bool)
+        self._rid = 0
+        self.reset()
+
+    # ------------------------------------------------------------- lifecycle
+    def reset(self, seed: Optional[int] = None):
+        """Empty pool + restarted key schedule.  Cache buffers are reused
+        when they exist: a freed slot's stale row is dead weight that the
+        next admission overwrites in full, so only the first reset pays
+        the allocation (generate() resets per call — keep it cheap)."""
+        B = self.batch_size
+        caches = None
+        if self.state is not None and not any(
+                getattr(x, "is_deleted", lambda: False)()
+                for x in jax.tree.leaves(self.state.caches)):
+            caches = self.state.caches   # reuse, unless a failed step
+        if caches is None:               # donated them out from under us
+            caches = self.model.init_cache(B, self.max_len)
+        self.state = DecodeState(
+            caches=caches,
+            tok=jnp.zeros((B, 1), jnp.int32),
+            pos=jnp.zeros((B,), jnp.int32),
+            key=jax.random.PRNGKey(self.seed if seed is None else seed),
+            t=jnp.zeros((), jnp.int32))
+        self.slots = [None] * B
+        self._free = list(range(B))
+        self._live[:] = False
+
+    def _call(self, fn, params, *args):
+        if self.runner is None:
+            return fn(params, *args)
+        return self.runner(fn, params, *args)
+
+    # -------------------------------------------------------------- queries
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def live_slots(self) -> int:
+        return self.batch_size - len(self._free)
+
+    def live(self) -> list[Generation]:
+        return [g for g in self.slots if g is not None]
+
+    # ------------------------------------------------------------- admission
+    def admit(self, params, tokens, max_new: int,
+              metas: Optional[list] = None) -> list[Generation]:
+        """Admit (b, S) prompt rows into b free slots (prefill + first
+        token).  Raises if the pool lacks room or the request would run
+        past the cache; callers gate on ``free_slots()``."""
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        b, S = tokens.shape
+        if b > len(self._free):
+            raise RuntimeError(f"admit({b}) with {len(self._free)} free "
+                               "slots")
+        if S + max_new > self.max_len:
+            raise ValueError(f"prompt {S} + {max_new} new tokens exceeds "
+                             f"max_len {self.max_len}")
+        slots = [self._free.pop(0) for _ in range(b)]
+        try:
+            first, self.state = self._call(
+                self._admit_fn, params, self.state,
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(slots, jnp.int32))
+        except BaseException:
+            self._free[0:0] = slots      # failed admit must not leak slots
+            raise
+        first = np.asarray(first)
+        gens = []
+        for i, s in enumerate(slots):
+            g = Generation(rid=self._rid, prompt_len=S, max_new=max_new,
+                           slot=s, meta=metas[i] if metas else None)
+            self._rid += 1
+            g.tokens.append(int(first[i]))
+            self.slots[s] = g
+            self._live[s] = True
+            gens.append(g)
+        if self._retire_done(gens):
+            # a slot freed with no step in between (steps==1 / EOS at
+            # admission): advance the key so a same-boundary re-admission
+            # of that slot cannot reuse this draw field.  The salt lives
+            # above 2^30, disjoint from step folds (which use t).
+            self.state = self.state._replace(key=jax.random.fold_in(
+                self.state.key, (1 << 30) | int(self.state.t)))
+        return gens
+
+    # ---------------------------------------------------------------- step
+    def step(self, params) -> list[Generation]:
+        """One decode step for every live slot.  Returns the generations
+        that finished (EOS or step limit) at this boundary; their slots
+        are already back on the free-list."""
+        if not self._live.any():
+            return []
+        nxt, self.state = self._call(self._step_fn, params, self.state,
+                                     jnp.asarray(self._live))
+        nxt = np.asarray(nxt)
+        stepped = []
+        for s in range(self.batch_size):
+            g = self.slots[s]
+            if g is None:
+                continue
+            g.tokens.append(int(nxt[s]))
+            stepped.append(g)
+        return self._retire_done(stepped)
+
+    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
+        finished = []
+        for g in gens:
+            eos = self.eos_id is not None and g.tokens[-1] == self.eos_id
+            if len(g.tokens) >= g.max_new or eos:
+                g.done = True
+                self.slots[g.slot] = None
+                self._live[g.slot] = False
+                self._free.append(g.slot)
+                finished.append(g)
+        return finished
+
+    def drain(self, params) -> list[Generation]:
+        """Step until the pool is empty; returns everything finished."""
+        out = []
+        while self.live_slots():
+            out.extend(self.step(params))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# classic run-to-completion engine (wrappers over StepEngine)
+# ---------------------------------------------------------------------------
+
 class ServingEngine:
     def __init__(self, model: LM, params, max_len: int,
                  temperature: float = 0.0, seed: int = 0):
@@ -41,6 +292,7 @@ class ServingEngine:
         self.temperature = temperature
         self.seed = seed
         self.stats = ServeStats()
+        self._step_engines: dict[int, StepEngine] = {}   # per batch size
 
         def _prefill(params, tokens, patch_embeds=None):
             return model.prefill(params, tokens, max_len,
@@ -61,17 +313,51 @@ class ServingEngine:
         here so temperature>0 requests are independent draws)."""
         return jax.random.PRNGKey(self.seed if seed is None else seed)
 
+    def step_engine(self, batch_size: int) -> StepEngine:
+        """The continuous-batching engine behind ``generate`` (cached per
+        batch shape; jitted programs compile once per shape)."""
+        eng = self._step_engines.get(batch_size)
+        if eng is None:
+            eng = StepEngine(self.model, batch_size, self.max_len,
+                             temperature=self.temperature, seed=self.seed)
+            self._step_engines[batch_size] = eng
+        return eng
+
     def generate(self, tokens, steps: int, patch_embeds=None,
                  seed: Optional[int] = None) -> np.ndarray:
-        """tokens: (B, S) prompt; returns (B, steps) generated ids."""
+        """tokens: (B, S) prompt; returns (B, steps) generated ids.
+
+        Thin wrapper over ``StepEngine``: the whole batch is admitted at
+        t=0 and stepped to completion — the degenerate (static-batch) case
+        of continuous batching, with identical sampling draws."""
+        if patch_embeds is not None:
+            return self._generate_vision(tokens, steps, patch_embeds, seed)
+        tokens = np.asarray(tokens)
+        B, S = tokens.shape
+        eng = self.step_engine(B)
+
+        t0 = time.perf_counter()
+        eng.reset(seed=self.seed if seed is None else seed)
+        gens = eng.admit(self.params, tokens, max_new=steps)
+        jax.block_until_ready(eng.state.tok)
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        while eng.live_slots():
+            eng.step(self.params)
+        jax.block_until_ready(eng.state.tok)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.tokens += B * steps
+        return np.stack([np.asarray(g.tokens, np.int32) for g in gens])
+
+    def _generate_vision(self, tokens, steps: int, patch_embeds,
+                         seed: Optional[int]) -> np.ndarray:
+        """Vision-frontend path: patch embeds prefill with the prompt and
+        shift every position by n_patch; decode runs the legacy loop."""
         B, S = tokens.shape
         t0 = time.perf_counter()
-        if patch_embeds is not None:
-            logits, caches = self._prefill(self.params, tokens, patch_embeds)
-            n_patch = patch_embeds.shape[1]
-        else:
-            logits, caches = self._prefill(self.params, tokens)
-            n_patch = 0
+        logits, caches = self._prefill(self.params, tokens, patch_embeds)
+        n_patch = patch_embeds.shape[1]
         key = self._key(seed)
         tok = _sample(logits[:, -1], key, self.temperature)[:, None]
         jax.block_until_ready(tok)
@@ -107,6 +393,7 @@ class ServingEngine:
         logits, caches = self._prefill(self.params, tokens)
         key = self._key(seed)
         tok = _sample(logits[:, -1], key, self.temperature)[:, None]
+        jax.block_until_ready(tok)       # else prefill leaks into decode_s
         self.stats.prefill_s += time.perf_counter() - t0
 
         # convert the dense prefill cache into (bigs, acts)

@@ -1,4 +1,14 @@
-"""Switch-aware asynchronous request scheduler.
+"""Switch-aware asynchronous request schedulers.
+
+Two front doors over a ``SwitchableServer``:
+
+  * ``SwitchScheduler``     — streak-batched: coalesces each context's
+    backlog into run-to-completion batches (one switch per streak).
+  * ``ContinuousScheduler`` — token-granular: a persistent ``StepEngine``
+    per context; requests join/leave at every decode step, and the
+    active context is re-decided at step boundaries (drain-vs-stack),
+    with the next context streaming into the shadow slot while steps of
+    the active one execute.
 
 The paper's timing result — reconfiguration hidden behind execution — only
 materializes at serving scale if *something* orders the traffic so that
@@ -249,8 +259,354 @@ class SwitchScheduler:
 
     # ------------------------------------------------------------- report
     def snapshot(self) -> dict:
-        engine = self.server.engine
-        eng = engine.stats
-        return {**self.stats, "switches": eng["switches"],
-                "loads": eng["loads"], "evictions": eng["evictions"],
-                "hidden_load_fraction": engine.hidden_load_fraction()}
+        return _snapshot(self.stats, self.server.engine)
+
+
+def _snapshot(stats: dict, engine) -> dict:
+    """Scheduler stats merged with the context engine's switching stats —
+    one shape for every scheduler's report."""
+    eng = engine.stats
+    return {**stats, "switches": eng["switches"],
+            "context_changes": eng["context_changes"],
+            "loads": eng["loads"], "evictions": eng["evictions"],
+            "hidden_load_fraction": engine.hidden_load_fraction()}
+
+
+# ---------------------------------------------------------------------------
+# token-granular continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Inflight:
+    """One submitted request fanned out over `need` slot rows."""
+    req: _Request
+    need: int
+    rows: dict = None
+
+    def __post_init__(self):
+        self.rows = {}
+
+
+class ContinuousScheduler:
+    """Token-granular front door: one persistent ``StepEngine`` per
+    context, advanced one decode step at a time.
+
+    Every iteration of the loop is one step boundary, where ALL of the
+    paper's hide-the-load machinery happens at token granularity:
+
+      * admission    — queued requests prefill into free slots of the
+                       active context's pool (no padding to the slowest
+                       request: a finished row frees its slot immediately)
+      * retirement   — EOS / step-limit rows leave, futures resolve
+      * ranking      — ``policy.rank_contexts`` on queue pressure (age
+                       boosted) + a paused context's stranded live rows
+      * drain-vs-stack — if another context's pressure beats the active
+                       one by ``switch_margin``, stop admitting (drain)
+                       and start its shadow-slot preload behind the
+                       remaining steps; keep stacking otherwise
+      * switch       — O(1) select flip once the pool drains (or
+                       immediately past ``preempt_margin`` — paused rows
+                       stay frozen in their engine's state and resume on
+                       switch-back)
+
+    Decode state persists per context across switches (beyond-paper: an
+    FPGA loses flip-flop state on reconfiguration; our slots are HBM).
+    Sampling uses the engine-level key schedule, so per-request seeds are
+    not honored here — temperature>0 rows still get independent draws.
+    """
+
+    def __init__(self, server, batch_size: int = 8,
+                 age_weight: float = 10.0, cost_weight: float = 1.0,
+                 switch_margin: float = 1.5, preempt_margin: float = 6.0):
+        self.server = server
+        self.batch_size = batch_size
+        self.age_weight = age_weight
+        self.cost_weight = cost_weight
+        self.switch_margin = switch_margin
+        self.preempt_margin = preempt_margin
+        self._queues: dict[str, deque[_Request]] = defaultdict(deque)
+        self._inflight: dict[int, _Inflight] = {}
+        self._inflight_seq = 0          # monotonic key: ids recycle, this
+        self._cv = threading.Condition()                      # never does
+        self._stopping = False
+        self._drain = True
+        self._thread: Optional[threading.Thread] = None
+        self._load_cost: dict[str, float] = {}
+        self.stats = {
+            "requests": 0, "steps": 0, "admitted_rows": 0,
+            "drain_switches": 0, "preempt_switches": 0,
+            "busy_seconds": 0.0,
+        }
+
+    # ------------------------------------------------------------- client
+    def submit(self, name: str, tokens, steps: int = 1,
+               seed: Optional[int] = None) -> Future:
+        """Enqueue one request; resolves to the (b, steps) output array.
+
+        Per-request seeds are not supported: the pool shares one key
+        schedule (rows get independent draws, but a request's draw depends
+        on which slot and step boundary it lands on).  Rejecting the
+        argument beats silently ignoring it — see ROADMAP's per-slot key
+        column follow-on for the reproducible version."""
+        if seed is not None:
+            raise ValueError(
+                "ContinuousScheduler does not honor per-request seeds; "
+                "use SwitchScheduler for seed-reproducible sampling")
+        if name not in self.server.served():
+            raise KeyError(f"model {name!r} not registered")
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        b, S = tokens.shape
+        if b > self.batch_size:
+            raise ValueError(f"request batch {b} > pool size "
+                             f"{self.batch_size}")
+        sm = self.server._served[name]
+        if S + steps > sm.max_len:
+            raise ValueError(f"prompt {S} + {steps} steps exceeds "
+                             f"max_len {sm.max_len}")
+        fut: Future = Future()
+        req = _Request(name=name, tokens=tokens, steps=steps,
+                       seed=self.server.next_seed(),
+                       future=fut, submitted_at=time.perf_counter())
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("scheduler is stopped")
+            self._queues[name].append(req)
+            self.stats["requests"] += 1
+            self._cv.notify()
+        return fut
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "ContinuousScheduler":
+        assert self._thread is None, "already started"
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="continuous-scheduler")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        with self._cv:
+            self._stopping = True
+            self._drain = drain
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        err = RuntimeError("scheduler stopped before serving this request")
+        for q in self._queues.values():
+            while q:
+                q.popleft().future.set_exception(err)
+        for inf in list(self._inflight.values()):   # admitted, unfinished
+            if not inf.req.future.done():
+                inf.req.future.set_exception(err)
+        self._inflight.clear()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop(drain=exc[0] is None)
+
+    # ------------------------------------------------------------ engines
+    def _engine(self, name: str):
+        eng = self.server.step_engine(name, self.batch_size)
+        if eng.runner is None:
+            cse = self.server.engine
+            # every device program (prefill + step) routes through the
+            # context engine so shadow-slot loads overlap *steps* and the
+            # hidden-load accounting sees token-granular execution; the
+            # params slot is filled with the ACTIVE buffers by run_step.
+            eng.runner = lambda fn, params, *args: cse.run_step(fn, *args)
+        return eng
+
+    def _live_engines(self):
+        out = {}
+        for name in self.server.served():
+            eng = self.server._step_engines.get((name, self.batch_size))
+            if eng is not None and eng.live_slots():
+                out[name] = eng
+        return out
+
+    # ------------------------------------------------------------ ranking
+    def _pressures(self, now: float) -> dict[str, float]:
+        out = {}
+        with self._cv:
+            for name, q in self._queues.items():
+                if q:
+                    age = now - q[0].submitted_at
+                    out[name] = len(q) + self.age_weight * age
+        # a paused context's stranded rows count as pressure too — they
+        # must eventually be resumed and retired
+        for name, eng in self._live_engines().items():
+            out[name] = out.get(name, 0.0) + eng.live_slots()
+        return out
+
+    def _note_load_cost(self, name: str, seconds: float):
+        prev = self._load_cost.get(name)
+        self._load_cost[name] = (seconds if prev is None
+                                 else 0.5 * prev + 0.5 * seconds)
+
+    # --------------------------------------------------------------- loop
+    def _has_work(self) -> bool:
+        return (any(self._queues.values())
+                or bool(self._live_engines()))
+
+    def _loop(self):
+        cur: Optional[str] = None
+        while True:
+            with self._cv:
+                if not self._has_work():
+                    if self._stopping:
+                        return
+                    self._cv.wait(timeout=0.05)
+                    continue
+                if self._stopping and not self._drain:
+                    return
+            try:
+                cur = self._tick(cur)
+            except BaseException as e:       # fail the context's requests,
+                self._fail_context(cur, e)   # keep the loop alive
+                cur = None
+
+    def _tick(self, cur: Optional[str]) -> Optional[str]:
+        """One step boundary: rank, maybe switch, admit, step, retire."""
+        now = time.perf_counter()
+        pressures = self._pressures(now)
+        if not pressures:
+            return cur
+        policy = self.server.engine.policy
+        ranked = policy.rank_contexts(pressures, self._load_cost,
+                                      cost_weight=self.cost_weight)
+        cand = ranked[0]
+        stack = True                          # keep admitting `cur`
+        if cur is None:
+            cur = self._try_activate(cand, cur)
+            if cur is None:
+                return None
+        elif cand != cur:
+            cur_p = pressures.get(cur, 0.0)
+            cand_p = pressures.get(cand, 0.0)
+            eng = self._engine(cur)
+            if eng.live_slots() == 0 and not self._queues[cur]:
+                nxt = self._try_activate(cand, cur)   # free flip: nothing
+                if nxt == cand:                       # to drain
+                    self.stats["drain_switches"] += 1
+                cur = nxt
+            elif cand_p > self.switch_margin * max(cur_p, 1e-9):
+                # drain decision: stop stacking; stream the winner into
+                # the shadow slot behind the remaining steps (advisory —
+                # a failed prefetch just means a demand load later)
+                stack = False
+                try:
+                    self.server.engine.prefetch([cand], limit=1)
+                except Exception:
+                    pass
+                drained = eng.live_slots() == 0
+                preempt = cand_p > self.preempt_margin * max(cur_p, 1e-9)
+                if drained or (preempt and policy.is_resident(cand)):
+                    nxt = self._try_activate(cand, cur)
+                    if nxt == cand:
+                        self.stats["drain_switches" if drained
+                                   else "preempt_switches"] += 1
+                    cur = nxt
+        eng = self._engine(cur)
+        if stack:
+            self._admit(cur, eng)
+        if eng.live_slots():
+            t0 = time.perf_counter()
+            finished = eng.step(None)         # params come from run_step
+            self.stats["steps"] += 1
+            self.stats["busy_seconds"] += time.perf_counter() - t0
+            self._resolve(finished)
+        else:
+            time.sleep(0.0005)                # waiting on a load/queue
+        return cur
+
+    def _activate(self, name: str) -> str:
+        t0 = time.perf_counter()
+        was_resident = self.server.engine.policy.holds(name)
+        self.server.engine.preload(name)
+        self.server.engine.switch(name, wait=True)
+        if not was_resident:
+            self._note_load_cost(name, time.perf_counter() - t0)
+        return name
+
+    def _try_activate(self, name: str, cur: Optional[str]) -> Optional[str]:
+        """Activate `name`; on failure (unloadable context) fail ITS
+        requests — queued, in flight, and stranded rows — so its pressure
+        drains and the loop doesn't retry the same broken load forever.
+        Returns the new active context (`cur` unchanged on failure)."""
+        try:
+            return self._activate(name)
+        except BaseException as e:
+            self._fail_context(name, e)   # also drops its engine's rows
+            return cur
+
+    # ---------------------------------------------------------- admission
+    def _admit(self, name: str, eng):
+        """Fill free slots from `name`'s queue (whole requests only: a
+        request's rows prefill together, so its draws and MoE routing
+        match the run-to-completion path)."""
+        while True:
+            with self._cv:
+                q = self._queues[name]
+                if not q or q[0].tokens.shape[0] > eng.free_slots():
+                    return
+                req = q.popleft()
+            b = req.tokens.shape[0]
+            inf = _Inflight(req=req, need=b)
+            key = self._inflight_seq
+            self._inflight_seq += 1
+            self._inflight[key] = inf
+            try:
+                gens = eng.admit(None, req.tokens, max_new=req.steps,
+                                 metas=[(key, i) for i in range(b)])
+            except BaseException as e:
+                del self._inflight[key]
+                req.future.set_exception(e)
+                continue
+            self.stats["admitted_rows"] += b
+            self._resolve([g for g in gens if g.done])
+
+    def _resolve(self, finished):
+        for g in finished:
+            key, row = g.meta
+            inf = self._inflight.get(key)
+            if inf is None:
+                continue
+            inf.rows[row] = g.tokens
+            if len(inf.rows) == inf.need:
+                del self._inflight[key]
+                out = np.stack([np.asarray(inf.rows[i], np.int32)
+                                for i in range(inf.need)])
+                if not inf.req.future.done():
+                    inf.req.future.set_result(out)
+
+    def _fail_context(self, cur: Optional[str], exc: BaseException):
+        """Fail everything belonging to `cur` (all contexts when None):
+        queued requests, in-flight requests, and the context's engine
+        state — a failed request's rows must not keep stepping, or their
+        later retirement would route into the wrong inflight record."""
+        with self._cv:
+            reqs = []
+            if cur is not None:
+                q = self._queues[cur]
+                while q:
+                    reqs.append(q.popleft())
+        for key, inf in list(self._inflight.items()):
+            if cur is None or inf.req.name == cur:
+                self._inflight.pop(key, None)
+                if not inf.req.future.done():
+                    inf.req.future.set_exception(exc)
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(exc)
+        for (name, bsz), eng in list(self.server._step_engines.items()):
+            if bsz == self.batch_size and (cur is None or name == cur) \
+                    and eng.live_slots():
+                eng.reset()
+
+    # ------------------------------------------------------------- report
+    def snapshot(self) -> dict:
+        return _snapshot(self.stats, self.server.engine)

@@ -30,7 +30,7 @@ import numpy as np
 from repro.core.context import ContextDescriptor, ContextSwitchEngine
 from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
-from repro.serve.engine import ServingEngine, _sample
+from repro.serve.engine import ServingEngine, StepEngine, _sample
 
 
 @dataclass
@@ -49,6 +49,7 @@ class SwitchableServer:
                                           policy=policy)
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
+        self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B)
         self._state_snapshots: dict[str, Any] = {}
         self._req_seq = itertools.count()
         self.log: list[dict] = []
@@ -87,6 +88,22 @@ class SwitchableServer:
             self._engines[name] = eng
         else:
             eng.params = params
+        return eng
+
+    def step_engine(self, name: str, batch_size: int) -> StepEngine:
+        """Per-context continuous-batching engine (jitted once per pool
+        shape at first use).  Its decode state — slot-pooled KV rows,
+        positions, free-list — persists across context switches, so a
+        paused context resumes exactly where its last step left off;
+        weights are NOT captured (every call runs against the engine
+        slot's current buffers via the scheduler's runner hook)."""
+        key = (name, batch_size)
+        eng = self._step_engines.get(key)
+        if eng is None:
+            sm = self._served[name]
+            eng = StepEngine(sm.model, batch_size, sm.max_len,
+                             temperature=sm.temperature)
+            self._step_engines[key] = eng
         return eng
 
     # ------------------------------------------------------------------

@@ -13,10 +13,8 @@ restart on a different topology).
 from __future__ import annotations
 
 import hashlib
-import json
 import os
 import re
-import shutil
 import threading
 import time
 from typing import Any, Optional

@@ -11,10 +11,8 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

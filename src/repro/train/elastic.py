@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
-from repro.distributed.sharding import DEFAULT_RULES, shard_params_tree
+from repro.distributed.sharding import DEFAULT_RULES
 from repro.models.model import LM
 from repro.train.checkpoint import CheckpointManager
 from repro.train.trainer import init_state, state_shardings

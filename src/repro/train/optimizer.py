@@ -5,8 +5,7 @@ shardings (FSDP'd moments for free).  Updates are fully jit-compatible.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +23,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig
 from repro.distributed.compat import shard_map
-from repro.distributed.mesh import batch_spec, data_axis_names
 from repro.distributed.sharding import (
-    DEFAULT_RULES, ShardingRules, logical_to_spec, shard_params_tree)
+    DEFAULT_RULES, ShardingRules, shard_params_tree)
 from repro.models.model import LM
 from repro.train.optimizer import adamw_init, adamw_update, make_schedule
 from repro.train.checkpoint import CheckpointManager

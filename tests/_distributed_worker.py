@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_arch, override, reduced  # noqa: E402
 from repro.configs.base import OptimizerConfig, ParallelConfig, RunConfig  # noqa: E402

@@ -5,7 +5,7 @@ import pytest
 from repro.analysis.hlo import collective_bytes, parse_collectives
 from repro.analysis.kernelcost import flash_attention_cost
 from repro.analysis.roofline import (
-    V5E, model_flops, roofline_terms, utilization)
+    model_flops, roofline_terms, utilization)
 from repro.configs import SHAPES, get_arch
 
 

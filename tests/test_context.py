@@ -1,6 +1,5 @@
 """The paper's contribution: ContextSwitchEngine slot semantics, overlap,
 and the non-volatile context store."""
-import threading
 import time
 
 import jax
@@ -9,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.context import (
-    ContextDescriptor, ContextState, ContextStore, ContextSwitchEngine)
+    ContextDescriptor, ContextStore, ContextSwitchEngine)
 
 
 def _desc(name, scale, delay=0.0):
@@ -173,6 +172,46 @@ def test_partial_reconfiguration_delta_load():
     eng.switch("base")
     out_b = eng.run(jnp.ones((2, 256)))
     np.testing.assert_allclose(np.asarray(out_b), 256 * 256 * 1.0)
+    eng.shutdown()
+
+
+def test_delta_load_assembles_exactly_a_full_load():
+    """Partial reconfiguration end state == full reconfiguration end
+    state: the delta context's assembled slot must match, leaf for leaf,
+    what a from-scratch full load of the same weights produces — while
+    only the delta bytes cross the host->device link."""
+    backbone = {"backbone": jnp.ones((64, 64)),
+                "head": jnp.ones((64, 8)),
+                "norm": {"w": jnp.full((64,), 0.5)}}
+    delta = {"head": jnp.full((64, 8), 2.0),
+             "norm": {"w": jnp.full((64,), 0.25)}}   # nested dicts merge
+    full = {**backbone, **delta}
+
+    eng = ContextSwitchEngine(num_slots=3)
+    eng.register(ContextDescriptor(
+        name="base", apply_fn=lambda p, x: x, weights_fn=lambda: backbone))
+    eng.register(ContextDescriptor(
+        name="spec", apply_fn=lambda p, x: x, weights_fn=lambda: delta,
+        base="base"))
+    eng.register(ContextDescriptor(
+        name="spec-full", apply_fn=lambda p, x: x,
+        weights_fn=lambda: full))
+    eng.preload("base", block=True)
+    b0 = eng.stats["bytes_loaded"]
+    spec_slot = eng.preload("spec", block=True).result()
+    delta_bytes = eng.stats["bytes_loaded"] - b0
+    assert delta_bytes == sum(x.nbytes for x in jax.tree.leaves(delta))
+    full_slot = eng.preload("spec-full", block=True).result()
+
+    # identical structure and values; the untouched backbone tensor is the
+    # base slot's device buffer (zero-copy on device)
+    assert (jax.tree.structure(spec_slot.buffers)
+            == jax.tree.structure(full_slot.buffers))
+    for a, b in zip(jax.tree.leaves(spec_slot.buffers),
+                    jax.tree.leaves(full_slot.buffers)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    base_slot = eng._find_slot("base")
+    assert spec_slot.buffers["backbone"] is base_slot.buffers["backbone"]
     eng.shutdown()
 
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from conftest import patch_for, reduced_arch, tokens_for
-from repro.configs import ASSIGNED_ARCHS, get_arch, override, reduced
+from repro.configs import ASSIGNED_ARCHS, get_arch, override
 from repro.models import xlstm as xl
 from repro.models.model import build_model
 
@@ -216,7 +216,7 @@ def test_paged_decode_matches_dense(name):
             continue
         k, v = caches[key].k, caches[key].v        # (R, B, Hkv, S, hd)
         R, B, Hkv, Smax, hd = k.shape
-        from repro.models.layers import ActKV, BigKV
+        from repro.models.layers import BigKV
         bigs[key] = BigKV(k=k.reshape(R, B, Hkv, Smax // page, page, hd),
                           v=v.reshape(R, B, Hkv, Smax // page, page, hd))
 

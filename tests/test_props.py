@@ -6,12 +6,11 @@ import pytest
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (hermetic env)")
 import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
+from repro.distributed.sharding import logical_to_spec
 
 
 class FakeMesh:

@@ -1,14 +1,10 @@
 """Sharding-rule unit behaviour (single device; multi-device semantics are
 covered by tests/test_distributed.py subprocesses and the dry-run)."""
-import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.distributed.sharding import (
-    DEFAULT_RULES, ShardingRules, logical_to_spec)
+    DEFAULT_RULES, logical_to_spec)
 
 
 class FakeMesh:

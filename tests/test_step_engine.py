@@ -1,0 +1,214 @@
+"""Continuous-batching step engine: equivalence with the classic
+run-to-completion loop, slot-pool isolation, and the token-granular
+scheduler end to end."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine, StepEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = reduced_arch("tinyllama-1.1b")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    return cfg, m, p
+
+
+# ---------------------------------------------------------------------------
+# equivalence with generate()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_step_engine_matches_generate(tiny_lm, temperature):
+    """A batch of same-context requests admitted one by one at t=0 and
+    stepped to completion emits token-for-token what generate() emits for
+    the whole batch — greedy and seeded temperature (the per-row gumbel
+    draw reproduces ``jax.random.categorical`` rows exactly)."""
+    cfg, m, p = tiny_lm
+    prompt = np.asarray(tokens_for(cfg, batch=3, seq=16))
+    ref = ServingEngine(m, p, max_len=48, temperature=temperature,
+                        seed=5).generate(prompt, steps=6)
+
+    eng = StepEngine(m, batch_size=3, max_len=48,
+                     temperature=temperature, seed=5)
+    gens = []
+    for r in range(3):                      # one admission per request
+        gens += eng.admit(p, prompt[r], max_new=6)
+    while eng.live_slots():
+        eng.step(p)
+    out = np.stack([np.asarray(g.tokens) for g in gens])
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_generate_is_step_engine_wrapper(tiny_lm):
+    """generate() == generate_fused() still holds now that generate runs
+    on the step engine (greedy, whole batch admitted at t=0)."""
+    cfg, m, p = tiny_lm
+    eng = ServingEngine(m, p, max_len=48, temperature=0.0)
+    prompt = tokens_for(cfg, batch=2, seq=16)
+    host = eng.generate(prompt, steps=6)
+    fused = np.asarray(eng.generate_fused(prompt, steps=6))
+    np.testing.assert_array_equal(host, fused)
+
+
+# ---------------------------------------------------------------------------
+# slot-pool semantics
+# ---------------------------------------------------------------------------
+
+def _solo(m, p, prompt, steps, batch_size=2, max_len=64):
+    eng = StepEngine(m, batch_size=batch_size, max_len=max_len)
+    g = eng.admit(p, prompt, max_new=steps)[0]
+    while eng.live_slots():
+        eng.step(p)
+    return np.asarray(g.tokens)
+
+
+def test_admission_never_disturbs_inflight_rows(tiny_lm):
+    """The serial-enable invariant at slot granularity: admitting and
+    retiring neighbors must not change a live row's tokens (same pool
+    shape, so the comparison is bitwise)."""
+    cfg, m, p = tiny_lm
+    pa = np.asarray(tokens_for(cfg, batch=1, seq=12, seed=3))
+    pb = np.asarray(tokens_for(cfg, batch=1, seq=20, seed=4))
+    ref_a = _solo(m, p, pa, 10)
+    ref_b = _solo(m, p, pb, 5)
+
+    eng = StepEngine(m, batch_size=2, max_len=64)
+    ga = eng.admit(p, pa, max_new=10)[0]
+    for _ in range(3):
+        eng.step(p)
+    gb = eng.admit(p, pb, max_new=5)[0]    # joins while a is mid-decode
+    while eng.live_slots():
+        eng.step(p)
+    np.testing.assert_array_equal(np.asarray(ga.tokens), ref_a)
+    np.testing.assert_array_equal(np.asarray(gb.tokens), ref_b)
+    assert ga.slot != gb.slot
+    assert eng.free_slots() == 2           # both retired back to the pool
+
+
+def test_slot_recycling_is_clean(tiny_lm):
+    """A freed slot's stale cache row must not leak into the next
+    admission (per-slot cache reset via insert_cache_rows)."""
+    cfg, m, p = tiny_lm
+    eng = StepEngine(m, batch_size=2, max_len=64)
+    for seed in (3, 4):                    # fill both slots and retire
+        eng.admit(p, np.asarray(tokens_for(cfg, 1, 16, seed=seed)),
+                  max_new=4)
+    while eng.live_slots():
+        eng.step(p)
+    pc = np.asarray(tokens_for(cfg, batch=1, seq=20, seed=9))
+    ref = _solo(m, p, pc, 6)
+    gc = eng.admit(p, pc, max_new=6)[0]
+    while eng.live_slots():
+        eng.step(p)
+    np.testing.assert_array_equal(np.asarray(gc.tokens), ref)
+
+
+def test_admission_guards(tiny_lm):
+    cfg, m, p = tiny_lm
+    eng = StepEngine(m, batch_size=2, max_len=32)
+    with pytest.raises(ValueError):        # would run off the cache
+        eng.admit(p, np.asarray(tokens_for(cfg, 1, 16)), max_new=20)
+    eng.admit(p, np.asarray(tokens_for(cfg, 2, 16)), max_new=4)
+    with pytest.raises(RuntimeError):      # pool is full
+        eng.admit(p, np.asarray(tokens_for(cfg, 1, 16)), max_new=4)
+
+
+def test_eos_retires_slot(tiny_lm):
+    """EOS retirement frees the slot before the step limit."""
+    cfg, m, p = tiny_lm
+    probe = StepEngine(m, batch_size=1, max_len=64)
+    prompt = np.asarray(tokens_for(cfg, 1, 12, seed=3))
+    g = probe.admit(p, prompt, max_new=8)[0]
+    while probe.live_slots():
+        probe.step(p)
+    eos = g.tokens[2]                      # greedy is deterministic: make
+    eng = StepEngine(m, batch_size=1, max_len=64,   # the 3rd token "EOS"
+                     eos_id=eos)
+    g2 = eng.admit(p, prompt, max_new=8)[0]
+    while eng.live_slots():
+        eng.step(p)
+    assert g2.done
+    # retires at the first occurrence of the eos token, before the limit
+    assert len(g2.tokens) == g.tokens.index(eos) + 1 <= 3
+    assert eng.free_slots() == 1
+
+
+# ---------------------------------------------------------------------------
+# token-granular scheduler end to end
+# ---------------------------------------------------------------------------
+
+def test_continuous_scheduler_mixed_contexts():
+    from repro.launch.serve import build_server, request_stream
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-super", "supersub-sub"]
+    server, cfgs = build_server(names, 2, 32, load_delay_s=0.01)
+    reqs = list(request_stream(names, cfgs, 6, 2, 12, 0))
+    # pool width == request width so the greedy outputs are bitwise equal
+    # to the run-to-completion reference (same batch shape, same kernels)
+    with ContinuousScheduler(server, batch_size=2) as sched:
+        futs = [sched.submit(n, t, steps=4) for n, t in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+    assert all(o.shape == (2, 4) for o in outs)
+    snap = sched.snapshot()
+    assert snap["requests"] == 6
+    assert snap["admitted_rows"] == 12
+    assert snap["steps"] > 0
+    # both contexts loaded once and switching happened between steps
+    assert snap["loads"] >= 2
+    assert snap["context_changes"] >= 2
+
+    # greedy continuous output == the run-to-completion server output
+    for (name, toks), out in zip(reqs, outs):
+        ref = server.serve_batch(name, toks, steps=4)
+        np.testing.assert_array_equal(out, ref)
+    server.shutdown()
+
+
+def test_continuous_scheduler_survives_unloadable_context():
+    """A context whose weights never load must fail ITS requests (no
+    eternal retry spin) while the healthy context keeps serving."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+    from repro.serve.switching import ServedModel
+    from repro.models.model import build_model
+
+    server, cfgs = build_server(["supersub-super"], 2, 32)
+    cfg = cfgs["supersub-super"]
+    broken = build_model(reduced_arch("supersub-sub"))
+
+    def bad_weights():
+        raise IOError("checkpoint corrupted")
+
+    server.register(ServedModel(name="broken", model=broken,
+                                weights_fn=bad_weights, max_len=32))
+    with ContinuousScheduler(server, batch_size=2) as sched:
+        bad = sched.submit("broken",
+                           np.asarray(tokens_for(cfg, 1, 8)), steps=2)
+        good = sched.submit("supersub-super",
+                            np.asarray(tokens_for(cfg, 1, 8)), steps=2)
+        with pytest.raises(IOError):
+            bad.result(timeout=60)
+        assert good.result(timeout=300).shape == (1, 2)
+    server.shutdown()
+
+
+def test_continuous_scheduler_drain_on_stop():
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    server, cfgs = build_server(["supersub-super"], 2, 32)
+    cfg = cfgs["supersub-super"]
+    sched = ContinuousScheduler(server, batch_size=2).start()
+    futs = [sched.submit("supersub-super",
+                         np.asarray(tokens_for(cfg, 1, 8, seed=s)), steps=3)
+            for s in range(5)]
+    sched.stop(drain=True)                 # everything queued still serves
+    for f in futs:
+        assert f.result(timeout=5).shape == (1, 3)
+    server.shutdown()

@@ -3,14 +3,13 @@ chunked-loss equivalence, optimizer behaviour."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import reduced_arch, tokens_for
 from repro.configs.base import OptimizerConfig, ParallelConfig, RunConfig
 from repro.models.model import build_model
 from repro.train.data import SyntheticTokens
 from repro.train.trainer import (
-    Trainer, chunked_lm_loss, init_state, lm_loss_fn, make_train_step,
+    Trainer, chunked_lm_loss, init_state, make_train_step,
     softmax_xent)
 
 
