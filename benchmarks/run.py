@@ -18,9 +18,9 @@ import traceback
 
 def modules():
     from benchmarks import (bench_continuous, bench_serve_queue,
-                            bench_switch, fig5_critical_path,
-                            fig5_primitives, fig6_cases, fig6b_accuracy,
-                            figS1_pipeline, roofline_table)
+                            bench_speculative, bench_switch,
+                            fig5_critical_path, fig5_primitives, fig6_cases,
+                            fig6b_accuracy, figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -30,6 +30,7 @@ def modules():
         ("bench_switch", bench_switch.run),
         ("bench_serve_queue", bench_serve_queue.run),
         ("bench_continuous", bench_continuous.run),
+        ("bench_speculative", bench_speculative.run),
         ("roofline_table", roofline_table.run),
     ]
 

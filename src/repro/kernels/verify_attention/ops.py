@@ -1,0 +1,56 @@
+"""jit'd public wrapper for multi-token verify attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.verify_attention.kernel import (
+    DEFAULT_BK, verify_attention_kernel)
+from repro.kernels.verify_attention.ref import verify_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ring", "scale", "block_k",
+                                             "interpret"))
+def verify_attention(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
+                     scale: float | None = None, block_k: int = DEFAULT_BK,
+                     interpret: bool | None = None) -> jax.Array:
+    """q: (B, K, H, hd); k/v: (B, Hkv, S, hd) cache BEFORE the block's
+    writes; blk_k/blk_v: (B, K, Hkv, hd) block keys/values; pos: () or
+    (B,) int32 base positions -> (B, K, H, hd).
+
+    Query i of row b sits at position ``pos[b] + i``; it attends to the
+    cache (positions <= pos[b]-1, window-masked for rings) plus block
+    tokens j <= i — exactly what the i-th sequential ``decode_attention``
+    step would see, which makes the verify pass loop-exact even across a
+    ring wraparound.
+
+    Like ``decode_attention``, the cache length is kept block-aligned by
+    shrinking the block rather than padding (ring caches must not pad).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bk = min(block_k, S)
+    while S % bk != 0:
+        bk //= 2
+    # (B, K, H, hd) -> (B, Hkv, K*G, hd): score-row r = query (r//G) of
+    # head group g = r % G — the layout the kernel's causal offsets assume
+    qg = (q.reshape(B, K, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, K * G, hd))
+    kb = blk_k.swapaxes(1, 2)                       # (B, Hkv, K, hd)
+    vb = blk_v.swapaxes(1, 2)
+    out = verify_attention_kernel(qg, k, v, kb, vb, pos, ring=ring,
+                                  scale=scale, block_k=bk,
+                                  interpret=interpret)
+    return (out.reshape(B, Hkv, K, G, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(B, K, H, hd))
+
+
+__all__ = ["verify_attention", "verify_reference"]

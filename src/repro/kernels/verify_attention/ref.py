@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for multi-token verify attention: K query tokens per
+row scored against a KV cache in one pass (speculative decode's verify
+step).
+
+Layout: q (B, K, H, hd) — the K block tokens of each row, at positions
+``pos[b] .. pos[b]+K-1``; k/v cache (B, Hkv, S, hd) as it stood BEFORE the
+block (positions <= pos-1); blk_k/blk_v (B, K, Hkv, hd) the block's own
+keys/values.  ``pos`` is a scalar or per-request (B,) vector (continuous
+batching: every row at its own position).
+
+Splitting cache vs block is what makes the result *sequentially exact*:
+query i sees cache entries valid at step i plus block tokens j <= i —
+identical to running the one-token decode path i times.  A write-then-mask
+formulation cannot be exact for ring caches (a later block token's write
+lands on a slot an earlier query should still read); here the overwritten
+token is still in the cache side, masked per query by its stored position.
+
+Validity for query i (position pos+i):
+  * full cache — cache slots [0, pos-1]; block tokens j <= i.
+  * ring cache — (sliding window, cache length == window): cache slot s
+    holds position p(s) = (pos-1) - ((pos-1-s) mod S); valid iff
+    p(s) >= 0 (written) and p(s) > pos+i-S (inside query i's window).
+    Block tokens j <= i are always in-window (i - j < S for K <= S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def verify_reference(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
+                     scale: float | None = None) -> jax.Array:
+    B, K, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    assert blk_k.shape == (B, K, Hkv, hd), blk_k.shape
+    if ring:
+        assert K <= S, (K, S)
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    G = H // Hkv
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    qh = (q.reshape(B, K, Hkv, G, hd).astype(jnp.float32)
+          .transpose(0, 2, 1, 3, 4))                       # (B, Hkv, K, G, hd)
+
+    # cache side: per-query validity mask (B, K, S)
+    s_c = jnp.einsum("bnigd,bnsd->bnigs", qh, k.astype(jnp.float32)) * scale
+    cols = jnp.arange(S)[None, None, :]                     # (1, 1, S)
+    i = jnp.arange(K)[None, :, None]                        # (1, K, 1)
+    pb = pos[:, None, None]                                 # (B, 1, 1)
+    if ring:
+        p = (pb - 1) - jnp.mod(pb - 1 - cols, S)
+        valid = (p >= 0) & (p > pb + i - S)
+    else:
+        valid = cols < pb
+    s_c = jnp.where(valid[:, None, :, None, :], s_c, NEG_INF)
+
+    # block side: intra-block causal (j <= i)
+    kb = blk_k.transpose(0, 2, 1, 3).astype(jnp.float32)    # (B, Hkv, K, hd)
+    vb = blk_v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s_b = jnp.einsum("bnigd,bnjd->bnigj", qh, kb) * scale
+    causal = jnp.arange(K)[None, :] <= jnp.arange(K)[:, None]   # (K, K) j<=i
+    s_b = jnp.where(causal[None, None, :, None, :], s_b, NEG_INF)
+
+    # joint softmax across cache + block (flash-decode combine)
+    s = jnp.concatenate([s_c, s_b], axis=-1)                # (B,Hkv,K,G,S+K)
+    p_all = jax.nn.softmax(s, axis=-1)
+    v_all = jnp.concatenate([v.astype(jnp.float32), vb], axis=2)
+    out = jnp.einsum("bnigt,bntd->bnigd", p_all, v_all)     # (B,Hkv,K,G,hd)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, K, H, hd)
+    return out.astype(q.dtype)

@@ -2,7 +2,7 @@
 
 ``python -m repro.launch.serve --archs supersub-super,supersub-sub --steps 4``
 
-Three modes:
+Four modes:
 
   * ``--mode queue`` (default) — the async ``SwitchScheduler``: requests
     for all models are submitted up front; the scheduler coalesces
@@ -15,6 +15,13 @@ Three modes:
     decode step; context choice is re-decided at step boundaries and the
     next context streams into the shadow slot behind the remaining steps
     (``--pool`` sets the slot-pool width).
+  * ``--mode speculative`` — continuous batching with speculative cascade
+    decode: ``--draft NAME`` names the draft context; every other
+    registered context becomes a verify target whose requests run on a
+    ``SpecEngine`` (draft proposes ``--spec-k`` tokens per round, the
+    target scores them in one multi-token verify pass).  Draft/target
+    hand-offs are O(1) select flips with the other side prefetched into
+    the shadow slot — the paper's Super-Sub cascade as a serving mode.
   * ``--mode sync``  — the old synchronous round-robin driver (worst case
     for switching; kept as the baseline the paper compares against).
 
@@ -39,18 +46,27 @@ from repro.serve.switching import ServedModel, SwitchableServer
 
 def build_server(names: list[str], slots: int, max_len: int,
                  temperature: float = 0.0,
-                 load_delay_s: float = 0.0) -> tuple[SwitchableServer, dict]:
+                 load_delay_s: float = 0.0,
+                 arch_overrides: dict | None = None
+                 ) -> tuple[SwitchableServer, dict]:
     """Register reduced versions of `names` behind one SwitchableServer.
 
     ``load_delay_s`` sleeps in each ``weights_fn`` to emulate streaming a
     full-size context over the host->device link (benchmarks use it: the
-    reduced CPU test models are in-memory, real contexts are not)."""
+    reduced CPU test models are in-memory, real contexts are not).
+    ``arch_overrides`` are extra reduced-config fields (e.g. float32
+    dtypes for tests that compare two numerically different execution
+    paths bitwise)."""
+    import jax.numpy as jnp
     server = SwitchableServer(num_slots=slots)
     cfgs = {}
+    over = arch_overrides or {}
     for i, name in enumerate(names):
-        cfg = make_reduced(get_arch(name))
+        cfg = make_reduced(get_arch(name), **over)
         cfgs[name] = cfg
-        model = build_model(cfg)
+        model = build_model(cfg, cache_dtype=jnp.float32
+                            if over.get("dtype") == "float32"
+                            else jnp.bfloat16)
         params = model.init(jax.random.key(i))
 
         def weights_fn(p=params):
@@ -76,10 +92,17 @@ def request_stream(names, cfgs, n_requests, batch, seq, seed):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--archs", default="supersub-super,supersub-sub")
-    ap.add_argument("--mode", choices=("queue", "continuous", "sync"),
+    ap.add_argument("--mode",
+                    choices=("queue", "continuous", "speculative", "sync"),
                     default="queue")
     ap.add_argument("--pool", type=int, default=8,
-                    help="continuous mode: step-engine slot-pool width")
+                    help="continuous/speculative mode: slot-pool width")
+    ap.add_argument("--draft", default=None,
+                    help="speculative mode: draft context name (must be "
+                         "one of --archs; the remaining archs become "
+                         "verify targets)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative mode: draft tokens per round")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -89,14 +112,28 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     names = args.archs.split(",")
-    server, cfgs = build_server(names, args.slots, args.seq + args.steps + 8)
-    reqs = list(request_stream(names, cfgs, args.requests,
-                               args.batch, args.seq, args.seed))
+    slack = args.spec_k if args.mode == "speculative" else 0
+    server, cfgs = build_server(names, args.slots,
+                                args.seq + args.steps + slack + 8)
+    draft_map = {}
+    if args.mode == "speculative":
+        if args.draft not in names:
+            raise SystemExit(f"--draft {args.draft!r} must be one of "
+                             f"--archs {names}")
+        targets = [n for n in names if n != args.draft]
+        draft_map = {t: args.draft for t in targets}
+        reqs = list(request_stream(targets, cfgs, args.requests,
+                                   args.batch, args.seq, args.seed))
+    else:
+        reqs = list(request_stream(names, cfgs, args.requests,
+                                   args.batch, args.seq, args.seed))
 
     t0 = time.perf_counter()
-    if args.mode in ("queue", "continuous"):
+    if args.mode in ("queue", "continuous", "speculative"):
         sched_cls = (SwitchScheduler if args.mode == "queue" else
-                     lambda s: ContinuousScheduler(s, batch_size=args.pool))
+                     lambda s: ContinuousScheduler(
+                         s, batch_size=args.pool, draft=draft_map,
+                         spec_k=args.spec_k))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]

@@ -408,6 +408,47 @@ def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
     return out, KVCache(k=k_new, v=v_new)
 
 
+def attention_verify(params, x, pos, cache: KVCache, cfg: ArchConfig):
+    """Multi-token verify decode (speculative decode's target pass).
+
+    x: (B, K, D) — the K block tokens per row, at positions
+    ``pos[b] .. pos[b]+K-1`` (``pos``: scalar or (B,) int32).  Attention
+    reads the cache as it stood BEFORE this block plus the block's own
+    keys/values under an intra-block causal mask, so token i sees exactly
+    the state the i-th sequential ``attention_decode`` step would have
+    seen — loop-exact even across a ring wraparound (where write-then-mask
+    is not: a later token's write lands on a slot an earlier query must
+    still read).  All K tokens' k/v are then written.  Returns
+    (out (B, K, D), new cache).
+    """
+    B, K, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,K,H,hd)
+    S = cache.k.shape[2]
+    ring = cfg.sliding_window > 0
+
+    import repro.kernels as kernels
+    if kernels.use_kernels():
+        from repro.kernels.verify_attention.ops import verify_attention
+        interp = None if kernels.get_mode() == "auto" else True
+        out = verify_attention(q, cache.k, cache.v, k, v, pos, ring=ring,
+                               interpret=interp)
+    else:
+        from repro.kernels.verify_attention.ref import verify_reference
+        out = verify_reference(q, cache.k, cache.v, k, v, pos, ring=ring)
+
+    # write the block: slot = position (% S for rings); parked/retired rows
+    # clamp at S-1 — their rows are dead and fully rewritten at the next
+    # admission, so the duplicate clamped writes are harmless
+    slots = positions % S if ring else jnp.minimum(positions, S - 1)
+    rows = jnp.arange(B)[:, None]
+    k_new = cache.k.at[rows, :, slots].set(k.astype(cache.k.dtype))
+    v_new = cache.v.at[rows, :, slots].set(v.astype(cache.v.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, KVCache(k=k_new, v=v_new)
+
+
 def decode_sdpa(q, k_cache, v_cache, valid, cfg: ArchConfig):
     """q: (B,1,H,hd); caches: (B,Hkv,S,hd); valid: (S,) or (B,S) bool."""
     B, _, H, hd = q.shape

@@ -194,16 +194,20 @@ class LM:
                     p["attn"], h, positions, cfg, self._max_len,
                     self.cache_dtype, self.scan_unroll, self.mesh,
                     self.rules)
+            elif mode == "verify":
+                a, nc = layers.attention_verify(p["attn"], h, pos, cache, cfg)
             else:
                 a, nc = layers.attention_decode(p["attn"], h, pos, cache, cfg)
         elif mixer == "mamba":
-            if mode == "decode":
+            # the recurrent decode path takes (B, L, D) with carried state,
+            # so "verify" (L == K block tokens) is the same call as decode
+            if mode in ("decode", "verify"):
                 a, nc = ssm_mod.mamba_decode(p["mamba"], h, cache, cfg)
             else:
                 a, st = ssm_mod.mamba_forward(p["mamba"], h, cfg, mode="scan")
                 nc = st if mode == "prefill" else cache
         elif mixer == "mlstm":
-            if mode == "decode":
+            if mode in ("decode", "verify"):
                 a, nc = xl.mlstm_block(p["mlstm"], h, cfg, mode="recurrent",
                                        state=cache)
             else:
@@ -212,8 +216,9 @@ class LM:
                 nc = st if mode == "prefill" else cache
         elif mixer == "slstm":
             a, st = xl.slstm_block(p["slstm"], h, cfg,
-                                   state=cache if mode == "decode" else None)
-            nc = st if mode in ("prefill", "decode") else cache
+                                   state=cache if mode in ("decode", "verify")
+                                   else None)
+            nc = st if mode in ("prefill", "decode", "verify") else cache
         else:
             raise ValueError(mixer)
         x = x + a
@@ -313,6 +318,28 @@ class LM:
         cfg = self.cfg
         x = self._embed_in(params, tokens)
         x, aux, caches = self._run_blocks(params, x, None, "decode", pos,
+                                          caches)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return self._head(params, x), caches
+
+    def verify_step(self, params, caches, tokens, pos):
+        """Multi-token verify: score K tokens per row in ONE pass
+        (speculative decode's target pass).
+
+        tokens: (B, K) int32 — the block tokens, at cache positions
+        ``pos .. pos+K-1`` per row (pos: scalar or (B,) int32).  Returns
+        (logits (B, K, V), new caches) where ``logits[:, i]`` is the
+        distribution for position pos+i+1 — identical to K iterations of
+        ``decode_step`` (tested), including ring-buffer caches: attention
+        reads the pre-block cache plus an intra-block causal term, so
+        token i sees exactly the window the i-th sequential step would
+        have seen.  Recurrent mixers run their carried-state scan over the
+        K tokens, which is the sequential computation itself.
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, tokens)
+        x, aux, caches = self._run_blocks(params, x, None, "verify", pos,
                                           caches)
         x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
                            cfg.norm_eps)

@@ -28,6 +28,7 @@ including single-row admissions (the per-row gumbel trick below).
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, NamedTuple, Optional
 
@@ -59,12 +60,21 @@ class DecodeState(NamedTuple):
     ``key``/``t`` implement the same cumulative fold-in schedule the
     run-to-completion loop uses, so a batch admitted at t=0 samples
     token-for-token identically to ``generate``.
+
+    ``rkey``/``seeded`` are the per-request seed column: a seeded slot
+    draws from its own key folded with the *position of the token being
+    produced* instead of the pool schedule, so a seeded resubmission
+    reproduces its tokens exactly regardless of which slot it lands in or
+    what else shares the pool.  Unseeded slots keep the pool schedule
+    (bitwise ``generate`` equality).
     """
     caches: Any           # decode-cache pytree, leaves (R, B, ...)
     tok: jax.Array        # (B, 1) int32 — last sampled token per slot
     pos: jax.Array        # (B,) int32  — cache position `tok` is fed at
     key: jax.Array        # PRNG key, folded once per step
     t: jax.Array          # () int32    — global step counter
+    rkey: jax.Array       # (B, 2) uint32 — per-slot request PRNG key
+    seeded: jax.Array     # (B,) bool — slot draws from rkey, not the pool
 
 
 @dataclass
@@ -110,37 +120,80 @@ class StepEngine:
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
 
+        def _row_gumbel(rkeys, produced_at):
+            """Per-slot gumbel fields for seeded rows: each slot's key is
+            folded with the position of the token being produced — unique
+            per draw, and independent of slot index, admission boundary,
+            or pool traffic (that's what makes seeds reproducible)."""
+            folded = jax.vmap(jax.random.fold_in)(rkeys, produced_at)
+            return jax.vmap(
+                lambda k: jax.random.gumbel(k, (V,), jnp.float32))(folded)
+
         def _step(params, state: DecodeState, live):
             key = jax.random.fold_in(state.key, state.t)
             logits, caches = model.decode_step(params, state.caches,
                                                state.tok, state.pos)
-            nxt = _sample(logits[:, -1], key, T)              # (B,)
+            last = logits[:, -1]                               # (B, V) f32
+            if T > 0.0:
+                # pool schedule: argmax(l/T + gumbel) IS categorical's own
+                # computation, bitwise (same key, same (B, V) field).  The
+                # per-row seeded field only exists while a LIVE seeded row
+                # does (lax.cond) — unseeded pools pay nothing extra.
+                g = jax.random.gumbel(key, (B, V), jnp.float32)
+                sl = state.seeded & live
+                g = jax.lax.cond(
+                    sl.any(),
+                    lambda g: jnp.where(
+                        sl[:, None],
+                        _row_gumbel(state.rkey, state.pos + 1), g),
+                    lambda g: g, g)
+                nxt = jnp.argmax(last / T + g, axis=-1).astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
             pos = jnp.where(live, state.pos + 1, state.pos)
             pos = jnp.minimum(pos, max_len - 1)               # parked slots
-            return nxt, DecodeState(caches=caches, tok=nxt[:, None],
-                                    pos=pos, key=key, t=state.t + 1)
+            return nxt, state._replace(caches=caches, tok=nxt[:, None],
+                                       pos=pos, key=key, t=state.t + 1)
 
-        def _admit(params, state: DecodeState, tokens, slots):
+        def _admit(params, state: DecodeState, tokens, slots, rkeys, seeded):
             """Prefill (b, S) prompts into cache rows `slots`; sample their
-            first tokens with the *current* (unfolded) key — the same draw
-            ``generate`` makes from its prefill logits.  Row r of a
-            (B, V) gumbel field reproduces ``categorical``'s row r exactly,
-            so a single-row admission in a half-full batch samples the
-            same token it would in a full batched prefill."""
+            first tokens at t=0 with the *current* (unfolded) key — the
+            same draw ``generate`` makes from its prefill logits.  Row r
+            of a (B, V) gumbel field reproduces ``categorical``'s row r
+            exactly, so a single-row admission in a half-full batch
+            samples the same token it would in a full batched prefill.
+            Past t=0 the admission key is salted: ``state.key`` is the key
+            step t-1 DREW from, and a slot retired by that step and
+            recycled here must not hand the newcomer the old occupant's
+            last gumbel row (the salt lives above 2^30, disjoint from
+            step folds).  Seeded rows draw from their own key instead
+            (folded with S: the first token is produced at position S)."""
             S = tokens.shape[1]
             logits, rows = model.prefill(params, tokens, max_len)
             last = logits[:, -1]                               # (b, V) f32
             if T > 0.0:
-                g = jax.random.gumbel(state.key, (B, V), jnp.float32)
-                first = jnp.argmax(last / T + g[slots], axis=-1)
+                salted = jax.random.fold_in(state.key,
+                                            (1 << 30) ^ state.t)
+                akey = jnp.where(state.t == 0, state.key, salted)
+                g = jax.random.gumbel(akey, (B, V), jnp.float32)[slots]
+                g = jax.lax.cond(
+                    seeded.any(),
+                    lambda g: jnp.where(
+                        seeded[:, None],
+                        _row_gumbel(rkeys, jnp.full(slots.shape, S,
+                                                    jnp.int32)), g),
+                    lambda g: g, g)
+                first = jnp.argmax(last / T + g, axis=-1)
             else:
                 first = jnp.argmax(last, axis=-1)
             first = first.astype(jnp.int32)
             caches = model.insert_cache_rows(state.caches, rows, slots)
             tok = state.tok.at[slots].set(first[:, None])
             pos = state.pos.at[slots].set(jnp.int32(S))
-            return first, DecodeState(caches=caches, tok=tok, pos=pos,
-                                      key=state.key, t=state.t)
+            return first, state._replace(
+                caches=caches, tok=tok, pos=pos,
+                rkey=state.rkey.at[slots].set(rkeys),
+                seeded=state.seeded.at[slots].set(seeded))
 
         self._step_fn = jax.jit(_step, donate_argnums=(1,))
         self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
@@ -177,7 +230,9 @@ class StepEngine:
             tok=jnp.zeros((B, 1), jnp.int32),
             pos=jnp.zeros((B,), jnp.int32),
             key=jax.random.PRNGKey(self.seed if seed is None else seed),
-            t=jnp.zeros((), jnp.int32))
+            t=jnp.zeros((), jnp.int32),
+            rkey=jnp.zeros((B, 2), jnp.uint32),
+            seeded=jnp.zeros((B,), bool))
         self.slots = [None] * B
         self._free = list(range(B))
         self._live[:] = False
@@ -199,10 +254,17 @@ class StepEngine:
 
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,
-              metas: Optional[list] = None) -> list[Generation]:
+              metas: Optional[list] = None,
+              seeds: Optional[list] = None) -> list[Generation]:
         """Admit (b, S) prompt rows into b free slots (prefill + first
         token).  Raises if the pool lacks room or the request would run
-        past the cache; callers gate on ``free_slots()``."""
+        past the cache; callers gate on ``free_slots()``.
+
+        ``seeds``: optional per-row sampling seeds — ``None`` entries keep
+        the pool's shared key schedule; an int (or raw (2,) uint32 key)
+        pins that row to its own key column, making its draws reproducible
+        independent of slot, admission boundary, and surrounding traffic.
+        """
         tokens = np.asarray(tokens)
         if tokens.ndim == 1:
             tokens = tokens[None]
@@ -213,11 +275,21 @@ class StepEngine:
         if S + max_new > self.max_len:
             raise ValueError(f"prompt {S} + {max_new} new tokens exceeds "
                              f"max_len {self.max_len}")
+        rkeys = np.zeros((b, 2), np.uint32)
+        seeded = np.zeros((b,), bool)
+        for i, s in enumerate(seeds or []):
+            if s is None:
+                continue
+            rkeys[i] = np.asarray(s if hasattr(s, "shape") and
+                                  np.shape(s) == (2,)
+                                  else jax.random.PRNGKey(int(s)))
+            seeded[i] = True
         slots = [self._free.pop(0) for _ in range(b)]
         try:
             first, self.state = self._call(
                 self._admit_fn, params, self.state,
-                jnp.asarray(tokens, jnp.int32), jnp.asarray(slots, jnp.int32))
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(slots, jnp.int32),
+                jnp.asarray(rkeys), jnp.asarray(seeded))
         except BaseException:
             self._free[0:0] = slots      # failed admit must not leak slots
             raise
@@ -292,7 +364,13 @@ class ServingEngine:
         self.temperature = temperature
         self.seed = seed
         self.stats = ServeStats()
-        self._step_engines: dict[int, StepEngine] = {}   # per batch size
+        # Per-batch-size engine cache, LRU-bounded: each entry pins a full
+        # (layers, B, max_len) KV pool, so traffic with many distinct
+        # batch shapes must not accumulate pools without limit — evicting
+        # an entry frees its pool (a returning shape re-compiles, which
+        # is what it paid before the step-engine refactor anyway).
+        self.max_cached_pools = 4
+        self._step_engines: "OrderedDict[int, StepEngine]" = OrderedDict()
 
         def _prefill(params, tokens, patch_embeds=None):
             return model.prefill(params, tokens, max_len,
@@ -315,12 +393,24 @@ class ServingEngine:
 
     def step_engine(self, batch_size: int) -> StepEngine:
         """The continuous-batching engine behind ``generate`` (cached per
-        batch shape; jitted programs compile once per shape)."""
+        batch shape; jitted programs compile once per shape; least
+        recently used shapes beyond ``max_cached_pools`` are dropped to
+        free their KV pools)."""
         eng = self._step_engines.get(batch_size)
         if eng is None:
             eng = StepEngine(self.model, batch_size, self.max_len,
                              temperature=self.temperature, seed=self.seed)
             self._step_engines[batch_size] = eng
+        self._step_engines.move_to_end(batch_size)
+        if len(self._step_engines) > self.max_cached_pools:
+            # evict oldest IDLE shapes only: dropping an engine with live
+            # rows would split state between the caller's handle and a
+            # later recreation
+            for b in [b for b, e in self._step_engines.items()
+                      if e is not eng and not e.live_slots()]:
+                if len(self._step_engines) <= self.max_cached_pools:
+                    break
+                del self._step_engines[b]
         return eng
 
     def generate(self, tokens, steps: int, patch_embeds=None,

@@ -44,6 +44,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
 import numpy as np
 
 
@@ -55,6 +56,7 @@ class _Request:
     seed: int
     future: Future
     submitted_at: float
+    explicit_seed: bool = False    # caller pinned `seed` (reproducible row)
 
 
 class SwitchScheduler:
@@ -311,19 +313,34 @@ class ContinuousScheduler:
 
     Decode state persists per context across switches (beyond-paper: an
     FPGA loses flip-flop state on reconfiguration; our slots are HBM).
-    Sampling uses the engine-level key schedule, so per-request seeds are
-    not honored here — temperature>0 rows still get independent draws.
+
+    ``draft`` maps a context name to a *draft* context: requests for that
+    context run on a speculative ``SpecEngine`` (draft proposes K tokens,
+    the target verifies them in one multi-token pass) instead of a plain
+    ``StepEngine`` — mixed speculative/plain traffic shares the same
+    rank/drain/stack loop, and each draft/target hand-off inside a round
+    is an O(1) select flip with the other context prefetched into the
+    shadow slot.
+
+    Per-request seeds ARE honored for plain contexts: a seeded row draws
+    from its own key column (folded with the row's token position), so a
+    seeded resubmission reproduces its tokens exactly regardless of slot
+    or surrounding traffic.  Speculative contexts reject seeds (the
+    accept/reject cascade has no per-row schedule).
     """
 
     def __init__(self, server, batch_size: int = 8,
                  age_weight: float = 10.0, cost_weight: float = 1.0,
-                 switch_margin: float = 1.5, preempt_margin: float = 6.0):
+                 switch_margin: float = 1.5, preempt_margin: float = 6.0,
+                 draft: Optional[dict] = None, spec_k: int = 4):
         self.server = server
         self.batch_size = batch_size
         self.age_weight = age_weight
         self.cost_weight = cost_weight
         self.switch_margin = switch_margin
         self.preempt_margin = preempt_margin
+        self.draft = dict(draft or {})
+        self.spec_k = spec_k
         self._queues: dict[str, deque[_Request]] = defaultdict(deque)
         self._inflight: dict[int, _Inflight] = {}
         self._inflight_seq = 0          # monotonic key: ids recycle, this
@@ -332,6 +349,11 @@ class ContinuousScheduler:
         self._drain = True
         self._thread: Optional[threading.Thread] = None
         self._load_cost: dict[str, float] = {}
+        # paused contexts with frozen rows: when they went stranded (only
+        # touched by the loop thread) — the starvation guard's age base
+        self._stranded_since: dict[str, float] = {}
+        self._tick_ctx: Optional[str] = None   # context the current tick
+        #                                        acts on (failure target)
         self.stats = {
             "requests": 0, "steps": 0, "admitted_rows": 0,
             "drain_switches": 0, "preempt_switches": 0,
@@ -343,17 +365,17 @@ class ContinuousScheduler:
                seed: Optional[int] = None) -> Future:
         """Enqueue one request; resolves to the (b, steps) output array.
 
-        Per-request seeds are not supported: the pool shares one key
-        schedule (rows get independent draws, but a request's draw depends
-        on which slot and step boundary it lands on).  Rejecting the
-        argument beats silently ignoring it — see ROADMAP's per-slot key
-        column follow-on for the reproducible version."""
-        if seed is not None:
-            raise ValueError(
-                "ContinuousScheduler does not honor per-request seeds; "
-                "use SwitchScheduler for seed-reproducible sampling")
+        ``seed`` pins the request's sampling draws to its own per-slot key
+        column (``DecodeState.rkey``), folded with each token's position:
+        a seeded resubmission reproduces its tokens exactly, independent
+        of slot assignment, admission boundary, and pool traffic.
+        Speculative contexts (see ``draft``) reject seeds."""
         if name not in self.server.served():
             raise KeyError(f"model {name!r} not registered")
+        if seed is not None and name in self.draft:
+            raise ValueError(
+                "speculative contexts do not honor per-request seeds; "
+                "submit to a plain context for seed reproducibility")
         tokens = np.asarray(tokens)
         if tokens.ndim == 1:
             tokens = tokens[None]
@@ -362,13 +384,17 @@ class ContinuousScheduler:
             raise ValueError(f"request batch {b} > pool size "
                              f"{self.batch_size}")
         sm = self.server._served[name]
-        if S + steps > sm.max_len:
-            raise ValueError(f"prompt {S} + {steps} steps exceeds "
-                             f"max_len {sm.max_len}")
+        slack = self.spec_k if name in self.draft else 0
+        if S + steps + slack > sm.max_len:
+            raise ValueError(f"prompt {S} + {steps} steps (+{slack} "
+                             f"speculative slack) exceeds max_len "
+                             f"{sm.max_len}")
         fut: Future = Future()
         req = _Request(name=name, tokens=tokens, steps=steps,
-                       seed=self.server.next_seed(),
-                       future=fut, submitted_at=time.perf_counter())
+                       seed=self.server.next_seed() if seed is None
+                       else seed,
+                       future=fut, submitted_at=time.perf_counter(),
+                       explicit_seed=seed is not None)
         with self._cv:
             if self._stopping:
                 raise RuntimeError("scheduler is stopped")
@@ -410,6 +436,8 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------ engines
     def _engine(self, name: str):
+        if name in self.draft:
+            return self._spec_engine(name)
         eng = self.server.step_engine(name, self.batch_size)
         if eng.runner is None:
             cse = self.server.engine
@@ -420,10 +448,38 @@ class ContinuousScheduler:
             eng.runner = lambda fn, params, *args: cse.run_step(fn, *args)
         return eng
 
+    def _spec_engine(self, name: str):
+        dname = self.draft[name]
+        eng = self.server.spec_engine(name, dname, self.batch_size,
+                                      k=self.spec_k)
+        if eng.runner is None:
+            cse = self.server.engine
+
+            def runner(which, fn, *args, _t=name, _d=dname):
+                # the paper's dual-copy cascade at program granularity:
+                # activate the side this program needs (O(1) when
+                # resident) and stream the OTHER side into the shadow
+                # slot behind this program's execution
+                want, other = (_t, _d) if which == "target" else (_d, _t)
+                cse.preload(want)
+                cse.switch(want, wait=True)
+                try:
+                    cse.prefetch([other], limit=1)
+                except Exception:
+                    pass
+                return cse.run_step(fn, *args)
+
+            eng.runner = runner
+        return eng
+
     def _live_engines(self):
         out = {}
         for name in self.server.served():
-            eng = self.server._step_engines.get((name, self.batch_size))
+            if name in self.draft:
+                eng = self.server._spec_engines.get(
+                    (name, self.draft[name], self.batch_size, self.spec_k))
+            else:
+                eng = self.server._step_engines.get((name, self.batch_size))
             if eng is not None and eng.live_slots():
                 out[name] = eng
         return out
@@ -437,9 +493,14 @@ class ContinuousScheduler:
                     age = now - q[0].submitted_at
                     out[name] = len(q) + self.age_weight * age
         # a paused context's stranded rows count as pressure too — they
-        # must eventually be resumed and retired
+        # must eventually be resumed and retired.  Age-boost them exactly
+        # like queued requests (starvation guard): sustained pressure on a
+        # hot competitor must not defer a preempted context's frozen rows
+        # indefinitely.
         for name, eng in self._live_engines().items():
-            out[name] = out.get(name, 0.0) + eng.live_slots()
+            age = now - self._stranded_since.get(name, now)
+            out[name] = (out.get(name, 0.0) + eng.live_slots()
+                         + self.age_weight * age)
         return out
 
     def _note_load_cost(self, name: str, seconds: float):
@@ -465,12 +526,17 @@ class ContinuousScheduler:
                     return
             try:
                 cur = self._tick(cur)
-            except BaseException as e:       # fail the context's requests,
-                self._fail_context(cur, e)   # keep the loop alive
+            except BaseException as e:
+                # fail the context the tick was ACTING on when it raised
+                # (_tick may have switched away from `cur` first — failing
+                # the stale name would poison an innocent context's
+                # requests), keep the loop alive
+                self._fail_context(self._tick_ctx, e)
                 cur = None
 
     def _tick(self, cur: Optional[str]) -> Optional[str]:
         """One step boundary: rank, maybe switch, admit, step, retire."""
+        self._tick_ctx = cur                  # who a mid-tick failure hits
         now = time.perf_counter()
         pressures = self._pressures(now)
         if not pressures:
@@ -482,6 +548,7 @@ class ContinuousScheduler:
         stack = True                          # keep admitting `cur`
         if cur is None:
             cur = self._try_activate(cand, cur)
+            self._tick_ctx = cur
             if cur is None:
                 return None
         elif cand != cur:
@@ -493,6 +560,7 @@ class ContinuousScheduler:
                 if nxt == cand:                       # to drain
                     self.stats["drain_switches"] += 1
                 cur = nxt
+                self._tick_ctx = cur
             elif cand_p > self.switch_margin * max(cur_p, 1e-9):
                 # drain decision: stop stacking; stream the winner into
                 # the shadow slot behind the remaining steps (advisory —
@@ -510,6 +578,7 @@ class ContinuousScheduler:
                         self.stats["drain_switches" if drained
                                    else "preempt_switches"] += 1
                     cur = nxt
+                    self._tick_ctx = cur
         eng = self._engine(cur)
         if stack:
             self._admit(cur, eng)
@@ -521,6 +590,16 @@ class ContinuousScheduler:
             self._resolve(finished)
         else:
             time.sleep(0.0005)                # waiting on a load/queue
+        # starvation-guard bookkeeping: stamp contexts left holding frozen
+        # rows; the stamp ages their pressure until they are resumed
+        mark = time.perf_counter()
+        live = self._live_engines()
+        for name in live:
+            self._stranded_since.setdefault(name, mark)
+        self._stranded_since.pop(cur, None)
+        for name in list(self._stranded_since):
+            if name not in live:
+                del self._stranded_since[name]
         return cur
 
     def _activate(self, name: str) -> str:
@@ -559,9 +638,17 @@ class ContinuousScheduler:
             key = self._inflight_seq
             self._inflight_seq += 1
             self._inflight[key] = inf
+            # explicitly seeded requests pin each row to its own key:
+            # split() derives per-row keys deterministically, so the same
+            # (seed, prompt) resubmission reproduces row-for-row
+            seeds = None
+            if req.explicit_seed:
+                seeds = list(jax.random.split(
+                    jax.random.PRNGKey(req.seed), b))
             try:
                 gens = eng.admit(None, req.tokens, max_new=req.steps,
-                                 metas=[(key, i) for i in range(b)])
+                                 metas=[(key, i) for i in range(b)],
+                                 seeds=seeds)
             except BaseException as e:
                 del self._inflight[key]
                 req.future.set_exception(e)
@@ -606,7 +693,27 @@ class ContinuousScheduler:
             if bsz == self.batch_size and (cur is None or name == cur) \
                     and eng.live_slots():
                 eng.reset()
+        for (name, _d, bsz, _k), eng in list(
+                self.server._spec_engines.items()):
+            if bsz == self.batch_size and (cur is None or name == cur) \
+                    and eng.live_slots():
+                eng.reset()
 
     # ------------------------------------------------------------- report
     def snapshot(self) -> dict:
-        return _snapshot(self.stats, self.server.engine)
+        out = _snapshot(self.stats, self.server.engine)
+        rounds = row_rounds = committed = 0
+        for (name, dname, bsz, k), eng in self.server._spec_engines.items():
+            # full-key match: the server outlives schedulers, so engines
+            # from a prior draft/spec_k configuration may coexist
+            if (bsz == self.batch_size and k == self.spec_k
+                    and self.draft.get(name) == dname):
+                rounds += eng.stats["rounds"]
+                row_rounds += eng.stats["row_rounds"]
+                committed += eng.stats["committed_tokens"]
+        if rounds:
+            out["spec_rounds"] = rounds
+            out["spec_committed_tokens"] = committed
+            out["accepted_tokens_per_round"] = round(
+                committed / max(row_rounds, 1), 3)
+        return out

@@ -1,0 +1,423 @@
+"""Speculative cascade decode: draft/verify subsystem on the step engine.
+
+The paper's Super-Sub cascade (Fig 6a, S1a) runs the small network while
+the big network's context streams into the shadow slot — load hidden
+behind execution.  ``SpecEngine`` is the LLM-serving analogue at token
+granularity: a cheap *draft* context proposes K tokens per round, the
+*target* context scores all K in ONE multi-token verify pass
+(``LM.verify_step`` over the ``verify_attention`` kernel), and exact
+speculative sampling (Leviathan et al.) accepts a prefix + draws one
+continuation token — so the committed stream is distributed exactly as
+target-only sampling, and greedy output is token-identical to
+``StepEngine.generate`` (tested).
+
+Numerics caveat: "token-identical" is exact up to floating point.  The
+multi-token verify computes the same values as the one-token loop through
+differently-shaped matmuls; in f32 the resulting ulp differences are far
+below any realistic logit gap (the identity tests run in f32), but bf16
+activations/caches can round a near-tie argmax the other way.  That is a
+property of bf16 greedy decode itself, not of the acceptance rule — the
+committed distribution is unaffected.
+
+Structure mirrors ``StepEngine``: one fixed-shape slot pool shared by a
+draft-cache column and a target-cache column (``SpecState``), admission
+prefills BOTH caches into a free slot's rows, rounds advance every live
+slot, retirement (EOS / step limit) frees the slot.  Execution routes
+through a ``runner(which, fn, *args)`` hook: the continuous scheduler
+points it at a ``ContextSwitchEngine`` so the draft rollout runs in the
+active slot while the target streams into the shadow slot (and vice
+versa) — each draft/target hand-off is an O(1) select flip and reloads
+hide behind the other context's execution, per the paper's dual-copy
+primitives.
+
+Rollback is positional: a rejected proposal's stale cache writes are
+masked by the row's committed position and overwritten later.  That works
+for full attention caches only, so both models must be all-attention with
+no sliding window (ring writes wrap onto live slots; recurrent mixers
+cannot rewind their state).  ``LM.verify_step`` itself stays general —
+the engine is the restricted layer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+from repro.serve.engine import Generation
+
+
+def speculative_accept(key, proposals, draft_logits, target_logits,
+                       temperature: float):
+    """Exact speculative sampling: accept/reject K proposals, draw the
+    continuation.
+
+    proposals: (B, K) int32 — draft tokens d_1..d_K; draft_logits:
+    (B, K, V) — the distributions each d_i was sampled from;
+    target_logits: (B, K+1, V) — target distributions for block-relative
+    positions 1..K+1.  Returns (tokens (B, K+1), n_accepted (B,)):
+    ``tokens[:, :n]`` are the accepted proposals, entry n is the residual
+    draw (n < K) or the bonus token from the target's last distribution
+    (n == K); entries past n are undefined.  The committed prefix is
+    distributed exactly as target-only sampling for ANY draft
+    distribution (tested statistically).
+
+    Greedy (temperature == 0): accept while d_i equals the target argmax;
+    the continuation is the target argmax — the committed stream is
+    token-identical to plain greedy target decode.
+    """
+    B, K = proposals.shape
+    cols = jnp.arange(K + 1, dtype=jnp.int32)[None, :]
+    if temperature <= 0.0:
+        tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+        acc = proposals == tgt[:, :K]
+        n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        nxt = jnp.take_along_axis(tgt, n[:, None], axis=1)[:, 0]
+    else:
+        p_all = jax.nn.softmax(target_logits.astype(jnp.float32)
+                               / temperature, axis=-1)       # (B, K+1, V)
+        q_all = jax.nn.softmax(draft_logits.astype(jnp.float32)
+                               / temperature, axis=-1)       # (B, K, V)
+        pd = jnp.take_along_axis(p_all[:, :K], proposals[..., None],
+                                 axis=-1)[..., 0]            # (B, K)
+        qd = jnp.take_along_axis(q_all, proposals[..., None],
+                                 axis=-1)[..., 0]
+        u = jax.random.uniform(key, (B, K), jnp.float32)
+        acc = u * qd <= pd            # accept w.p. min(1, p/q); p==q -> 1
+        n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        # residual at the rejection point: r ∝ max(p - q, 0); all-accepted
+        # rows pad q with zeros so the "residual" is the bonus draw from p
+        q_pad = jnp.concatenate(
+            [q_all, jnp.zeros_like(q_all[:, :1])], axis=1)
+        pn = jnp.take_along_axis(p_all, n[:, None, None], axis=1)[:, 0]
+        qn = jnp.take_along_axis(q_pad, n[:, None, None], axis=1)[:, 0]
+        r = jnp.clip(pn - qn, 0.0, None)
+        rs = jnp.sum(r, axis=-1, keepdims=True)
+        r = jnp.where(rs > 0, r / jnp.maximum(rs, 1e-30), pn)
+        g = jax.random.gumbel(jax.random.fold_in(key, 1),
+                              r.shape, jnp.float32)
+        nxt = jnp.argmax(jnp.log(r + 1e-30) + g, axis=-1).astype(jnp.int32)
+    props_pad = jnp.concatenate([proposals, proposals[:, :1]], axis=1)
+    tokens = jnp.where(cols < n[:, None], props_pad,
+                       jnp.where(cols == n[:, None], nxt[:, None], 0))
+    return tokens.astype(jnp.int32), n.astype(jnp.int32)
+
+
+class SpecState(NamedTuple):
+    """Device half of the speculative pool (a pytree; donated each call).
+
+    One slot pool, two cache columns: at every round boundary both caches
+    hold exactly the committed prefix (positions <= pos-1) and ``tok`` is
+    the last committed token at position ``pos`` — the same invariant
+    ``decode_step`` keeps, so draft and target stay interchangeable views
+    of one sequence."""
+    d_caches: Any         # draft decode-cache pytree, leaves (R, B, ...)
+    t_caches: Any         # target decode-cache pytree
+    tok: jax.Array        # (B, 1) int32 — last committed token per slot
+    pos: jax.Array        # (B,) int32  — its cache position
+    key: jax.Array        # PRNG key, folded once per round
+    t: jax.Array          # () int32    — round counter
+
+
+class SpecEngine:
+    """Speculative continuous-batching engine for one draft/target pair.
+
+    Host surface mirrors ``StepEngine`` (slots, free-list, ``admit``,
+    ``step``, ``drain``) so the continuous scheduler drives either
+    interchangeably; one ``step()`` is a full speculative ROUND — a K+1
+    draft rollout plus one multi-token verify — committing between 1 and
+    K+1 tokens per live row.
+
+    ``params`` per call is ``(draft_params, target_params)``, or ``None``
+    when ``runner`` is set: the scheduler's runner receives
+    ``(which, fn, *args)`` with ``which`` in {"draft", "target"} and runs
+    the program against the right context slot (switching + hidden-load
+    accounting included) — the engine never captures weights.
+    """
+
+    def __init__(self, draft: LM, target: LM, batch_size: int, max_len: int,
+                 k: int = 4, temperature: float = 0.0, seed: int = 0,
+                 eos_id: Optional[int] = None):
+        for m, role in ((draft, "draft"), (target, "target")):
+            if any(mix != "attn" for mix, _ in m.pattern):
+                raise ValueError(
+                    f"speculative decode needs an all-attention {role} "
+                    "(recurrent state cannot rewind a rejected proposal)")
+            if m.cfg.sliding_window:
+                raise ValueError(
+                    f"speculative decode needs a full-cache {role} (ring "
+                    "writes wrap onto slots a rollback must preserve)")
+        if draft.cfg.vocab_size != target.cfg.vocab_size:
+            raise ValueError("draft and target must share a vocabulary")
+        self.draft_model = draft
+        self.target_model = target
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.k = k
+        self.temperature = temperature
+        self.seed = seed
+        self.eos_id = eos_id
+
+        B, K, T = batch_size, k, temperature
+        V = target.cfg.vocab_size
+
+        def _admit_target(tparams, state: SpecState, tokens, slots):
+            """Target prefill into cache rows `slots` + first-token draw
+            (the target's draw: the committed stream must be target-
+            distributed from token one).  Past t=0 the draw key is salted
+            (same hazard and same salt as ``StepEngine._admit``): the
+            stored key equals round t-1's roll base, whose small-integer
+            folds generated that round's draft fields — an unsalted
+            admission at t <= K would reuse one of them."""
+            S = tokens.shape[1]
+            logits, rows = target.prefill(tparams, tokens, max_len)
+            last = logits[:, -1]
+            if T > 0.0:
+                salted = jax.random.fold_in(state.key,
+                                            (1 << 30) ^ state.t)
+                akey = jnp.where(state.t == 0, state.key, salted)
+                g = jax.random.gumbel(akey, (B, V), jnp.float32)
+                first = jnp.argmax(last / T + g[slots], axis=-1)
+            else:
+                first = jnp.argmax(last, axis=-1)
+            first = first.astype(jnp.int32)
+            t_caches = target.insert_cache_rows(state.t_caches, rows, slots)
+            return first, state._replace(
+                t_caches=t_caches,
+                tok=state.tok.at[slots].set(first[:, None]),
+                pos=state.pos.at[slots].set(jnp.int32(S)))
+
+        def _admit_draft(dparams, state: SpecState, tokens, slots):
+            """Draft prefill into the same slots (its last-token logits are
+            unused — the draft only needs the prompt in its cache)."""
+            _, rows = draft.prefill(dparams, tokens, max_len)
+            return state._replace(
+                d_caches=draft.insert_cache_rows(state.d_caches, rows,
+                                                 slots))
+
+        def _roll(dparams, state: SpecState):
+            """K+1 draft decode steps from the committed token: iteration i
+            feeds block token i at pos+i, sampling proposal d_{i+1}.  The
+            extra iteration feeds d_K so its k/v lands in the draft cache
+            (needed when the whole block is accepted); its sample is
+            discarded.  Returns proposals (B, K), their logits (B, K, V),
+            and the rolled draft caches."""
+            base = jax.random.fold_in(state.key, state.t)
+
+            def body(carry, i):
+                caches, tok = carry
+                logits, caches = draft.decode_step(dparams, caches, tok,
+                                                   state.pos + i)
+                last = logits[:, -1]
+                if T > 0.0:
+                    g = jax.random.gumbel(jax.random.fold_in(base, i),
+                                          (B, V), jnp.float32)
+                    nxt = jnp.argmax(last / T + g, axis=-1)
+                else:
+                    nxt = jnp.argmax(last, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (caches, nxt[:, None]), (nxt, last)
+
+            (d_caches, _), (props, dlogits) = jax.lax.scan(
+                body, (state.d_caches, state.tok),
+                jnp.arange(K + 1, dtype=jnp.int32))
+            return (props[:K].T, dlogits[:K].transpose(1, 0, 2),
+                    state._replace(d_caches=d_caches))
+
+        def _verify(tparams, state: SpecState, props, dlogits, live,
+                    remaining):
+            """One multi-token target pass over [t0, d_1..d_K] + exact
+            accept/reject.  Commits m = min(n_accepted+1, remaining)
+            tokens per live row; stale cache writes past pos+m are masked
+            by position and overwritten by later rounds."""
+            block = jnp.concatenate([state.tok, props], axis=1)  # (B, K+1)
+            logits, t_caches = target.verify_step(tparams, state.t_caches,
+                                                  block, state.pos)
+            vkey = jax.random.fold_in(
+                jax.random.fold_in(state.key, state.t), 1 << 20)
+            toks, n = speculative_accept(vkey, props, dlogits, logits, T)
+            m = jnp.where(live, jnp.minimum(n + 1, remaining), 0)
+            tok_new = jnp.take_along_axis(
+                toks, jnp.clip(m - 1, 0, K)[:, None], axis=1)
+            tok_new = jnp.where(m[:, None] > 0, tok_new, state.tok)
+            pos_new = jnp.minimum(state.pos + m, max_len - 1)
+            # advance the key once per round (like StepEngine._step): a
+            # later admission must draw from a FRESH field, not the one
+            # every earlier admission into that slot already used
+            return toks, m, state._replace(
+                t_caches=t_caches, tok=tok_new, pos=pos_new,
+                key=jax.random.fold_in(state.key, state.t), t=state.t + 1)
+
+        self._admit_target_fn = jax.jit(_admit_target, donate_argnums=(1,))
+        self._admit_draft_fn = jax.jit(_admit_draft, donate_argnums=(1,))
+        self._roll_fn = jax.jit(_roll, donate_argnums=(1,))
+        self._verify_fn = jax.jit(_verify, donate_argnums=(1,))
+
+        # Execution hook: when set, every device program runs as
+        # ``runner(which, fn, *args)`` with which in {"draft", "target"} —
+        # the continuous scheduler activates the matching context slot and
+        # prefetches the other into the shadow slot before each call.
+        self.runner = None
+
+        self.state: Optional[SpecState] = None
+        self.slots: list[Optional[Generation]] = [None] * B
+        self._free: list[int] = list(range(B))
+        self._live = np.zeros(B, dtype=bool)
+        self._rid = 0
+        self.stats = {"rounds": 0, "row_rounds": 0, "draft_steps": 0,
+                      "committed_tokens": 0, "admitted_tokens": 0}
+        self.reset()
+
+    # ------------------------------------------------------------- lifecycle
+    def reset(self, seed: Optional[int] = None):
+        B = self.batch_size
+        caches = None
+        if self.state is not None and not any(
+                getattr(x, "is_deleted", lambda: False)()
+                for x in jax.tree.leaves((self.state.d_caches,
+                                          self.state.t_caches))):
+            caches = (self.state.d_caches, self.state.t_caches)
+        if caches is None:
+            caches = (self.draft_model.init_cache(B, self.max_len),
+                      self.target_model.init_cache(B, self.max_len))
+        self.state = SpecState(
+            d_caches=caches[0], t_caches=caches[1],
+            tok=jnp.zeros((B, 1), jnp.int32),
+            pos=jnp.zeros((B,), jnp.int32),
+            key=jax.random.PRNGKey(self.seed if seed is None else seed),
+            t=jnp.zeros((), jnp.int32))
+        self.slots = [None] * B
+        self._free = list(range(B))
+        self._live[:] = False
+
+    def _call(self, which: str, fn, params, *args):
+        if self.runner is not None:
+            return self.runner(which, fn, *args)
+        dp, tp = params
+        return fn(dp if which == "draft" else tp, *args)
+
+    # -------------------------------------------------------------- queries
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def live_slots(self) -> int:
+        return self.batch_size - len(self._free)
+
+    def live(self) -> list[Generation]:
+        return [g for g in self.slots if g is not None]
+
+    @property
+    def accepted_per_round(self) -> float:
+        """Mean committed tokens per row per verify pass, in [1, K+1]
+        (> 1 means speculation is paying: extra tokens rode each target
+        pass)."""
+        r = self.stats["row_rounds"]
+        return self.stats["committed_tokens"] / r if r else 0.0
+
+    # ------------------------------------------------------------- admission
+    def admit(self, params, tokens, max_new: int,
+              metas: Optional[list] = None,
+              seeds: Optional[list] = None) -> list[Generation]:
+        """Admit (b, S) prompt rows into b free slots (both caches).
+
+        Needs ``k`` extra cache slack beyond ``max_new``: a round's block
+        writes run up to K positions past the last committed token."""
+        if seeds and any(s is not None for s in seeds):
+            raise ValueError("SpecEngine does not honor per-request seeds; "
+                             "route seeded requests to a plain context")
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        b, S = tokens.shape
+        if b > len(self._free):
+            raise RuntimeError(f"admit({b}) with {len(self._free)} free "
+                               "slots")
+        if S + max_new + self.k > self.max_len:
+            raise ValueError(
+                f"prompt {S} + {max_new} new + {self.k} speculative slack "
+                f"exceeds max_len {self.max_len}")
+        slots = [self._free.pop(0) for _ in range(b)]
+        try:
+            tk = jnp.asarray(tokens, jnp.int32)
+            sl = jnp.asarray(slots, jnp.int32)
+            first, self.state = self._call("target", self._admit_target_fn,
+                                           params, self.state, tk, sl)
+            self.state = self._call("draft", self._admit_draft_fn, params,
+                                    self.state, tk, sl)
+        except BaseException:
+            self._free[0:0] = slots
+            raise
+        first = np.asarray(first)
+        gens = []
+        for i, s in enumerate(slots):
+            g = Generation(rid=self._rid, prompt_len=S, max_new=max_new,
+                           slot=s, meta=metas[i] if metas else None)
+            self._rid += 1
+            g.tokens.append(int(first[i]))
+            self.slots[s] = g
+            self._live[s] = True
+            gens.append(g)
+        self.stats["admitted_tokens"] += b
+        finished = self._retire_done(gens)
+        if finished:
+            # same-boundary re-admission of an instantly retired slot must
+            # not reuse this draw field (salt disjoint from round folds)
+            self.state = self.state._replace(key=jax.random.fold_in(
+                self.state.key, (1 << 30) | int(self.state.t)))
+        return gens
+
+    # ----------------------------------------------------------------- round
+    def step(self, params=None) -> list[Generation]:
+        """One speculative round for every live slot: K+1 draft steps, one
+        verify pass, 1..K+1 committed tokens per row.  Returns the
+        generations that finished at this boundary."""
+        if not self._live.any():
+            return []
+        remaining = np.zeros(self.batch_size, np.int32)
+        for s, g in enumerate(self.slots):
+            if g is not None:
+                remaining[s] = g.remaining
+        live = jnp.asarray(self._live)
+        props, dlogits, self.state = self._call(
+            "draft", self._roll_fn, params, self.state)
+        toks, m, self.state = self._call(
+            "target", self._verify_fn, params, self.state, props, dlogits,
+            live, jnp.asarray(remaining))
+        toks, m = np.asarray(toks), np.asarray(m)
+        stepped = []
+        committed = 0
+        for s in range(self.batch_size):
+            g = self.slots[s]
+            if g is None:
+                continue
+            new = [int(x) for x in toks[s, :m[s]]]
+            if self.eos_id is not None and self.eos_id in new:
+                new = new[:new.index(self.eos_id) + 1]
+            g.tokens.extend(new)
+            committed += len(new)
+            stepped.append(g)
+        self.stats["rounds"] += 1
+        self.stats["row_rounds"] += len(stepped)
+        self.stats["draft_steps"] += self.k + 1
+        self.stats["committed_tokens"] += committed
+        return self._retire_done(stepped)
+
+    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
+        finished = []
+        for g in gens:
+            eos = self.eos_id is not None and g.tokens[-1] == self.eos_id
+            if len(g.tokens) >= g.max_new or eos:
+                g.done = True
+                self.slots[g.slot] = None
+                self._live[g.slot] = False
+                self._free.append(g.slot)
+                finished.append(g)
+        return finished
+
+    def drain(self, params=None) -> list[Generation]:
+        out = []
+        while self.live_slots():
+            out.extend(self.step(params))
+        return out

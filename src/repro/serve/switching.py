@@ -31,6 +31,7 @@ from repro.core.context import ContextDescriptor, ContextSwitchEngine
 from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
 from repro.serve.engine import ServingEngine, StepEngine, _sample
+from repro.serve.speculative import SpecEngine
 
 
 @dataclass
@@ -50,6 +51,8 @@ class SwitchableServer:
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
         self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B)
+        self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
+        #                                                     pool B, K)
         self._state_snapshots: dict[str, Any] = {}
         self._req_seq = itertools.count()
         self.log: list[dict] = []
@@ -104,6 +107,22 @@ class SwitchableServer:
             eng = StepEngine(sm.model, batch_size, sm.max_len,
                              temperature=sm.temperature)
             self._step_engines[key] = eng
+        return eng
+
+    def spec_engine(self, name: str, draft: str, batch_size: int,
+                    k: int = 4) -> SpecEngine:
+        """Per-(target, draft) speculative engine (jitted once per pool
+        shape).  Like ``step_engine``, decode state persists across
+        context switches and weights are never captured — every draft /
+        target program runs against the matching context slot via the
+        scheduler's runner hook."""
+        key = (name, draft, batch_size, k)
+        eng = self._spec_engines.get(key)
+        if eng is None:
+            sm, dm = self._served[name], self._served[draft]
+            eng = SpecEngine(dm.model, sm.model, batch_size, sm.max_len,
+                             k=k, temperature=sm.temperature)
+            self._spec_engines[key] = eng
         return eng
 
     # ------------------------------------------------------------------

@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.decode_attention.ops import (
     decode_attention, decode_reference)
+from repro.kernels.verify_attention.ops import (
+    verify_attention, verify_reference)
 from repro.kernels.flash_attention.ops import (
     attention_reference, flash_attention)
 from repro.kernels.gmm.ops import (
@@ -106,6 +108,66 @@ def test_decode_matches_flash_last_row():
     dec = decode_attention(q[:, :, -1], k, v, S - 1, block_k=32)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
                                atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# verify attention (multi-token speculative verify)
+# ---------------------------------------------------------------------------
+
+def _verify_inputs(B, H, Hkv, S, hd, K, dtype, seed):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (B, K, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    bk = jax.random.normal(ks[3], (B, K, Hkv, hd), dtype)
+    bv = jax.random.normal(ks[4], (B, K, Hkv, hd), dtype)
+    return q, k, v, bk, bv
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,K,ring,pos", [
+    (2, 8, 2, 256, 64, 4, False, (100, 3)),    # per-row positions (GQA)
+    (1, 4, 4, 128, 32, 5, False, (120,)),      # MHA, near the cache end
+    (2, 8, 2, 64, 64, 4, True, (200, 30)),     # wrapped + unwrapped rows
+    (2, 4, 2, 64, 32, 3, True, (62, 64)),      # ring wraps mid-block
+    (1, 16, 1, 128, 64, 2, False, (1,)),       # single-token prompt
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_attention_matches_oracle(B, H, Hkv, S, hd, K, ring, pos,
+                                         dtype):
+    q, k, v, bk, bv = _verify_inputs(B, H, Hkv, S, hd, K, dtype, S + K)
+    pos = jnp.asarray(pos, jnp.int32)
+    out = verify_attention(q, k, v, bk, bv, pos, ring=ring, block_k=32)
+    ref = verify_reference(q, k, v, bk, bv, pos, ring=ring)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("S,ring,pos", [
+    (128, False, (40, 3)),
+    (64, True, (90, 30)),       # wrapped ring: the case write-then-mask
+    (64, True, (63, 66)),       # formulations get wrong
+])
+def test_verify_reference_is_sequentially_exact(S, ring, pos):
+    """The verify oracle == K iterations of the one-token decode oracle
+    with the block's k/v written progressively — query i sees exactly the
+    cache state the i-th sequential step would, including ring slots that
+    later block tokens overwrite."""
+    B, K, H, Hkv, hd = 2, 4, 4, 2, 32
+    q, k, v, bk, bv = _verify_inputs(B, H, Hkv, S, hd, K, jnp.float32, 11)
+    posv = np.asarray(pos, np.int32)
+    ref = np.asarray(verify_reference(q, k, v, bk, bv,
+                                      jnp.asarray(posv), ring=ring))
+    kk, vv = np.array(k), np.array(v)
+    for i in range(K):
+        p = posv + i
+        slot = p % S if ring else np.minimum(p, S - 1)
+        for b in range(B):
+            kk[b, :, slot[b]] = np.asarray(bk)[b, i]
+            vv[b, :, slot[b]] = np.asarray(bv)[b, i]
+        step = decode_reference(q[:, i], jnp.asarray(kk), jnp.asarray(vv),
+                                jnp.asarray(p), ring=ring)
+        np.testing.assert_allclose(ref[:, i], np.asarray(step), atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

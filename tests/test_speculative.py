@@ -1,0 +1,404 @@
+"""Speculative cascade decode: the multi-token verify path (LM.verify_step
+== a K-iteration decode loop), exact speculative sampling statistics, the
+SpecEngine's greedy identity with plain decode, per-request seed
+reproducibility under continuous batching, and the paused-context
+starvation guard."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine, StepEngine
+from repro.serve.speculative import SpecEngine, speculative_accept
+
+
+def _f32_model(name, **extra):
+    cfg = reduced_arch(name, dtype="float32", param_dtype="float32", **extra)
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _pooled(m, p, prompts, max_len):
+    """Admit rows one by one so each sits at its own position — the
+    continuous-batching state the verify path must handle."""
+    B = len(prompts)
+    caches = m.init_cache(B, max_len)
+    pos, toks = [], []
+    for r, pr in enumerate(prompts):
+        pr = np.atleast_2d(pr)
+        logits, rows = m.prefill(p, jnp.asarray(pr), max_len)
+        caches = m.insert_cache_rows(caches, rows, jnp.asarray([r]))
+        pos.append(pr.shape[1])
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return caches, np.asarray(pos, np.int32), np.asarray(toks)
+
+
+# ---------------------------------------------------------------------------
+# multi-token verify path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,extra,lens", [
+    ("tinyllama-1.1b", {}, (20, 7)),                      # dense, full cache
+    ("tinyllama-1.1b", {"sliding_window": 16}, (30, 9)),  # ring: one row
+    ("jamba-v0.1-52b", {}, (16, 16)),                     # wrapped mid-block
+])
+def test_verify_step_matches_decode_loop(name, extra, lens):
+    """verify_step over K tokens == K decode_step iterations: logits and
+    final caches, with per-row positions, ring wraparound (the windowed
+    case), and recurrent mixers (the hybrid case)."""
+    cfg, m, p = _f32_model(name, **extra)
+    max_len, K = 48, 4
+    prompts = [np.asarray(tokens_for(cfg, 1, L, seed=3 + i))
+               for i, L in enumerate(lens)]
+    caches, pos, _ = _pooled(m, p, prompts, max_len)
+    block = np.asarray(tokens_for(cfg, len(prompts), K, seed=7))
+
+    c = caches
+    outs = []
+    for i in range(K):
+        lg, c = m.decode_step(p, c, jnp.asarray(block[:, i:i + 1]),
+                              jnp.asarray(pos + i))
+        outs.append(np.asarray(lg[:, 0]))
+    loop = np.stack(outs, 1)
+
+    vl, vc = m.verify_step(p, caches, jnp.asarray(block), jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(vl), loop, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(vc), jax.tree.leaves(c)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# exact speculative sampling
+# ---------------------------------------------------------------------------
+
+def test_speculative_accept_matches_target_distribution():
+    """The first committed token's marginal equals the TARGET distribution
+    even under a disagreeing draft — the accept/residual construction is
+    exact, not approximate."""
+    V, K, T, N = 8, 2, 1.0, 40_000
+    ks = jax.random.split(jax.random.key(0), 4)
+    q_logits = jax.random.normal(ks[0], (K, V)) * 1.5
+    t_logits = jax.random.normal(ks[1], (K + 1, V)) * 1.5
+    qb = jnp.broadcast_to(q_logits, (N, K, V))
+    tb = jnp.broadcast_to(t_logits, (N, K + 1, V))
+    props = jax.random.categorical(ks[2], qb / T).astype(jnp.int32)
+    tokens, n = speculative_accept(ks[3], props, qb, tb, T)
+    n = np.asarray(n)
+    assert 0 < n.mean() < K          # both accept and reject paths exercised
+    emp = np.bincount(np.asarray(tokens[:, 0]), minlength=V) / N
+    expect = np.asarray(jax.nn.softmax(t_logits[0] / T))
+    # ~5 sigma for a multinomial proportion at N=40k
+    np.testing.assert_allclose(emp, expect, atol=0.013)
+
+
+def test_speculative_accept_greedy_is_target_argmax():
+    """Greedy acceptance commits exactly the target argmax prefix."""
+    V, K = 16, 3
+    ks = jax.random.split(jax.random.key(1), 2)
+    t_logits = jax.random.normal(ks[0], (4, K + 1, V))
+    tgt = np.asarray(jnp.argmax(t_logits, -1))
+    props = np.array(tgt[:, :K])
+    props[1, 1] = (props[1, 1] + 1) % V          # diverge row 1 at step 1
+    props[2, 0] = (props[2, 0] + 1) % V          # diverge row 2 at step 0
+    tokens, n = speculative_accept(
+        ks[1], jnp.asarray(props), jnp.zeros((4, K, V)),
+        t_logits, 0.0)
+    tokens, n = np.asarray(tokens), np.asarray(n)
+    np.testing.assert_array_equal(n, [K, 1, 0, K])
+    for b in range(4):
+        np.testing.assert_array_equal(tokens[b, :n[b] + 1], tgt[b, :n[b] + 1])
+
+
+# ---------------------------------------------------------------------------
+# SpecEngine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cascade():
+    """f32 draft/target pair: the greedy-identity guarantee is exact in
+    f32; bf16 caches can flip near-tie argmaxes because the multi-token
+    verify rounds k/v differently than the one-token loop (see the
+    SpecEngine docstring)."""
+    cfg_t, mt, pt = _f32_model("supersub-super")
+    cfg_d = reduced_arch("supersub-sub", dtype="float32",
+                         param_dtype="float32")
+    md = build_model(cfg_d, cache_dtype=jnp.float32)
+    return cfg_t, mt, pt, md, md.init(jax.random.key(1))
+
+
+def test_spec_engine_greedy_identical_to_generate(cascade):
+    """Greedy speculative decode is token-for-token identical to
+    StepEngine.generate for ANY draft — here a different model entirely —
+    with staggered admissions and retirement mid-stream."""
+    cfg, mt, pt, md, pd = cascade
+    prompt = np.asarray(tokens_for(cfg, 3, 16))
+    ref = ServingEngine(mt, pt, max_len=64).generate(prompt, steps=9)
+
+    eng = SpecEngine(md, mt, batch_size=3, max_len=64, k=4)
+    gens = eng.admit((pd, pt), prompt[0], max_new=9)
+    eng.step((pd, pt))                            # row 0 runs a round alone
+    for r in (1, 2):
+        gens += eng.admit((pd, pt), prompt[r], max_new=9)
+    while eng.live_slots():
+        eng.step((pd, pt))
+    out = np.stack([np.asarray(g.tokens) for g in gens])
+    np.testing.assert_array_equal(out, ref)
+    assert eng.stats["rounds"] < 9 * 3            # actually speculating
+    assert eng.free_slots() == 3
+
+
+def test_spec_engine_aligned_draft_accepts_everything(cascade):
+    """A draft sharing the target's weights accepts every proposal:
+    accepted-tokens/round hits the K+1 ceiling (modulo remaining-step
+    caps) and output still matches plain generate."""
+    cfg, mt, pt, _, _ = cascade
+    prompt = np.asarray(tokens_for(cfg, 2, 12, seed=5))
+    ref = ServingEngine(mt, pt, max_len=64).generate(prompt, steps=10)
+    eng = SpecEngine(mt, mt, batch_size=2, max_len=64, k=4)
+    gens = [g for r in range(2)
+            for g in eng.admit((pt, pt), prompt[r], max_new=10)]
+    while eng.live_slots():
+        eng.step((pt, pt))
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(g.tokens) for g in gens]), ref)
+    assert eng.accepted_per_round > 4.0           # ceiling is K+1 = 5
+
+
+def test_spec_engine_eos_retires_mid_block(cascade):
+    """An EOS inside an accepted block truncates the row there and frees
+    the slot."""
+    cfg, mt, pt, md, pd = cascade
+    prompt = np.asarray(tokens_for(cfg, 1, 12, seed=3))
+    probe = ServingEngine(mt, pt, max_len=64).generate(prompt, steps=8)[0]
+    eos = int(probe[2])
+    eng = SpecEngine(md, mt, batch_size=1, max_len=64, k=4, eos_id=eos)
+    g = eng.admit((pd, pt), prompt, max_new=8)[0]
+    while eng.live_slots():
+        eng.step((pd, pt))
+    assert g.done
+    assert g.tokens == [int(t) for t in probe[:list(probe).index(eos) + 1]]
+    assert eng.free_slots() == 1
+
+
+def test_spec_engine_admissions_draw_independently(cascade):
+    """The admission gumbel field must advance across rounds: re-admitting
+    the same prompt into the same slot at temperature>0 has to produce
+    fresh draws, not clones of the first request's."""
+    cfg, mt, pt, md, pd = cascade
+    prompt = np.asarray(tokens_for(cfg, 1, 10, seed=8))
+    eng = SpecEngine(md, mt, batch_size=1, max_len=48, k=3, temperature=1.5)
+    firsts = []
+    for _ in range(6):
+        g = eng.admit((pd, pt), prompt, max_new=4)[0]
+        while not g.done:
+            eng.step((pd, pt))
+        firsts.append(g.tokens[0])
+    assert len(set(firsts)) > 1
+
+
+def test_spec_engine_rejects_unsupported_models(cascade):
+    cfg, mt, pt, md, _ = cascade
+    hybrid = build_model(reduced_arch("jamba-v0.1-52b"))
+    with pytest.raises(ValueError):               # recurrent state: no rewind
+        SpecEngine(hybrid, mt, batch_size=1, max_len=32)
+    windowed = build_model(reduced_arch("supersub-super",
+                                        sliding_window=16))
+    with pytest.raises(ValueError):               # ring writes: no rollback
+        SpecEngine(md, windowed, batch_size=1, max_len=32)
+    with pytest.raises(ValueError):               # per-request seeds
+        eng = SpecEngine(md, mt, batch_size=1, max_len=32, k=2)
+        eng.admit(None, np.zeros((1, 4), np.int32), max_new=2, seeds=[7])
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: mixed speculative / plain traffic
+# ---------------------------------------------------------------------------
+
+def test_continuous_scheduler_mixed_spec_and_plain_traffic():
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-super", "supersub-sub", "tinyllama-1.1b"]
+    server, cfgs = build_server(names, 3, 40, load_delay_s=0.01,
+                                arch_overrides={"dtype": "float32",
+                                                "param_dtype": "float32"})
+    rng = np.random.default_rng(0)
+    reqs = []
+    for r in range(8):                 # spec target and plain model alternate
+        name = ["supersub-super", "tinyllama-1.1b"][r % 2]
+        reqs.append((name, rng.integers(0, cfgs[name].vocab_size, (1, 12))))
+    with ContinuousScheduler(server, batch_size=2,
+                             draft={"supersub-super": "supersub-sub"},
+                             spec_k=3) as sched:
+        with pytest.raises(ValueError):           # spec contexts: no seeds
+            sched.submit("supersub-super", reqs[0][1], steps=2, seed=1)
+        futs = [sched.submit(n, t, steps=6) for n, t in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+    snap = sched.snapshot()
+    assert snap["spec_rounds"] > 0
+    assert snap["loads"] >= 3          # all three contexts streamed in
+    for (name, toks), out in zip(reqs, outs):
+        ref = server.serve_batch(name, toks, steps=6)
+        np.testing.assert_array_equal(out, ref)
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# per-request seeds under continuous batching
+# ---------------------------------------------------------------------------
+
+def test_seeded_rows_reproduce_across_slots_and_traffic():
+    """A seeded row's draws depend only on (seed, prompt, position) — not
+    the slot it lands in, the pool seed, or neighboring traffic."""
+    cfg = reduced_arch("tinyllama-1.1b")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    prompt = np.asarray(tokens_for(cfg, 1, 12, seed=3))
+    filler = np.asarray(tokens_for(cfg, 1, 8, seed=4))
+
+    def run(pool_seed, pre_steps, seed):
+        eng = StepEngine(m, batch_size=3, max_len=48, temperature=0.9,
+                         seed=pool_seed)
+        eng.admit(p, filler, max_new=20)
+        for _ in range(pre_steps):
+            eng.step(p)
+        g = eng.admit(p, prompt, max_new=6, seeds=[seed])[0]
+        while not g.done:
+            eng.step(p)
+        return g.tokens
+
+    assert run(0, 0, 11) == run(5, 7, 11) == run(2, 3, 11)
+    assert run(0, 0, 11) != run(0, 0, 12)     # different seed, new stream
+    assert run(0, 0, None) != run(5, 7, None)  # unseeded: pool schedule
+
+
+def test_continuous_scheduler_seeded_resubmission():
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    server, cfgs = build_server(["supersub-super"], 2, 40, temperature=0.8)
+    cfg = cfgs["supersub-super"]
+    prompt = np.asarray(tokens_for(cfg, 2, 10, seed=6))
+
+    def serve(n_noise, seed):
+        with ContinuousScheduler(server, batch_size=4) as sched:
+            for i in range(n_noise):          # surrounding traffic varies
+                sched.submit("supersub-super",
+                             np.asarray(tokens_for(cfg, 1, 8, seed=i)),
+                             steps=5)
+            return sched.submit("supersub-super", prompt, steps=6,
+                                seed=seed).result(timeout=300)
+
+    a, b = serve(1, 123), serve(3, 123)
+    np.testing.assert_array_equal(a, b)       # reproduces row-for-row
+    assert not np.array_equal(a[0], a[1])     # rows are independent draws
+    assert not np.array_equal(serve(1, 124), a)
+    server.shutdown()
+
+
+def test_recycled_slot_admission_draws_fresh_field():
+    """A slot freed by step t and recycled at the next boundary must not
+    hand the newcomer the gumbel row step t drew from — the admission key
+    is salted past t=0."""
+    cfg = reduced_arch("tinyllama-1.1b")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    T = 0.9
+    pa = np.asarray(tokens_for(cfg, 1, 10, seed=1))
+    pb = np.asarray(tokens_for(cfg, 1, 10, seed=2))
+    eng = StepEngine(m, batch_size=1, max_len=48, temperature=T, seed=0)
+    eng.admit(p, pa, max_new=2)
+    eng.step(p)                    # retires A at step t=0 -> t becomes 1
+    g2 = eng.admit(p, pb, max_new=2)[0]
+    # the draw B would get if admission reused step 0's field
+    logits, _ = m.prefill(p, jnp.asarray(pb), 48)
+    stale = jax.random.gumbel(
+        jax.random.fold_in(jax.random.PRNGKey(0), 0), (1, cfg.vocab_size),
+        jnp.float32)
+    leaked = int(jnp.argmax(logits[:, -1] / T + stale[0], axis=-1)[0])
+    assert g2.tokens[0] != leaked
+
+
+def test_step_failure_fails_only_the_failing_context():
+    """A mid-tick step failure must fail the context the tick was acting
+    on — not whatever context the previous tick served."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    server, cfgs = build_server(["supersub-super", "supersub-sub"], 2, 40)
+    sched = ContinuousScheduler(server, batch_size=2)
+    bad = sched._engine("supersub-sub")
+
+    def boom(params=None):
+        raise RuntimeError("injected step failure")
+
+    bad.step = boom
+    with sched:
+        fa = sched.submit("supersub-super",
+                          np.asarray(tokens_for(cfgs["supersub-super"],
+                                                1, 8)), steps=4)
+        fb = sched.submit("supersub-sub",
+                          np.asarray(tokens_for(cfgs["supersub-sub"],
+                                                1, 8)), steps=4)
+        with pytest.raises(RuntimeError):
+            fb.result(timeout=120)
+        assert fa.result(timeout=300).shape == (1, 4)
+    server.shutdown()
+
+
+def test_serving_engine_bounds_cached_pools():
+    """Traffic over many batch shapes must not accumulate KV pools
+    without limit."""
+    cfg = reduced_arch("supersub-super")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    eng = ServingEngine(m, p, max_len=24)
+    for b in range(1, 7):
+        eng.generate(np.asarray(tokens_for(cfg, b, 8)), steps=2)
+    assert len(eng._step_engines) <= eng.max_cached_pools
+
+
+# ---------------------------------------------------------------------------
+# starvation guard
+# ---------------------------------------------------------------------------
+
+def test_starvation_guard_resumes_preempted_context():
+    """A context preempted with frozen live rows must finish even while a
+    hot competitor keeps its queue full: stranded rows age-boost exactly
+    like queued requests, so the paused context eventually outranks the
+    flood."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    server, cfgs = build_server(["supersub-super", "supersub-sub"], 2, 40)
+    cfg = cfgs["supersub-super"]
+    sched = ContinuousScheduler(server, batch_size=2, age_weight=200.0)
+    try:
+        # the victim: one long-running row on A
+        fut_a = sched.submit("supersub-super",
+                             np.asarray(tokens_for(cfg, 1, 8, seed=1)),
+                             steps=12)
+        cur = sched._tick(None)               # A activates, admits, steps
+        hot = np.asarray(tokens_for(cfgs["supersub-sub"], 1, 8, seed=2))
+        deadline = time.perf_counter() + 60.0
+        preempted = False
+        while not fut_a.done():
+            with sched._cv:
+                backlog = len(sched._queues["supersub-sub"])
+            for _ in range(6 - backlog):      # keep the competitor hot
+                sched.submit("supersub-sub", hot, steps=2)
+            cur = sched._tick(cur)
+            preempted |= cur == "supersub-sub"
+            assert time.perf_counter() < deadline, \
+                "stranded context never resumed under sustained pressure"
+        assert preempted                      # the flood did take over
+        assert fut_a.result().shape == (1, 12)
+    finally:
+        sched._stopping = True
+        sched.stop(drain=False)
+        server.shutdown()
