@@ -1,0 +1,145 @@
+"""Chunked vs one-shot prefill admission under mixed prompt traffic.
+
+One-shot admission prefills a whole prompt in one program: a long prompt
+stalls every live decode row for the full prefill, and every distinct
+prompt length compiles a fresh ``_admit_<S>`` program.  Chunked admission
+(``StepEngine(prefill_chunk=C)``) streams the prompt into its slot in
+fixed (b, C) chunks, at most one chunk per engine tick — the paper's
+hide-the-load principle applied to the prompt itself: configuration
+(here: prompt state) loads in bounded pieces behind active execution.
+
+Workload: a slot pool with short requests decoding (live rows) while a
+mix of LONG and short prompts arrives.  Per mode we report:
+
+  * ``decode_stall_p99_s`` — p99 wall time of one engine tick while at
+    least one live row was decoding (the latency a live token stream
+    sees); one-shot admission spikes this by the whole long prefill.
+  * ``ttft_p99_s`` — p99 submit-to-first-token time.
+  * ``prefill_compiles`` — compiled admission programs (one-shot: one
+    per distinct prompt length; chunked: ≤2 total, streaming + final).
+
+Gates: chunked p99 decode-stall strictly below one-shot, and ≤2 chunk
+programs across all prompt lengths.  CI's bench-smoke job asserts both.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import numpy as np
+
+POOL = 4
+MAX_LEN = 512
+CHUNK = 32
+SHORT_SEQ, LONG_SEQ = 8, 448
+DECODE_STEPS = 24
+
+
+def _build():
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models.model import build_model
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _traffic(cfg, seed=0):
+    """(tokens, steps) stream: two long-decode shorts first (they stay
+    live), then alternating long/short prompts — every long admission
+    lands while rows are decoding."""
+    rng = np.random.default_rng(seed)
+
+    def toks(s):
+        return rng.integers(0, cfg.vocab_size, (1, s))
+
+    reqs = [(toks(SHORT_SEQ), DECODE_STEPS), (toks(SHORT_SEQ), DECODE_STEPS)]
+    # distinct long lengths: each is a fresh compile for one-shot admission
+    for i, seq in enumerate((LONG_SEQ, SHORT_SEQ, LONG_SEQ - 64,
+                             SHORT_SEQ + 4, LONG_SEQ - 128, SHORT_SEQ)):
+        reqs.append((toks(seq), 8))
+    return reqs
+
+
+def _drive(eng, p, reqs):
+    """Admit-when-possible + step loop; returns (stalls, ttfts)."""
+    queue = deque(reqs)
+    submit_at, first_at = {}, {}
+    gens = []
+    stalls = []
+    while queue or eng.live_slots():
+        t0 = time.perf_counter()
+        had_live = bool(eng._live.any())
+        if queue and queue[0][0].shape[0] <= eng.free_slots():
+            toks, steps = queue.popleft()
+            for g in eng.admit(p, toks, max_new=steps):
+                submit_at[g.rid] = t0
+                gens.append(g)
+        eng.step(p)
+        now = time.perf_counter()
+        if had_live:
+            stalls.append(now - t0)
+        for g in gens:
+            if g.tokens and g.rid not in first_at:
+                first_at[g.rid] = now
+    ttfts = [first_at[r] - submit_at[r] for r in submit_at]
+    return stalls, ttfts
+
+
+def _run_mode(chunk, m, p, cfg, passes=3):
+    from repro.serve.engine import StepEngine
+    eng = StepEngine(m, batch_size=POOL, max_len=MAX_LEN,
+                     prefill_chunk=chunk)
+    _drive(eng, p, _traffic(cfg))          # warm pass: all compiles
+    # p99 over one pass's ~100 ticks is nearly a max — one OS scheduling
+    # hiccup can own it.  Time several passes and keep each metric's best
+    # pass: the admission-stall structure repeats every pass, the noise
+    # doesn't.
+    p99s, p50s, tt99s = [], [], []
+    for _ in range(passes):
+        eng.reset()
+        stalls, ttfts = _drive(eng, p, _traffic(cfg))
+        p99s.append(float(np.percentile(stalls, 99)))
+        p50s.append(float(np.percentile(stalls, 50)))
+        tt99s.append(float(np.percentile(ttfts, 99)))
+    if chunk is None:
+        compiles = eng._admit_fn._cache_size()
+    else:
+        compiles = (eng._chunk_fn._cache_size()
+                    + eng._chunk_final_fn._cache_size())
+    return {
+        "decode_stall_p99_s": round(min(p99s), 5),
+        "decode_stall_p50_s": round(min(p50s), 5),
+        "ttft_p99_s": round(min(tt99s), 5),
+        "prefill_compiles": compiles,
+    }
+
+
+def run() -> list[tuple]:
+    cfg, m, p = _build()
+    rows = []
+    results = {}
+    for mode, chunk in (("oneshot", None), ("chunked", CHUNK)):
+        results[mode] = _run_mode(chunk, m, p, cfg)
+        for k, v in results[mode].items():
+            note = (f"pool {POOL}, long={LONG_SEQ} short={SHORT_SEQ} "
+                    f"prompts, chunk={chunk}" if k == "decode_stall_p99_s"
+                    else "")
+            rows.append((f"prefill_{mode}_{k}", v, note))
+
+    c, o = results["chunked"], results["oneshot"]
+    rows.append(("chunked_stall_p99_beats_oneshot",
+                 int(c["decode_stall_p99_s"] < o["decode_stall_p99_s"]),
+                 f"{c['decode_stall_p99_s']} vs {o['decode_stall_p99_s']} s"))
+    rows.append(("chunked_compiles_bounded",
+                 int(c["prefill_compiles"] <= 2),
+                 f"{c['prefill_compiles']} chunk programs vs "
+                 f"{o['prefill_compiles']} one-shot (one per length)"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    for row in run():
+        print(*row, sep=",")

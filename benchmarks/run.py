@@ -17,10 +17,11 @@ import traceback
 
 
 def modules():
-    from benchmarks import (bench_continuous, bench_serve_queue,
-                            bench_speculative, bench_switch,
-                            fig5_critical_path, fig5_primitives, fig6_cases,
-                            fig6b_accuracy, figS1_pipeline, roofline_table)
+    from benchmarks import (bench_continuous, bench_prefill_chunk,
+                            bench_serve_queue, bench_speculative,
+                            bench_switch, fig5_critical_path,
+                            fig5_primitives, fig6_cases, fig6b_accuracy,
+                            figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -31,6 +32,7 @@ def modules():
         ("bench_serve_queue", bench_serve_queue.run),
         ("bench_continuous", bench_continuous.run),
         ("bench_speculative", bench_speculative.run),
+        ("bench_prefill_chunk", bench_prefill_chunk.run),
         ("roofline_table", roofline_table.run),
     ]
 
@@ -47,7 +49,8 @@ def _json_report(name: str, rows: list[tuple], wall_s: float) -> dict:
         key = str(n)
         if "req_per_s" in key or "tok_per_s" in key or "per_s" in key:
             report["throughput"][key] = v
-        if "latency" in key or key.endswith("_wall_s"):
+        if ("latency" in key or "ttft" in key or "stall" in key
+                or key.endswith("_wall_s")):
             report["latency"][key] = v
         if "hidden_load_fraction" in key:
             report.setdefault("hidden_load", {})[key] = v

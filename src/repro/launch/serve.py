@@ -103,6 +103,11 @@ def main(argv=None) -> int:
                          "verify targets)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculative mode: draft tokens per round")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous mode: admit prompts in fixed-size "
+                         "chunks of this many tokens, one chunk per step "
+                         "(bounded admission latency; one jitted chunk "
+                         "program instead of one per prompt length)")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -133,7 +138,8 @@ def main(argv=None) -> int:
         sched_cls = (SwitchScheduler if args.mode == "queue" else
                      lambda s: ContinuousScheduler(
                          s, batch_size=args.pool, draft=draft_map,
-                         spec_k=args.spec_k))
+                         spec_k=args.spec_k,
+                         prefill_chunk=args.prefill_chunk))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]

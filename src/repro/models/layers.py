@@ -408,7 +408,8 @@ def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
     return out, KVCache(k=k_new, v=v_new)
 
 
-def attention_verify(params, x, pos, cache: KVCache, cfg: ArchConfig):
+def attention_verify(params, x, pos, cache: KVCache, cfg: ArchConfig,
+                     wmask=None):
     """Multi-token verify decode (speculative decode's target pass).
 
     x: (B, K, D) — the K block tokens per row, at positions
@@ -420,6 +421,12 @@ def attention_verify(params, x, pos, cache: KVCache, cfg: ArchConfig):
     is not: a later token's write lands on a slot an earlier query must
     still read).  All K tokens' k/v are then written.  Returns
     (out (B, K, D), new cache).
+
+    ``wmask`` ((B, K) bool, optional) gates the cache WRITES only: a
+    False token computes normally but leaves its cache slot untouched.
+    Chunked prefill pads its last chunk to a fixed width with trailing
+    tokens — pads sit at the block's end, so no real token attends to
+    them, and the write mask keeps their k/v out of the cache.
     """
     B, K, _ = x.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -443,8 +450,14 @@ def attention_verify(params, x, pos, cache: KVCache, cfg: ArchConfig):
     # admission, so the duplicate clamped writes are harmless
     slots = positions % S if ring else jnp.minimum(positions, S - 1)
     rows = jnp.arange(B)[:, None]
-    k_new = cache.k.at[rows, :, slots].set(k.astype(cache.k.dtype))
-    v_new = cache.v.at[rows, :, slots].set(v.astype(cache.v.dtype))
+    kw, vw = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+    if wmask is not None:
+        # masked tokens write back what the slot already holds
+        m = wmask[:, :, None, None]
+        kw = jnp.where(m, kw, cache.k[rows, :, slots])
+        vw = jnp.where(m, vw, cache.v[rows, :, slots])
+    k_new = cache.k.at[rows, :, slots].set(kw)
+    v_new = cache.v.at[rows, :, slots].set(vw)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return out, KVCache(k=k_new, v=v_new)
 

@@ -172,8 +172,16 @@ class LM:
         return "chunkwise" if (L % c == 0 and L > c) else "parallel"
 
     def _apply_block(self, typ, p, x, positions, mode, pos, cache,
-                     big=None):
-        """One block.  Returns (x, new_cache, aux)."""
+                     big=None, max_len=None, wmask=None):
+        """One block.  Returns (x, new_cache, aux).
+
+        ``max_len`` (prefill mode) and ``wmask`` (verify mode; see
+        ``layers.attention_verify``) are threaded EXPLICITLY from the
+        caller: they are trace-time inputs, and stashing them on ``self``
+        (as an earlier revision did with ``_max_len``) lets one ``LM``
+        shared by two pools with different cache sizes retrace against
+        the other pool's value — silently building wrong-size caches.
+        """
         cfg = self.cfg
         mixer, ffn = typ
         h = layers.rmsnorm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
@@ -191,11 +199,12 @@ class LM:
                                      self.scan_unroll, self.mesh, self.rules)
             elif mode == "prefill":
                 a, nc = layers.attention_prefill(
-                    p["attn"], h, positions, cfg, self._max_len,
+                    p["attn"], h, positions, cfg, max_len,
                     self.cache_dtype, self.scan_unroll, self.mesh,
                     self.rules)
             elif mode == "verify":
-                a, nc = layers.attention_verify(p["attn"], h, pos, cache, cfg)
+                a, nc = layers.attention_verify(p["attn"], h, pos, cache,
+                                                cfg, wmask=wmask)
             else:
                 a, nc = layers.attention_decode(p["attn"], h, pos, cache, cfg)
         elif mixer == "mamba":
@@ -237,7 +246,8 @@ class LM:
         return x, nc, aux
 
     def _run_blocks(self, params, x, positions, mode, pos, caches,
-                    remat: bool = False):
+                    remat: bool = False, max_len: int | None = None,
+                    wmask=None):
         """Scan over repeats; python-unrolled period inside the body."""
         pattern = self.pattern
 
@@ -249,7 +259,8 @@ class LM:
                 key = f"b{i}"
                 c = None if cache_r is None else cache_r[key]
                 x, nc, a = self._apply_block(typ, params_r[key], x,
-                                             positions, mode, pos, c)
+                                             positions, mode, pos, c,
+                                             max_len=max_len, wmask=wmask)
                 new_caches[key] = nc
                 aux = aux + a
             if mode == "train":
@@ -300,12 +311,11 @@ class LM:
     def prefill(self, params, tokens, max_len: int, patch_embeds=None):
         """Populate the decode cache.  Returns (last-pos logits, caches)."""
         cfg = self.cfg
-        self._max_len = max_len
         x = self._embed_in(params, tokens, patch_embeds)
         B, S = x.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         x, aux, caches = self._run_blocks(params, x, positions, "prefill",
-                                          None, None)
+                                          None, None, max_len=max_len)
         x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
                            cfg.norm_eps)
         logits = self._head(params, x[:, -1:])
@@ -344,6 +354,49 @@ class LM:
         x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
                            cfg.norm_eps)
         return self._head(params, x), caches
+
+    def prefill_chunk(self, params, caches, tokens, pos, slots,
+                      wmask=None, need_logits: bool = True):
+        """Chunked prefill: score a (b, C) prompt *chunk* at per-row cache
+        offsets ``pos .. pos+C-1`` and write its k/v into batch rows
+        ``slots`` of the pooled ``caches`` (leaves (R, B, ...)).
+
+        This is the verify machinery pointed at admission: one fixed
+        (b, C) program processes every chunk of every prompt (prompts pad
+        to the chunk width; ``wmask`` keeps pad writes out of the cache),
+        so admission stops compiling one prefill program per prompt
+        length, and a long prompt streams into its slot across many calls
+        interleaved with decode steps — the paper's hide-the-load
+        principle applied to the prompt itself.  Rows at ``pos == 0``
+        have their gathered cache/state zeroed first, so chunk 0 starts
+        from the same blank state a fresh ``prefill`` does (a recycled
+        slot's stale row must not leak into the new request).
+
+        Only the named rows change — the same disturb-free invariant
+        ``insert_cache_rows`` keeps.  Returns (logits (b, C, V) f32 or
+        ``None`` when ``need_logits`` is False, new pooled caches).
+        """
+        cfg = self.cfg
+        slots = jnp.asarray(slots, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        sub = jax.tree.map(lambda c: c[:, slots], caches)
+
+        def _fresh(c):
+            m = (pos == 0).reshape((1, -1) + (1,) * (c.ndim - 2))
+            return jnp.where(m, jnp.zeros((), c.dtype), c)
+
+        sub = jax.tree.map(_fresh, sub)
+        x = self._embed_in(params, tokens)
+        x, aux, sub = self._run_blocks(params, x, None, "verify", pos, sub,
+                                       wmask=wmask)
+        logits = None
+        if need_logits:
+            x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                               cfg.norm_eps)
+            logits = self._head(params, x)
+        caches = jax.tree.map(lambda c, r: c.at[:, slots].set(r), caches,
+                              sub)
+        return logits, caches
 
     def decode_step_paged(self, params, bigs, acts, tokens, pos):
         """One decode step against a paged cache (see layers: BigKV/ActKV).

@@ -28,8 +28,8 @@ including single-row admissions (the per-row gumbel trick below).
 from __future__ import annotations
 
 import time
-from collections import OrderedDict
-from dataclasses import dataclass, field
+from collections import OrderedDict, deque
+from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -37,6 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.serve.pool import Generation, SlotPool
+
+__all__ = ["DecodeState", "Generation", "ServeStats", "ServingEngine",
+           "SlotPool", "StepEngine"]
 
 
 @dataclass
@@ -78,22 +82,18 @@ class DecodeState(NamedTuple):
 
 
 @dataclass
-class Generation:
-    """Host-side handle for one admitted request (one slot row)."""
-    rid: int
-    prompt_len: int
-    max_new: int
-    slot: int = -1
-    tokens: list = field(default_factory=list)
-    done: bool = False
-    meta: Any = None                      # scheduler payload (futures etc.)
-
-    @property
-    def remaining(self) -> int:
-        return self.max_new - len(self.tokens)
+class _PendingPrefill:
+    """One admitted-but-still-prefilling request (chunked admission):
+    its slots are reserved, its prompt streams into their cache rows one
+    chunk per engine tick."""
+    tokens: np.ndarray                    # (b, S) full prompt, int32
+    gens: list                            # Generation handles (slots set)
+    rkeys: np.ndarray                     # (b, 2) uint32 per-row keys
+    seeded: np.ndarray                    # (b,) bool
+    done: int = 0                         # prompt tokens already chunked
 
 
-class StepEngine:
+class StepEngine(SlotPool):
     """Continuous-batching decode engine for one model context.
 
     Fixed batch shape ``batch_size``; requests occupy slots.  All device
@@ -106,17 +106,50 @@ class StepEngine:
     ``params`` is passed per call: under the context-switching server the
     weights live in a ``ContextSwitchEngine`` slot that may be evicted and
     reloaded between steps; the engine never captures them.
+
+    ``prefill_chunk=C`` switches admission to *chunked prefill*: instead
+    of one whole-prompt program per prompt length, ``admit`` reserves the
+    slots and queues the prompt, and each engine tick runs at most ONE
+    fixed-shape (b, C) chunk program (``LM.prefill_chunk``, the verify
+    machinery pointed at admission) before the decode step.  Admission
+    latency for live rows is therefore bounded by one chunk regardless of
+    prompt length, prompts pad to the chunk width (≤2 compiled chunk
+    programs total: streaming + final), and the prompt streams into its
+    slot behind decode the way context loads stream into the shadow slot.
+    The final chunk samples the first token under the same admission
+    gumbel rules as one-shot admit, so greedy and seeded-temperature
+    streams are token-identical across chunk sizes (tested).  Chunked
+    mode needs an all-attention model with a full (non-ring) cache: a
+    mid-prefill row's parked decode writes go to the last cache slot,
+    which a ring would wrap onto live window entries, and recurrent state
+    cannot carry across host-side chunk boundaries.
     """
 
     def __init__(self, model: LM, batch_size: int, max_len: int,
                  temperature: float = 0.0, seed: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.model = model
-        self.batch_size = batch_size
         self.max_len = max_len
         self.temperature = temperature
         self.seed = seed
         self.eos_id = eos_id
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
+            if any(mix != "attn" for mix, _ in model.pattern):
+                raise ValueError(
+                    "chunked prefill needs an all-attention model "
+                    "(recurrent state cannot carry across chunk "
+                    "boundaries)")
+            if model.cfg.sliding_window:
+                raise ValueError(
+                    "chunked prefill needs a full (non-ring) cache: a "
+                    "pending row's parked decode writes would wrap onto "
+                    "window entries the chunks just filled")
+        self.prefill_chunk = prefill_chunk
+        self._pending: deque[_PendingPrefill] = deque()
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
 
@@ -195,8 +228,58 @@ class StepEngine:
                 rkey=state.rkey.at[slots].set(rkeys),
                 seeded=state.seeded.at[slots].set(seeded))
 
+        C = prefill_chunk
+
+        def _chunk(params, state: DecodeState, tokens, pos, slots):
+            """One streaming (non-final) prefill chunk: write the (b, C)
+            block's k/v into cache rows `slots` at per-row offsets `pos`.
+            No logits, no sampling — ONE compiled program serves every
+            non-final chunk of every prompt length."""
+            _, caches = model.prefill_chunk(params, state.caches, tokens,
+                                            pos, slots, need_logits=False)
+            return state._replace(caches=caches)
+
+        def _chunk_final(params, state: DecodeState, tokens, pos, slots,
+                         nvalid, rkeys, seeded):
+            """Final prefill chunk: the block is padded to C (`nvalid`
+            real tokens per row; the write mask keeps pad k/v out of the
+            cache) and the last real token's logits sample the first
+            token under the SAME admission gumbel rules as one-shot
+            ``_admit`` — shared (B, V) field indexed by slot for pool
+            rows, per-row key folded with the prompt length for seeded
+            rows — so chunked and one-shot admission are token-identical
+            for greedy and seeded-temperature streams."""
+            wmask = jnp.arange(C, dtype=jnp.int32)[None, :] < nvalid[:, None]
+            logits, caches = model.prefill_chunk(params, state.caches,
+                                                 tokens, pos, slots,
+                                                 wmask=wmask)
+            last = jnp.take_along_axis(
+                logits, (nvalid - 1)[:, None, None], axis=1)[:, 0]  # (b, V)
+            plen = pos + nvalid                    # (b,) prompt length S
+            if T > 0.0:
+                salted = jax.random.fold_in(state.key,
+                                            (1 << 30) ^ state.t)
+                akey = jnp.where(state.t == 0, state.key, salted)
+                g = jax.random.gumbel(akey, (B, V), jnp.float32)[slots]
+                g = jax.lax.cond(
+                    seeded.any(),
+                    lambda g: jnp.where(seeded[:, None],
+                                        _row_gumbel(rkeys, plen), g),
+                    lambda g: g, g)
+                first = jnp.argmax(last / T + g, axis=-1)
+            else:
+                first = jnp.argmax(last, axis=-1)
+            first = first.astype(jnp.int32)
+            return first, state._replace(
+                caches=caches, tok=state.tok.at[slots].set(first[:, None]),
+                pos=state.pos.at[slots].set(plen),
+                rkey=state.rkey.at[slots].set(rkeys),
+                seeded=state.seeded.at[slots].set(seeded))
+
         self._step_fn = jax.jit(_step, donate_argnums=(1,))
         self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
+        self._chunk_fn = jax.jit(_chunk, donate_argnums=(1,))
+        self._chunk_final_fn = jax.jit(_chunk_final, donate_argnums=(1,))
 
         # Execution hook: when set, every device program runs as
         # ``runner(fn, params, *args)`` — the continuous scheduler points
@@ -205,10 +288,7 @@ class StepEngine:
         self.runner = None
 
         self.state: Optional[DecodeState] = None
-        self.slots: list[Optional[Generation]] = [None] * B
-        self._free: list[int] = list(range(B))
-        self._live = np.zeros(B, dtype=bool)
-        self._rid = 0
+        self._pool_init(B)
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
@@ -233,9 +313,8 @@ class StepEngine:
             t=jnp.zeros((), jnp.int32),
             rkey=jnp.zeros((B, 2), jnp.uint32),
             seeded=jnp.zeros((B,), bool))
-        self.slots = [None] * B
-        self._free = list(range(B))
-        self._live[:] = False
+        self._pool_reset()
+        self._pending.clear()
 
     def _call(self, fn, params, *args):
         if self.runner is None:
@@ -243,112 +322,148 @@ class StepEngine:
         return self.runner(fn, params, *args)
 
     # -------------------------------------------------------------- queries
-    def free_slots(self) -> int:
-        return len(self._free)
-
-    def live_slots(self) -> int:
-        return self.batch_size - len(self._free)
-
-    def live(self) -> list[Generation]:
-        return [g for g in self.slots if g is not None]
+    def pending_slots(self) -> int:
+        return sum(len(ps.gens) for ps in self._pending)
 
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,
               metas: Optional[list] = None,
               seeds: Optional[list] = None) -> list[Generation]:
-        """Admit (b, S) prompt rows into b free slots (prefill + first
-        token).  Raises if the pool lacks room or the request would run
-        past the cache; callers gate on ``free_slots()``.
+        """Admit (b, S) prompt rows into b free slots.  Raises if the pool
+        lacks room or the request would run past the cache; callers gate
+        on ``free_slots()``.
+
+        One-shot mode (``prefill_chunk is None``): prefill + first token
+        happen here, in one whole-prompt program.  Chunked mode: the
+        slots are reserved and the prompt queued; chunks stream in one
+        per subsequent ``step``/``prefill_tick``, and the returned
+        ``Generation``s stay token-less until their final chunk samples
+        the first token.
 
         ``seeds``: optional per-row sampling seeds — ``None`` entries keep
         the pool's shared key schedule; an int (or raw (2,) uint32 key)
         pins that row to its own key column, making its draws reproducible
         independent of slot, admission boundary, and surrounding traffic.
         """
-        tokens = np.asarray(tokens)
-        if tokens.ndim == 1:
-            tokens = tokens[None]
+        tokens, rkeys, seeded = self._admit_args(tokens, metas, seeds)
         b, S = tokens.shape
-        if b > len(self._free):
-            raise RuntimeError(f"admit({b}) with {len(self._free)} free "
-                               "slots")
         if S + max_new > self.max_len:
             raise ValueError(f"prompt {S} + {max_new} new tokens exceeds "
                              f"max_len {self.max_len}")
-        rkeys = np.zeros((b, 2), np.uint32)
-        seeded = np.zeros((b,), bool)
-        for i, s in enumerate(seeds or []):
-            if s is None:
-                continue
-            rkeys[i] = np.asarray(s if hasattr(s, "shape") and
-                                  np.shape(s) == (2,)
-                                  else jax.random.PRNGKey(int(s)))
-            seeded[i] = True
-        slots = [self._free.pop(0) for _ in range(b)]
+        if self.prefill_chunk is not None:
+            return self._admit_chunked(tokens, max_new, metas, rkeys,
+                                       seeded)
+        slots = self._take_slots(b)
         try:
             first, self.state = self._call(
                 self._admit_fn, params, self.state,
                 jnp.asarray(tokens, jnp.int32), jnp.asarray(slots, jnp.int32),
                 jnp.asarray(rkeys), jnp.asarray(seeded))
         except BaseException:
-            self._free[0:0] = slots      # failed admit must not leak slots
+            self._restore_slots(slots)   # failed admit must not leak slots
             raise
-        first = np.asarray(first)
-        gens = []
-        for i, s in enumerate(slots):
-            g = Generation(rid=self._rid, prompt_len=S, max_new=max_new,
-                           slot=s, meta=metas[i] if metas else None)
-            self._rid += 1
-            g.tokens.append(int(first[i]))
-            self.slots[s] = g
-            self._live[s] = True
-            gens.append(g)
+        gens = self._register(slots, S, max_new, metas,
+                              first=np.asarray(first))
         if self._retire_done(gens):
             # a slot freed with no step in between (steps==1 / EOS at
             # admission): advance the key so a same-boundary re-admission
-            # of that slot cannot reuse this draw field.  The salt lives
-            # above 2^30, disjoint from step folds (which use t).
-            self.state = self.state._replace(key=jax.random.fold_in(
-                self.state.key, (1 << 30) | int(self.state.t)))
+            # of that slot cannot reuse this draw field.
+            self._salt_admit_key()
         return gens
+
+    def _admit_chunked(self, tokens, max_new, metas, rkeys, seeded):
+        """Reserve slots and queue the prompt for chunked prefill.  The
+        reserved rows' parked position moves to the LAST cache slot:
+        every decode step still writes a (garbage) k/v for every row, and
+        a pending row's default parked slot could sit inside the prompt
+        region a later chunk just filled.  Slot max_len-1 is the one safe
+        parking spot because it is never READABLE: with the admit check
+        ``prompt + max_new <= max_len``, a row's decode feeds stop at
+        position S+max_new-2 <= max_len-2, and the attention mask only
+        reads slots <= the query position — nothing ever overwrites the
+        parked garbage, nothing ever attends to it.  (Relaxing the admit
+        bound, adding speculative K-slack, or a ring cache would break
+        this — hence the all-attention/non-ring constructor gate.)"""
+        b, S = tokens.shape
+        slots = self._take_slots(b)
+        self.state = self.state._replace(
+            pos=self.state.pos.at[jnp.asarray(slots, jnp.int32)].set(
+                self.max_len - 1))
+        gens = self._register(slots, S, max_new, metas)
+        self._pending.append(_PendingPrefill(
+            tokens=np.asarray(tokens, np.int32), gens=gens, rkeys=rkeys,
+            seeded=seeded))
+        return gens
+
+    def prefill_tick(self, params) -> list[Generation]:
+        """Run at most ONE chunk program — the admission budget.  A live
+        decode row therefore waits for one (b, C) chunk per step, never a
+        whole prompt.  Returns generations that finished at this boundary
+        (a final chunk can instant-retire: steps==1, or EOS as the first
+        token)."""
+        if not self._pending:
+            return []
+        C = self.prefill_chunk
+        ps = self._pending[0]
+        b, S = ps.tokens.shape
+        start = ps.done
+        end = min(start + C, S)
+        nvalid = end - start
+        chunk = np.zeros((b, C), np.int32)
+        chunk[:, :nvalid] = ps.tokens[:, start:end]
+        slots = np.asarray([g.slot for g in ps.gens], np.int32)
+        pos = np.full((b,), start, np.int32)
+        try:
+            if end < S:
+                self.state = self._call(
+                    self._chunk_fn, params, self.state,
+                    jnp.asarray(chunk), jnp.asarray(pos),
+                    jnp.asarray(slots))
+                ps.done = end
+                return []
+            first, self.state = self._call(
+                self._chunk_final_fn, params, self.state,
+                jnp.asarray(chunk), jnp.asarray(pos), jnp.asarray(slots),
+                jnp.full((b,), nvalid, jnp.int32), jnp.asarray(ps.rkeys),
+                jnp.asarray(ps.seeded))
+        except BaseException:
+            # a failed chunk abandons the whole request: release its rows
+            # so the pool keeps serving (the caller fails the futures)
+            self._pending.popleft()
+            for g in ps.gens:
+                self.slots[g.slot] = None
+            self._restore_slots([g.slot for g in ps.gens])
+            raise
+        self._pending.popleft()
+        first = np.asarray(first)
+        for i, g in enumerate(ps.gens):
+            g.tokens.append(int(first[i]))
+            self._live[g.slot] = True
+        finished = self._retire_done(ps.gens)
+        if finished:
+            self._salt_admit_key()
+        return finished
 
     # ---------------------------------------------------------------- step
     def step(self, params) -> list[Generation]:
-        """One decode step for every live slot.  Returns the generations
-        that finished (EOS or step limit) at this boundary; their slots
-        are already back on the free-list."""
+        """One engine tick: at most one prefill chunk (chunked admission),
+        then one decode step for every live slot.  Returns the
+        generations that finished (EOS or step limit) at this boundary;
+        their slots are already back on the free-list."""
+        finished = self.prefill_tick(params) if self._pending else []
         if not self._live.any():
-            return []
+            return finished
         nxt, self.state = self._call(self._step_fn, params, self.state,
                                      jnp.asarray(self._live))
         nxt = np.asarray(nxt)
         stepped = []
         for s in range(self.batch_size):
             g = self.slots[s]
-            if g is None:
-                continue
+            if g is None or not self._live[s]:
+                continue                  # empty, or reserved mid-prefill
             g.tokens.append(int(nxt[s]))
             stepped.append(g)
-        return self._retire_done(stepped)
-
-    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
-        finished = []
-        for g in gens:
-            eos = self.eos_id is not None and g.tokens[-1] == self.eos_id
-            if len(g.tokens) >= g.max_new or eos:
-                g.done = True
-                self.slots[g.slot] = None
-                self._live[g.slot] = False
-                self._free.append(g.slot)
-                finished.append(g)
-        return finished
-
-    def drain(self, params) -> list[Generation]:
-        """Step until the pool is empty; returns everything finished."""
-        out = []
-        while self.live_slots():
-            out.extend(self.step(params))
-        return out
+        return finished + self._retire_done(stepped)
 
 
 # ---------------------------------------------------------------------------

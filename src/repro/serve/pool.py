@@ -1,0 +1,181 @@
+"""Host-side slot-pool bookkeeping shared by the serving engines.
+
+``StepEngine`` and ``SpecEngine`` keep the same host-side pool around
+their (different) device programs: a fixed bank of ``batch_size`` slots,
+a free-list over them, per-slot ``Generation`` handles, retirement back
+to the free-list, and the instant-retire key salt.  ``SlotPool`` is that
+bookkeeping extracted once, so admission-path changes (validation,
+chunked prefill, recycling order) land in one place and every engine
+inherits them.
+
+Pool invariants:
+
+  * **FIFO recycling** — slots are taken from the *front* of the
+    free-list and retired to the *back*.  The order is load-bearing: the
+    admission draw indexes a shared (B, V) gumbel field by slot, so the
+    seeded-draw reproducibility tests pin which slot a re-admission
+    lands in.  A failed admission restores its slots to the front in
+    their original order (``_restore_slots``), making the retry
+    indistinguishable from the failed call.
+  * **Admission is validated up front** — ``metas`` / ``seeds`` must
+    match the prompt row count exactly.  An over-long ``seeds`` list
+    used to raise ``IndexError`` deep in the key plumbing, and a short
+    ``metas`` list silently mislabeled rows so retirement routed into
+    the wrong inflight record.
+  * **The device state is the engine's** — this class never touches
+    caches or programs; engines that keep a ``.key``/``.t`` NamedTuple
+    in ``self.state`` get ``_salt_admit_key`` (the instant-retire salt)
+    for free.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Generation:
+    """Host-side handle for one admitted request (one slot row)."""
+    rid: int
+    prompt_len: int
+    max_new: int
+    slot: int = -1
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    meta: Any = None                      # scheduler payload (futures etc.)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+
+class SlotPool:
+    """Mixin: host-side slot pool for a fixed-shape device batch.
+
+    Subclasses call ``_pool_init`` once and ``_pool_reset`` from their
+    ``reset``; they own the device state and the jitted programs.
+    """
+
+    eos_id: Optional[int] = None
+
+    def _pool_init(self, batch_size: int):
+        self.batch_size = batch_size
+        self.slots: list[Optional[Generation]] = [None] * batch_size
+        self._free: deque[int] = deque(range(batch_size))
+        self._live = np.zeros(batch_size, dtype=bool)
+        self._rid = 0
+
+    def _pool_reset(self):
+        self.slots = [None] * self.batch_size
+        self._free = deque(range(self.batch_size))
+        self._live[:] = False
+
+    # -------------------------------------------------------------- queries
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def live_slots(self) -> int:
+        """Occupied slots: live decode rows plus rows still mid-prefill
+        (both hold a slot and both are pending work)."""
+        return self.batch_size - len(self._free)
+
+    def pending_slots(self) -> int:
+        """Slots reserved but still mid-prefill (chunked admission)."""
+        return 0
+
+    def live(self) -> list[Generation]:
+        return [g for g in self.slots if g is not None]
+
+    # ------------------------------------------------------------ admission
+    def _admit_args(self, tokens, metas, seeds):
+        """Validate + normalize admission arguments.
+
+        Returns ``(tokens (b, S) int32, rkeys (b, 2) uint32, seeded (b,)
+        bool)``.  ``seeds`` entries may be ``None`` (pool schedule), an
+        int seed, or a raw (2,) uint32 key.
+        """
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        b, S = tokens.shape
+        if metas is not None and len(metas) != b:
+            raise ValueError(f"metas has {len(metas)} entries for {b} "
+                             "prompt rows")
+        if seeds is not None and len(seeds) != b:
+            raise ValueError(f"seeds has {len(seeds)} entries for {b} "
+                             "prompt rows")
+        rkeys = np.zeros((b, 2), np.uint32)
+        seeded = np.zeros((b,), bool)
+        for i, s in enumerate(seeds or []):
+            if s is None:
+                continue
+            rkeys[i] = np.asarray(s if hasattr(s, "shape") and
+                                  np.shape(s) == (2,)
+                                  else jax.random.PRNGKey(int(s)))
+            seeded[i] = True
+        return tokens, rkeys, seeded
+
+    def _take_slots(self, b: int) -> list[int]:
+        if b > len(self._free):
+            raise RuntimeError(f"admit({b}) with {len(self._free)} free "
+                               "slots")
+        return [self._free.popleft() for _ in range(b)]
+
+    def _restore_slots(self, slots: list[int]):
+        """Failed admission: the slots go back to the FRONT in their
+        original order, so a retry draws exactly what the failed call
+        drew (FIFO order is load-bearing — see the class docstring)."""
+        self._free.extendleft(reversed(slots))
+
+    def _register(self, slots: list[int], prompt_len: int, max_new: int,
+                  metas, first=None) -> list[Generation]:
+        """Create one ``Generation`` per slot.  With ``first`` (the
+        sampled first tokens) the rows go live; without it they are
+        reserved-but-pending (chunked admission fills them later)."""
+        gens = []
+        for i, s in enumerate(slots):
+            g = Generation(rid=self._rid, prompt_len=prompt_len,
+                           max_new=max_new, slot=s,
+                           meta=metas[i] if metas else None)
+            self._rid += 1
+            if first is not None:
+                g.tokens.append(int(first[i]))
+                self._live[s] = True
+            self.slots[s] = g
+            gens.append(g)
+        return gens
+
+    # ----------------------------------------------------------- retirement
+    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
+        finished = []
+        for g in gens:
+            eos = (self.eos_id is not None and g.tokens
+                   and g.tokens[-1] == self.eos_id)
+            if len(g.tokens) >= g.max_new or eos:
+                g.done = True
+                self.slots[g.slot] = None
+                self._live[g.slot] = False
+                self._free.append(g.slot)
+                finished.append(g)
+        return finished
+
+    def _salt_admit_key(self):
+        """Advance the engine's admission key after an instant retire: a
+        slot freed with no step in between (steps==1 / EOS at admission)
+        must not hand a same-boundary re-admission the draw field the
+        retiree already used.  The salt lives above 2^30, disjoint from
+        the step/round folds (which use small ``t``)."""
+        self.state = self.state._replace(key=jax.random.fold_in(
+            self.state.key, (1 << 30) | int(self.state.t)))
+
+    # ----------------------------------------------------------------- loop
+    def drain(self, params=None) -> list[Generation]:
+        """Step until the pool is empty; returns everything finished."""
+        out = []
+        while self.live_slots():
+            out.extend(self.step(params))
+        return out

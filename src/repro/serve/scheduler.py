@@ -332,9 +332,15 @@ class ContinuousScheduler:
     def __init__(self, server, batch_size: int = 8,
                  age_weight: float = 10.0, cost_weight: float = 1.0,
                  switch_margin: float = 1.5, preempt_margin: float = 6.0,
-                 draft: Optional[dict] = None, spec_k: int = 4):
+                 draft: Optional[dict] = None, spec_k: int = 4,
+                 prefill_chunk: Optional[int] = None):
         self.server = server
         self.batch_size = batch_size
+        # chunked admission: plain contexts' engines split prefill into
+        # (b, C) chunks, one per tick, so a long prompt's admission hides
+        # behind decode steps instead of stalling them (speculative
+        # contexts keep one-shot admission)
+        self.prefill_chunk = prefill_chunk
         self.age_weight = age_weight
         self.cost_weight = cost_weight
         self.switch_margin = switch_margin
@@ -438,7 +444,8 @@ class ContinuousScheduler:
     def _engine(self, name: str):
         if name in self.draft:
             return self._spec_engine(name)
-        eng = self.server.step_engine(name, self.batch_size)
+        eng = self.server.step_engine(name, self.batch_size,
+                                      prefill_chunk=self.prefill_chunk)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -479,7 +486,8 @@ class ContinuousScheduler:
                 eng = self.server._spec_engines.get(
                     (name, self.draft[name], self.batch_size, self.spec_k))
             else:
-                eng = self.server._step_engines.get((name, self.batch_size))
+                eng = self.server._step_engines.get(
+                    (name, self.batch_size, self.prefill_chunk))
             if eng is not None and eng.live_slots():
                 out[name] = eng
         return out
@@ -689,7 +697,7 @@ class ContinuousScheduler:
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(exc)
-        for (name, bsz), eng in list(self.server._step_engines.items()):
+        for (name, bsz, _c), eng in list(self.server._step_engines.items()):
             if bsz == self.batch_size and (cur is None or name == cur) \
                     and eng.live_slots():
                 eng.reset()

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
-from repro.serve.engine import Generation
+from repro.serve.pool import Generation, SlotPool
 
 
 def speculative_accept(key, proposals, draft_logits, target_logits,
@@ -121,14 +121,14 @@ class SpecState(NamedTuple):
     t: jax.Array          # () int32    — round counter
 
 
-class SpecEngine:
+class SpecEngine(SlotPool):
     """Speculative continuous-batching engine for one draft/target pair.
 
-    Host surface mirrors ``StepEngine`` (slots, free-list, ``admit``,
-    ``step``, ``drain``) so the continuous scheduler drives either
-    interchangeably; one ``step()`` is a full speculative ROUND — a K+1
-    draft rollout plus one multi-token verify — committing between 1 and
-    K+1 tokens per live row.
+    Host surface is the shared ``SlotPool`` base ``StepEngine`` also
+    builds on (slots, free-list, ``admit``, ``step``, ``drain``) so the
+    continuous scheduler drives either interchangeably; one ``step()`` is
+    a full speculative ROUND — a K+1 draft rollout plus one multi-token
+    verify — committing between 1 and K+1 tokens per live row.
 
     ``params`` per call is ``(draft_params, target_params)``, or ``None``
     when ``runner`` is set: the scheduler's runner receives
@@ -262,10 +262,7 @@ class SpecEngine:
         self.runner = None
 
         self.state: Optional[SpecState] = None
-        self.slots: list[Optional[Generation]] = [None] * B
-        self._free: list[int] = list(range(B))
-        self._live = np.zeros(B, dtype=bool)
-        self._rid = 0
+        self._pool_init(B)
         self.stats = {"rounds": 0, "row_rounds": 0, "draft_steps": 0,
                       "committed_tokens": 0, "admitted_tokens": 0}
         self.reset()
@@ -288,9 +285,7 @@ class SpecEngine:
             pos=jnp.zeros((B,), jnp.int32),
             key=jax.random.PRNGKey(self.seed if seed is None else seed),
             t=jnp.zeros((), jnp.int32))
-        self.slots = [None] * B
-        self._free = list(range(B))
-        self._live[:] = False
+        self._pool_reset()
 
     def _call(self, which: str, fn, params, *args):
         if self.runner is not None:
@@ -299,15 +294,6 @@ class SpecEngine:
         return fn(dp if which == "draft" else tp, *args)
 
     # -------------------------------------------------------------- queries
-    def free_slots(self) -> int:
-        return len(self._free)
-
-    def live_slots(self) -> int:
-        return self.batch_size - len(self._free)
-
-    def live(self) -> list[Generation]:
-        return [g for g in self.slots if g is not None]
-
     @property
     def accepted_per_round(self) -> float:
         """Mean committed tokens per row per verify pass, in [1, K+1]
@@ -327,18 +313,13 @@ class SpecEngine:
         if seeds and any(s is not None for s in seeds):
             raise ValueError("SpecEngine does not honor per-request seeds; "
                              "route seeded requests to a plain context")
-        tokens = np.asarray(tokens)
-        if tokens.ndim == 1:
-            tokens = tokens[None]
+        tokens, _, _ = self._admit_args(tokens, metas, seeds)
         b, S = tokens.shape
-        if b > len(self._free):
-            raise RuntimeError(f"admit({b}) with {len(self._free)} free "
-                               "slots")
         if S + max_new + self.k > self.max_len:
             raise ValueError(
                 f"prompt {S} + {max_new} new + {self.k} speculative slack "
                 f"exceeds max_len {self.max_len}")
-        slots = [self._free.pop(0) for _ in range(b)]
+        slots = self._take_slots(b)
         try:
             tk = jnp.asarray(tokens, jnp.int32)
             sl = jnp.asarray(slots, jnp.int32)
@@ -347,25 +328,15 @@ class SpecEngine:
             self.state = self._call("draft", self._admit_draft_fn, params,
                                     self.state, tk, sl)
         except BaseException:
-            self._free[0:0] = slots
+            self._restore_slots(slots)
             raise
-        first = np.asarray(first)
-        gens = []
-        for i, s in enumerate(slots):
-            g = Generation(rid=self._rid, prompt_len=S, max_new=max_new,
-                           slot=s, meta=metas[i] if metas else None)
-            self._rid += 1
-            g.tokens.append(int(first[i]))
-            self.slots[s] = g
-            self._live[s] = True
-            gens.append(g)
+        gens = self._register(slots, S, max_new, metas,
+                              first=np.asarray(first))
         self.stats["admitted_tokens"] += b
-        finished = self._retire_done(gens)
-        if finished:
+        if self._retire_done(gens):
             # same-boundary re-admission of an instantly retired slot must
             # not reuse this draw field (salt disjoint from round folds)
-            self.state = self.state._replace(key=jax.random.fold_in(
-                self.state.key, (1 << 30) | int(self.state.t)))
+            self._salt_admit_key()
         return gens
 
     # ----------------------------------------------------------------- round
@@ -403,21 +374,3 @@ class SpecEngine:
         self.stats["draft_steps"] += self.k + 1
         self.stats["committed_tokens"] += committed
         return self._retire_done(stepped)
-
-    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
-        finished = []
-        for g in gens:
-            eos = self.eos_id is not None and g.tokens[-1] == self.eos_id
-            if len(g.tokens) >= g.max_new or eos:
-                g.done = True
-                self.slots[g.slot] = None
-                self._live[g.slot] = False
-                self._free.append(g.slot)
-                finished.append(g)
-        return finished
-
-    def drain(self, params=None) -> list[Generation]:
-        out = []
-        while self.live_slots():
-            out.extend(self.step(params))
-        return out

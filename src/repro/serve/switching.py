@@ -50,7 +50,8 @@ class SwitchableServer:
                                           policy=policy)
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
-        self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B)
+        self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B,
+        #                                                     prefill chunk)
         self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
         #                                                     pool B, K)
         self._state_snapshots: dict[str, Any] = {}
@@ -93,19 +94,24 @@ class SwitchableServer:
             eng.params = params
         return eng
 
-    def step_engine(self, name: str, batch_size: int) -> StepEngine:
+    def step_engine(self, name: str, batch_size: int,
+                    prefill_chunk: Optional[int] = None) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
         paused context resumes exactly where its last step left off;
         weights are NOT captured (every call runs against the engine
-        slot's current buffers via the scheduler's runner hook)."""
-        key = (name, batch_size)
+        slot's current buffers via the scheduler's runner hook).
+        ``prefill_chunk`` keys the cache too: chunked and one-shot
+        admission build different jitted programs over the same pool
+        shape."""
+        key = (name, batch_size, prefill_chunk)
         eng = self._step_engines.get(key)
         if eng is None:
             sm = self._served[name]
             eng = StepEngine(sm.model, batch_size, sm.max_len,
-                             temperature=sm.temperature)
+                             temperature=sm.temperature,
+                             prefill_chunk=prefill_chunk)
             self._step_engines[key] = eng
         return eng
 

@@ -1,0 +1,243 @@
+"""Chunked prefill on the step engine: chunk exactness against one-shot
+admission (cache rows + token streams), the disturb-free invariant for
+in-flight rows, the compile-count guard, the shared slot-pool base's
+admission validation, and the stateful-``_max_len`` regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import StepEngine
+from repro.serve.speculative import SpecEngine
+
+
+@pytest.fixture(scope="module")
+def f32_lm():
+    """f32 end to end: chunked admission recomputes the same values as
+    one-shot prefill through differently-shaped programs, so the identity
+    tests need f32's headroom (same policy as the speculative suite)."""
+    cfg = reduced_arch("tinyllama-1.1b", dtype="float32",
+                       param_dtype="float32")
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _drain(eng, p):
+    while eng.live_slots():
+        eng.step(p)
+
+
+def _prefill_only(eng, p):
+    """Run chunk ticks until admission completes (no decode interleaved:
+    the pool has no live rows until the final chunk)."""
+    while eng.pending_slots():
+        eng.prefill_tick(p)
+
+
+# ---------------------------------------------------------------------------
+# chunk exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C", [4, 5, 8, 32])
+def test_chunked_rows_match_one_shot_prefill(f32_lm, C):
+    """Chunked admission == one-shot ``prefill`` leaf-for-leaf on the
+    inserted cache rows, for an unaligned chunk (5), an exact-multiple
+    chunk (4, 8 over S=16), and a chunk wider than the prompt (32).
+    Includes the zero tail past the prompt: pad writes are masked and a
+    recycled slot's stale row is zeroed at chunk 0."""
+    cfg, m, p = f32_lm
+    S, max_len = 16, 48
+    prompt = np.asarray(tokens_for(cfg, batch=1, seq=S, seed=3))
+
+    _, rows = m.prefill(p, jnp.asarray(prompt), max_len)
+    ref = jax.tree.map(lambda r: np.asarray(r[:, 0]), rows)
+
+    eng = StepEngine(m, batch_size=2, max_len=max_len, prefill_chunk=C)
+    # dirty BOTH slots first so chunk 0 must clean its recycled row
+    eng.admit(p, np.asarray(tokens_for(cfg, 2, 20, seed=9)), max_new=2)
+    _prefill_only(eng, p)
+    _drain(eng, p)
+    g = eng.admit(p, prompt, max_new=4)[0]
+    assert g.tokens == []                  # reserved, not yet sampled
+    _prefill_only(eng, p)
+    assert len(g.tokens) == 1                        # first token sampled
+    got = jax.tree.map(lambda c: np.asarray(c[:, g.slot]), eng.state.caches)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_streams_token_identical(f32_lm, temperature):
+    """Full generated streams are token-identical between one-shot and
+    chunked admission across chunk sizes — greedy, and seeded temperature
+    (a seeded row's draws depend only on (key, position), so the chunk
+    schedule cannot move them)."""
+    cfg, m, p = f32_lm
+    S = 16
+    prompt = np.asarray(tokens_for(cfg, batch=1, seq=S, seed=4))
+    seeds = [7] if temperature > 0 else None
+
+    ref_eng = StepEngine(m, batch_size=2, max_len=48,
+                         temperature=temperature)
+    gr = ref_eng.admit(p, prompt, max_new=6, seeds=seeds)[0]
+    _drain(ref_eng, p)
+
+    for C in (5, 8, 16, 32):       # unaligned, multiple, exact, S < C
+        eng = StepEngine(m, batch_size=2, max_len=48,
+                         temperature=temperature, prefill_chunk=C)
+        g = eng.admit(p, prompt, max_new=6, seeds=seeds)[0]
+        _drain(eng, p)
+        assert g.tokens == gr.tokens, f"chunk={C}"
+        assert eng.free_slots() == 2
+
+
+def test_chunked_admission_never_disturbs_inflight_rows(f32_lm):
+    """The dual-port disturb-free invariant: a long prompt streaming in
+    chunk-by-chunk must not change a live row's tokens, and the live row
+    keeps decoding every tick (admission latency bounded by one chunk,
+    not by the whole prompt)."""
+    cfg, m, p = f32_lm
+    pa = np.asarray(tokens_for(cfg, 1, 12, seed=3))
+    pb = np.asarray(tokens_for(cfg, 1, 30, seed=5))
+
+    solo = StepEngine(m, batch_size=2, max_len=64)
+    ga = solo.admit(p, pa, max_new=10)[0]
+    _drain(solo, p)
+    solo2 = StepEngine(m, batch_size=2, max_len=64)
+    gb = solo2.admit(p, pb, max_new=5)[0]
+    _drain(solo2, p)
+
+    eng = StepEngine(m, batch_size=2, max_len=64, prefill_chunk=4)
+    a = eng.admit(p, pa, max_new=10)[0]
+    _prefill_only(eng, p)
+    len_before = len(a.tokens)
+    b = eng.admit(p, pb, max_new=5)[0]     # 30 tokens = 8 chunks
+    eng.step(p)                            # one tick: one chunk + decode
+    assert len(a.tokens) == len_before + 1  # live row was not stalled
+    _drain(eng, p)
+    assert a.tokens == list(ga.tokens)
+    assert b.tokens == list(gb.tokens)
+
+
+def test_chunk_compile_count_guard(f32_lm):
+    """Admissions at N distinct prompt lengths compile at most TWO chunk
+    programs (streaming + final) — the per-length ``_admit_<S>`` compile
+    is gone.  Probed via the jitted functions' lowering caches."""
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=2, max_len=64, prefill_chunk=8)
+    for S in (3, 8, 11, 17, 24):           # < C, == C, and 3 unaligned
+        g = eng.admit(p, np.asarray(tokens_for(cfg, 1, S, seed=S)),
+                      max_new=2)[0]
+        _drain(eng, p)
+        assert g.done
+    n = eng._chunk_fn._cache_size() + eng._chunk_final_fn._cache_size()
+    assert n <= 2, f"{n} chunk programs compiled for 5 prompt lengths"
+    assert eng._admit_fn._cache_size() == 0   # one-shot path never used
+
+
+def test_chunked_mode_rejects_unsupported_models():
+    """Chunked admission is the restricted layer (LM.prefill_chunk stays
+    general): recurrent mixers and ring caches must be rejected."""
+    hybrid = build_model(reduced_arch("jamba-v0.1-52b"))
+    with pytest.raises(ValueError, match="all-attention"):
+        StepEngine(hybrid, batch_size=2, max_len=32, prefill_chunk=4)
+    windowed = build_model(reduced_arch("tinyllama-1.1b",
+                                        sliding_window=16))
+    with pytest.raises(ValueError, match="ring"):
+        StepEngine(windowed, batch_size=2, max_len=32, prefill_chunk=4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+def test_continuous_scheduler_with_chunked_prefill():
+    """End to end through ContinuousScheduler: chunked admission produces
+    the same greedy outputs as the run-to-completion reference while
+    mixed-length prompts stream in."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-super", "supersub-sub"]
+    # f32: chunked and one-shot prefill recompute the same values through
+    # differently-shaped programs; bf16 can flip a near-tie argmax
+    server, cfgs = build_server(names, 2, 64, load_delay_s=0.01,
+                                arch_overrides={"dtype": "float32",
+                                                "param_dtype": "float32"})
+    rng = np.random.default_rng(0)
+    reqs = [(names[r % 2],
+             rng.integers(0, cfgs[names[r % 2]].vocab_size,
+                          (2, [8, 40, 16][r % 3])))
+            for r in range(6)]
+    with ContinuousScheduler(server, batch_size=2,
+                             prefill_chunk=8) as sched:
+        futs = [sched.submit(n, t, steps=4) for n, t in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+    assert all(o.shape == (2, 4) for o in outs)
+    for (name, toks), out in zip(reqs, outs):
+        ref = server.serve_batch(name, toks, steps=4)
+        np.testing.assert_array_equal(out, ref)
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# shared pool base: admission validation + FIFO recycling
+# ---------------------------------------------------------------------------
+
+def test_admit_validates_seeds_and_metas(f32_lm):
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=4, max_len=48)
+    toks = np.asarray(tokens_for(cfg, 2, 8))
+    with pytest.raises(ValueError, match="seeds"):
+        eng.admit(p, toks, max_new=2, seeds=[1, 2, 3])   # over-long
+    with pytest.raises(ValueError, match="metas"):
+        eng.admit(p, toks, max_new=2, metas=["only-one"])  # short
+    assert eng.free_slots() == 4           # nothing leaked
+
+    spec = SpecEngine(m, m, batch_size=4, max_len=48, k=2)
+    with pytest.raises(ValueError, match="metas"):
+        spec.admit((p, p), toks, max_new=2, metas=[None])
+    assert spec.free_slots() == 4
+
+
+def test_failed_admit_preserves_fifo_slot_order(f32_lm):
+    """A failed admission restores its slots to the FRONT of the
+    free-list in their original order: the retry is indistinguishable
+    from the failed call (slot order is load-bearing for the seeded
+    admission draw, which indexes a shared (B, V) field by slot)."""
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=4, max_len=48)
+    order_before = list(eng._free)
+    with pytest.raises(BaseException):
+        eng.admit(None, np.asarray(tokens_for(cfg, 2, 8)), max_new=2)
+    assert list(eng._free) == order_before
+
+
+# ---------------------------------------------------------------------------
+# stateful-_max_len regression
+# ---------------------------------------------------------------------------
+
+def test_shared_lm_across_pools_with_different_max_len(f32_lm):
+    """One LM shared by two engines with different ``max_len`` (the
+    draft/target and generate()-vs-step-engine sharing patterns): cache
+    sizes must come from each engine's own argument.  The old code
+    stashed ``self._max_len`` on the model between ``prefill`` and the
+    block that read it at trace time, so an interleaved trace from the
+    other pool could silently build wrong-size cache rows."""
+    cfg, m, p = f32_lm
+    prompt = np.asarray(tokens_for(cfg, 1, 12, seed=3))
+
+    small = StepEngine(m, batch_size=2, max_len=32)
+    big = StepEngine(m, batch_size=2, max_len=96)
+    gs = small.admit(p, prompt, max_new=4)[0]
+    gb = big.admit(p, prompt, max_new=4)[0]       # interleaved admits
+    _drain(small, p)
+    _drain(big, p)
+    assert gs.tokens == gb.tokens                 # greedy: size-invariant
+    assert {l.shape[3] for l in jax.tree.leaves(small.state.caches)} == {32}
+    assert {l.shape[3] for l in jax.tree.leaves(big.state.caches)} == {96}
+    # the regression guard itself: prefill must not leave trace-time
+    # state on the shared model object
+    assert not hasattr(m, "_max_len")
