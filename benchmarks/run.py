@@ -17,11 +17,12 @@ import traceback
 
 
 def modules():
-    from benchmarks import (bench_continuous, bench_prefill_chunk,
-                            bench_serve_queue, bench_speculative,
-                            bench_switch, fig5_critical_path,
-                            fig5_primitives, fig6_cases, fig6b_accuracy,
-                            figS1_pipeline, roofline_table)
+    from benchmarks import (bench_continuous, bench_paged,
+                            bench_prefill_chunk, bench_serve_queue,
+                            bench_speculative, bench_switch,
+                            fig5_critical_path, fig5_primitives,
+                            fig6_cases, fig6b_accuracy, figS1_pipeline,
+                            roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -33,6 +34,7 @@ def modules():
         ("bench_continuous", bench_continuous.run),
         ("bench_speculative", bench_speculative.run),
         ("bench_prefill_chunk", bench_prefill_chunk.run),
+        ("bench_paged", bench_paged.run),
         ("roofline_table", roofline_table.run),
     ]
 

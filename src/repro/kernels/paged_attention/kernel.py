@@ -1,0 +1,233 @@
+"""Paged flash-decode / flash-verify, TPU Pallas: attention over a KV
+cache whose rows live as PAGES of one shared pool.
+
+Extends ``decode_attention``'s design along the axis the paged slot pool
+needs: the per-request ``(B,)`` position vector in SMEM grows a per-row
+``(B, P)`` *page table*, also scalar-prefetched.  The cache operand is no
+longer a ``(B, Hkv, S, hd)`` row bank but the shared page pool
+``(NP, Hkv, page, hd)``, and the kernel's BlockSpec index map reads the
+page table to decide which pool page each grid step DMAs:
+
+    lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)
+
+so row b's j-th cache tile is *its own* j-th page, wherever the host
+allocator placed it — pages of one request need not be contiguous, and
+pages of different requests interleave freely in the pool.
+
+Everything else is the proven flash-decode structure:
+
+  * grid = (B, Hkv, P) with the page-scan axis innermost/"arbitrary";
+    (m, l, acc) running-softmax state persists in VMEM scratch.
+  * GQA: the G = H/Hkv query heads of one kv head are batched into a
+    single (G, hd) x (hd, page) matmul per page (K*G rows for verify).
+  * tiles past a row's valid length are skipped before their DMA is
+    issued (``pos`` gates the page index map too: dead entries point at
+    the pool's park page, a always-valid index that is never read).
+  * the verify variant reads the cache PRE-block and folds the block's
+    own K keys/values in after the last page under an intra-block causal
+    mask — the same cache-plus-block split that makes ``verify_attention``
+    sequentially exact.  Paged pools are full-attention only (the paged
+    engine gates rings out), so there is no ring path here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.kernels.compat import pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         page: int, np_row: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * page
+
+    @pl.when(k_start <= pos)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                  # (page, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(j == np_row - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, pos, *,
+                                  scale: float | None = None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, hd); k_pages/v_pages: (NP, Hkv, page, hd) shared
+    pool; page_table: (B, P) int32 pool-page ids (dead entries must hold
+    a valid index — the park page); pos: (B,) int32 valid length per
+    row."""
+    B, Hkv, G, hd = q.shape
+    NP, _, page, _ = k_pages.shape
+    P = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page=page, np_row=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, pos, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+      jnp.asarray(page_table, jnp.int32), q, k_pages, v_pages)
+
+
+def _paged_verify_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kb_ref,
+                         vb_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, page: int, np_row: int, K: int,
+                         G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _fold(s, v):
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    k_start = j * page
+    # pre-block cache: valid positions are <= pos-1, so a page is dead
+    # once it starts at/after pos — one query-block tighter than decode.
+
+    @pl.when(k_start < pos)
+    def _cache_page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (K*G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(cols < pos, s, NEG_INF),
+              v_ref[0, 0].astype(jnp.float32))
+
+    @pl.when(j == np_row - 1)
+    def _block_and_finalize():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (K*G, hd)
+        kb = kb_ref[0, 0].astype(jnp.float32)             # (K, hd)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(jj <= qi, s, NEG_INF),
+              vb_ref[0, 0].astype(jnp.float32))
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
+                                  pos, *, scale: float | None = None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, K*G, hd) — row r is query r//G of kv head h;
+    k_pages/v_pages: (NP, Hkv, page, hd) shared pool BEFORE the block's
+    writes; kb/vb: (B, Hkv, K, hd) block keys/values; page_table: (B, P)
+    int32; pos: (B,) int32 base positions."""
+    B, Hkv, KG, hd = q.shape
+    K = kb.shape[2]
+    assert KG % K == 0, (KG, K)
+    G = KG // K
+    NP, _, page, _ = k_pages.shape
+    P = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               page=page, np_row=P, K=K, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, KG, hd),
+                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, K, hd),
+                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, K, hd),
+                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, KG, hd),
+                               lambda b, h, j, pos, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KG, 1), jnp.float32),
+            pltpu.VMEM((KG, 1), jnp.float32),
+            pltpu.VMEM((KG, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_verify_attention",
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+      jnp.asarray(page_table, jnp.int32), q, k_pages, v_pages, kb, vb)

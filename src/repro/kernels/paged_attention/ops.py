@@ -1,0 +1,74 @@
+"""jit'd public wrappers for paged decode / paged verify attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention_kernel, paged_verify_attention_kernel)
+from repro.kernels.paged_attention.ref import (
+    gather_pages, paged_decode_reference, paged_verify_reference)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
+                           scale: float | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, hd); k_pages/v_pages: (NP, Hkv, page, hd) shared pool;
+    page_table: (B, P) int32; pos: () or (B,) int32 -> (B, H, hd).
+
+    The paged analogue of ``decode_attention``: the same per-request
+    position masking and tile skipping, with the cache tile for grid
+    step j of row b resolved through the scalar-prefetched page table
+    instead of a contiguous row.  Dead table entries (past a row's
+    allocation) must hold a valid pool index — the engine points them at
+    the park page; they are masked by ``pos`` regardless."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, hd = q.shape
+    Hkv = k_pages.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    out = paged_decode_attention_kernel(qg, k_pages, v_pages, page_table,
+                                        pos, scale=scale,
+                                        interpret=interpret)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
+                           pos, *, scale: float | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """q: (B, K, H, hd); pool holds the cache BEFORE the block's writes;
+    blk_k/blk_v: (B, K, Hkv, hd); page_table: (B, P); pos: () or (B,)
+    int32 base positions -> (B, K, H, hd).
+
+    Query i of row b sits at position ``pos[b] + i``; it attends to the
+    paged cache (positions <= pos[b]-1, resolved through the page table)
+    plus block tokens j <= i — the same cache-plus-block split as
+    ``verify_attention``, which keeps the pass loop-exact.  Full
+    attention only (the paged engine gates ring caches out)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K, H, hd = q.shape
+    Hkv = k_pages.shape[1]
+    G = H // Hkv
+    qg = (q.reshape(B, K, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, K * G, hd))
+    kb = blk_k.swapaxes(1, 2)                       # (B, Hkv, K, hd)
+    vb = blk_v.swapaxes(1, 2)
+    out = paged_verify_attention_kernel(qg, k_pages, v_pages, kb, vb,
+                                        page_table, pos, scale=scale,
+                                        interpret=interpret)
+    return (out.reshape(B, Hkv, K, G, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(B, K, H, hd))
+
+
+__all__ = ["gather_pages", "paged_decode_attention",
+           "paged_decode_reference", "paged_verify_attention",
+           "paged_verify_reference"]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for paged attention: the KV cache rows live as pages
+of one shared pool, addressed through a per-row page table.
+
+Layout:
+  * ``k_pages``/``v_pages`` — (NP, Hkv, page, hd): the shared pool.
+    Page 0 is conventionally the PARK page (never read; dead page-table
+    entries point at it so every table entry is a valid pool index).
+  * ``page_table`` — (B, P) int32: row b's virtual positions
+    ``[j*page, (j+1)*page)`` live in pool page ``page_table[b, j]``.
+  * ``pos`` — (B,) int32 (or scalar, broadcast).
+
+The oracle simply *gathers* each row's pages back into a contiguous
+(B, Hkv, P*page, hd) row bank and defers to the proven row oracles —
+``decode_reference`` for the one-token case and ``verify_reference``
+(ring=False; paged pools are full-attention only) for the K-token
+verify/chunk case.  Gathering makes the equivalence the tests assert
+literal: a paged cache read through its table IS the row cache.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_reference
+from repro.kernels.verify_attention.ref import verify_reference
+
+
+def gather_pages(pages, page_table):
+    """(NP, Hkv, page, hd) pool + (B, P) table -> (B, Hkv, P*page, hd)
+    contiguous per-row cache (virtual position j*page+s = page slot s of
+    table entry j)."""
+    g = pages[jnp.asarray(page_table, jnp.int32)]   # (B, P, Hkv, page, hd)
+    B, P, Hkv, page, hd = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * page, hd)
+
+
+def paged_decode_reference(q, k_pages, v_pages, page_table, pos, *,
+                           scale: float | None = None):
+    """q: (B, H, hd) -> (B, H, hd); see module docstring for layouts."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_reference(q, k, v, pos, ring=False, scale=scale)
+
+
+def paged_verify_reference(q, k_pages, v_pages, blk_k, blk_v, page_table,
+                           pos, *, scale: float | None = None):
+    """q: (B, K, H, hd); blk_k/blk_v: (B, K, Hkv, hd) block keys/values;
+    the pool holds the cache BEFORE the block's writes -> (B, K, H, hd)."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return verify_reference(q, k, v, blk_k, blk_v, pos, ring=False,
+                            scale=scale)

@@ -14,7 +14,10 @@ Four modes:
     requests join/leave a persistent slot-pooled step engine at every
     decode step; context choice is re-decided at step boundaries and the
     next context streams into the shadow slot behind the remaining steps
-    (``--pool`` sets the slot-pool width).
+    (``--pool`` sets the slot-pool width).  ``--paged --page-size N``
+    swaps each context's row-granular KV pool for the paged slot pool:
+    per-slot page tables over one shared page bank, so a request only
+    holds the pages its own length needs.
   * ``--mode speculative`` — continuous batching with speculative cascade
     decode: ``--draft NAME`` names the draft context; every other
     registered context becomes a verify target whose requests run on a
@@ -108,6 +111,15 @@ def main(argv=None) -> int:
                          "chunks of this many tokens, one chunk per step "
                          "(bounded admission latency; one jitted chunk "
                          "program instead of one per prompt length)")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous mode: paged slot pool — per-slot "
+                         "page tables over one shared KV page bank; each "
+                         "request holds only the pages its own length "
+                         "needs, so the same memory serves more "
+                         "concurrent requests")
+    ap.add_argument("--page-size", type=int, default=256,
+                    help="paged mode: tokens per KV page (must divide "
+                         "the serving max_len)")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -118,8 +130,12 @@ def main(argv=None) -> int:
 
     names = args.archs.split(",")
     slack = args.spec_k if args.mode == "speculative" else 0
-    server, cfgs = build_server(names, args.slots,
-                                args.seq + args.steps + slack + 8)
+    max_len = args.seq + args.steps + slack + 8
+    if args.paged:
+        # a paged pool's row space is a whole number of pages
+        ps = min(args.page_size, max_len)
+        max_len = -(-max_len // ps) * ps
+    server, cfgs = build_server(names, args.slots, max_len)
     draft_map = {}
     if args.mode == "speculative":
         if args.draft not in names:
@@ -139,7 +155,8 @@ def main(argv=None) -> int:
                      lambda s: ContinuousScheduler(
                          s, batch_size=args.pool, draft=draft_map,
                          spec_k=args.spec_k,
-                         prefill_chunk=args.prefill_chunk))
+                         prefill_chunk=args.prefill_chunk,
+                         paged=args.paged, page_size=args.page_size))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]

@@ -362,6 +362,162 @@ def commit_page(big: BigKV, act: ActKV, pos) -> BigKV:
             big.v, act.v[:, :, None].astype(big.v.dtype), (0, 0, pidx, 0, 0)))
 
 
+# ---------------------------------------------------------------------------
+# paged slot pool (vLLM-style): per-row page tables over ONE shared pool
+#
+# The slot-pooled decode cache above still reserves a full max_len row per
+# slot, so pool capacity is provisioned for the worst-case sequence.  The
+# paged pool drops that: the cache is one shared bank of fixed-size pages
+# (PagedKV), each request owns only the pages its own length needs, and a
+# host-side page table maps a row's virtual positions onto pool pages.
+# Page 0 is the PARK page: never allocated to a request and never read —
+# dead table entries point at it (every table entry must be a valid pool
+# index), and non-live rows' per-step writes are routed into it, which is
+# what keeps a retired slot's stale writes from disturbing pages already
+# recycled to a neighbor (the dual-port disturb-free invariant at page
+# granularity).
+# ---------------------------------------------------------------------------
+
+class PagedKV(NamedTuple):
+    """Shared page pool: virtual row position j*page+s of a request lives
+    at ``pool[table[j], :, s]`` for that request's page table."""
+    k: jax.Array          # (NP, Hkv, page, hd)
+    v: jax.Array
+
+
+PARK_PAGE = 0
+
+PAGED_LOGICAL = PagedKV(k=("kv_pages", "kv_heads", None, "head_dim"),
+                        v=("kv_pages", "kv_heads", None, "head_dim"))
+
+
+def init_page_pool(cfg: ArchConfig, num_pages: int, page: int,
+                   dtype=jnp.bfloat16, abstract: bool = False) -> PagedKV:
+    shape = (num_pages, cfg.num_kv_heads, page, cfg.head_dim)
+    if abstract:
+        return PagedKV(k=jax.ShapeDtypeStruct(shape, dtype),
+                       v=jax.ShapeDtypeStruct(shape, dtype))
+    return PagedKV(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# The contiguous per-row view of a paged bank: (NP, Hkv, page, hd) pool +
+# (B, P) tables -> (B, Hkv, P*page, hd).  ONE definition, shared with the
+# kernel package's oracle — the gathered values are elementwise what the
+# row-cache layout holds at every written position, so the row attention
+# math downstream is bitwise the row engine's (unwritten positions differ
+# only in masked garbage).
+from repro.kernels.paged_attention.ref import gather_pages as _gather_pages
+
+
+def _page_write(cache: PagedKV, k, v, tables, positions, wmask=None):
+    """Scatter (B, K) token k/v into the shared pool.
+
+    k/v: (B, K, Hkv, hd); tables: (B, P) int32; positions: (B, K) int32
+    virtual positions; ``wmask`` ((B, K) bool, optional) routes False
+    tokens' writes to the PARK page instead — pad tokens in a chunk, and
+    non-live rows' per-step decode writes, land in garbage space without
+    touching any request's pages."""
+    P = tables.shape[1]
+    page = cache.k.shape[2]
+    positions = jnp.asarray(positions, jnp.int32)
+    pidx = jnp.minimum(positions // page, P - 1)    # clamp: parked rows
+    pids = jnp.take_along_axis(tables, pidx, axis=1)
+    if wmask is not None:
+        pids = jnp.where(wmask, pids, PARK_PAGE)
+    slots = positions % page
+    k_new = cache.k.at[pids, :, slots, :].set(k.astype(cache.k.dtype))
+    v_new = cache.v.at[pids, :, slots, :].set(v.astype(cache.v.dtype))
+    return PagedKV(k=k_new, v=v_new)
+
+
+def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
+                           cfg: ArchConfig, wmask=None):
+    """One-step decode against the shared page pool.  x: (B, 1, D);
+    pos: (B,) int32 (or scalar, broadcast); tables: (B, P) int32;
+    ``wmask`` ((B,) bool, optional): False rows write to the park page
+    (non-live slots must not disturb recycled pages).
+
+    Write-then-read in the same order as ``attention_decode`` — the new
+    token's k/v land in its page first, then attention reads the gathered
+    pages under the same ``idx <= pos`` mask, so live rows' outputs are
+    bitwise the row engine's."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,1,H,hd)
+    cache = _page_write(cache, k, v, tables, positions,
+                        wmask=None if wmask is None else wmask[:, None])
+
+    import repro.kernels as kernels
+    if kernels.use_kernels():
+        from repro.kernels.paged_attention.ops import paged_decode_attention
+        interp = None if kernels.get_mode() == "auto" else True
+        out = paged_decode_attention(q[:, 0], cache.k, cache.v, tables,
+                                     pos, interpret=interp)[:, None]
+    else:
+        kg = _gather_pages(cache.k, tables)
+        vg = _gather_pages(cache.v, tables)
+        valid = jnp.arange(kg.shape[2])[None, :] <= pos[:, None]
+        out = decode_sdpa(q, kg, vg, valid, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
+                           cfg: ArchConfig, wmask=None):
+    """Multi-token verify/chunk decode against the shared page pool.
+
+    x: (B, K, D) block tokens at positions ``pos[b] .. pos[b]+K-1``;
+    attention reads the pool as it stood BEFORE the block (through the
+    page table) plus the block's own k/v under an intra-block causal
+    mask — the same cache-plus-block split as ``attention_verify`` — then
+    all K tokens' k/v are scattered into the row's pages (``wmask`` pads
+    route to the park page).  No fresh-row zeroing is needed: a page is
+    written by its owner before any of its positions become readable
+    (reads mask ``cols < pos``), so a recycled page's stale content can
+    never leak into a new request."""
+    B, K, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,K,H,hd)
+
+    import repro.kernels as kernels
+    if kernels.use_kernels():
+        from repro.kernels.paged_attention.ops import paged_verify_attention
+        interp = None if kernels.get_mode() == "auto" else True
+        out = paged_verify_attention(q, cache.k, cache.v, k, v, tables,
+                                     pos, interpret=interp)
+    else:
+        from repro.kernels.verify_attention.ref import verify_reference
+        kg = _gather_pages(cache.k, tables)
+        vg = _gather_pages(cache.v, tables)
+        out = verify_reference(q, kg, vg, k, v, pos, ring=False)
+
+    cache = _page_write(cache, k, v, tables, positions, wmask=wmask)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+def insert_pages(cache: PagedKV, rows: KVCache, tables) -> PagedKV:
+    """Admission: scatter freshly prefilled cache rows (B, Hkv, S, hd)
+    into the shared pool through (B, P) page tables (S == P*page).  Dead
+    table entries (past a row's allocation) point at the park page, so
+    the unconditional all-P scatter parks the rows' zero tails instead of
+    touching anyone's pages.  Only the named pages change — the same
+    disturb-free contract as ``LM.insert_cache_rows``."""
+    B, Hkv, S, hd = rows.k.shape
+    P = tables.shape[1]
+    page = cache.k.shape[2]
+    assert S == P * page, (S, P, page)
+
+    def scatter(pool, r):
+        r = (r.reshape(B, Hkv, P, page, hd).transpose(0, 2, 1, 3, 4)
+             .astype(pool.dtype))                   # (B, P, Hkv, page, hd)
+        return pool.at[tables].set(r)
+
+    return PagedKV(k=scatter(cache.k, rows.k), v=scatter(cache.v, rows.v))
+
+
 def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
     """One-step decode.  x: (B, 1, D); pos: scalar int32 (whole batch at
     one position — the run-to-completion loop) or (B,) int32 (continuous

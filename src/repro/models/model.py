@@ -172,7 +172,7 @@ class LM:
         return "chunkwise" if (L % c == 0 and L > c) else "parallel"
 
     def _apply_block(self, typ, p, x, positions, mode, pos, cache,
-                     big=None, max_len=None, wmask=None):
+                     big=None, max_len=None, wmask=None, tables=None):
         """One block.  Returns (x, new_cache, aux).
 
         ``max_len`` (prefill mode) and ``wmask`` (verify mode; see
@@ -181,6 +181,12 @@ class LM:
         (as an earlier revision did with ``_max_len``) lets one ``LM``
         shared by two pools with different cache sizes retrace against
         the other pool's value — silently building wrong-size caches.
+
+        ``tables`` ((B, P) int32, decode/verify modes) switches the
+        attention cache to the shared page pool: ``cache`` is then a
+        ``layers.PagedKV`` bank addressed through the per-row page
+        tables, and ``wmask`` gates writes for decode too (non-live rows
+        park).
         """
         cfg = self.cfg
         mixer, ffn = typ
@@ -193,6 +199,16 @@ class LM:
             assert mode == "decode"
             a, nc = layers.attention_decode_paged(p["attn"], h, pos, big,
                                                   cache, cfg)
+        elif mixer == "attn" and tables is not None:
+            if mode == "verify":
+                a, nc = layers.attention_verify_pages(p["attn"], h, pos,
+                                                      cache, tables, cfg,
+                                                      wmask=wmask)
+            else:
+                assert mode == "decode", mode
+                a, nc = layers.attention_decode_pages(p["attn"], h, pos,
+                                                      cache, tables, cfg,
+                                                      wmask=wmask)
         elif mixer == "attn":
             if mode == "train":
                 a = layers.attention(p["attn"], h, positions, cfg,
@@ -247,7 +263,7 @@ class LM:
 
     def _run_blocks(self, params, x, positions, mode, pos, caches,
                     remat: bool = False, max_len: int | None = None,
-                    wmask=None):
+                    wmask=None, tables=None):
         """Scan over repeats; python-unrolled period inside the body."""
         pattern = self.pattern
 
@@ -260,7 +276,8 @@ class LM:
                 c = None if cache_r is None else cache_r[key]
                 x, nc, a = self._apply_block(typ, params_r[key], x,
                                              positions, mode, pos, c,
-                                             max_len=max_len, wmask=wmask)
+                                             max_len=max_len, wmask=wmask,
+                                             tables=tables)
                 new_caches[key] = nc
                 aux = aux + a
             if mode == "train":
@@ -397,6 +414,97 @@ class LM:
         caches = jax.tree.map(lambda c, r: c.at[:, slots].set(r), caches,
                               sub)
         return logits, caches
+
+    # ------------------------------------------------------- paged slot pool
+    def _require_paged_support(self):
+        if any(mix != "attn" for mix, _ in self.pattern):
+            raise ValueError(
+                "the paged page pool needs an all-attention model "
+                "(recurrent mixers keep per-row state, not pages)")
+        if self.cfg.sliding_window:
+            raise ValueError(
+                "the paged page pool needs full (non-ring) attention: "
+                "ring slots alias positions a page table cannot express")
+
+    def init_page_pool(self, num_pages: int, page: int,
+                       abstract: bool = False):
+        """Shared-page decode cache: one ``layers.PagedKV`` bank per
+        block, leaves (R, NP, Hkv, page, hd).  Page 0 is the PARK page
+        (see ``layers._page_write``); the page table is shared across
+        layers — page id p is position range [j*page, (j+1)*page) of its
+        owning row in EVERY layer's bank."""
+        self._require_paged_support()
+        out = {}
+        for i in range(len(self.pattern)):
+            one = layers.init_page_pool(self.cfg, num_pages, page,
+                                        self.cache_dtype, abstract)
+            out[f"b{i}"] = _stack_tree(one, self.repeats, abstract)
+        return out
+
+    def page_pool_logical(self):
+        return {f"b{i}": jax.tree.map(
+            lambda l: ("layers",) + tuple(l), layers.PAGED_LOGICAL,
+            is_leaf=lambda q: isinstance(q, tuple) and
+            all(isinstance(e, str) or e is None for e in q))
+            for i in range(len(self.pattern))}
+
+    def insert_cache_pages(self, caches, rows, tables):
+        """Admission into the page pool: scatter prefilled cache rows
+        (a pytree with ``KVCache`` leaves (R, b, Hkv, S, hd)) into the
+        pooled ``caches`` through the admitted rows' (b, P) page tables.
+        Only the named pages (plus the park page) change — the paged
+        analogue of ``insert_cache_rows``."""
+        tables = jnp.asarray(tables, jnp.int32)
+        ins = jax.vmap(layers.insert_pages, in_axes=(0, 0, None))
+        return {key: ins(c, rows[key], tables) for key, c in caches.items()}
+
+    def decode_step_pages(self, params, caches, tokens, pos, tables,
+                          live=None):
+        """One decode step against the shared page pool.  tokens: (B, 1)
+        int32; pos: (B,) int32; tables: (B, P) int32 page tables;
+        ``live`` ((B,) bool, optional) routes non-live rows' cache writes
+        to the park page — a retired slot's per-step garbage write must
+        not land in pages already recycled to a neighbor.  Returns
+        (logits (B, 1, V), new caches)."""
+        cfg = self.cfg
+        tables = jnp.asarray(tables, jnp.int32)
+        x = self._embed_in(params, tokens)
+        x, aux, caches = self._run_blocks(params, x, None, "decode", pos,
+                                          caches, wmask=live,
+                                          tables=tables)
+        x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                           cfg.norm_eps)
+        return self._head(params, x), caches
+
+    def verify_step_pages(self, params, caches, tokens, pos, tables,
+                          wmask=None, need_logits: bool = True):
+        """Multi-token verify against the shared page pool — one (b, K)
+        block scored at per-row offsets ``pos .. pos+K-1`` through the
+        rows' page tables, k/v written into the rows' own pages.  Serves
+        both chunked prefill (the verify machinery pointed at admission;
+        ``wmask`` gates pad writes, ``need_logits=False`` for streaming
+        chunks) and a paged ``SpecEngine`` verify column.  Unlike the
+        row-granular ``prefill_chunk`` there is no gather/scatter of
+        whole cache rows and no fresh-row zeroing: writes touch exactly
+        the block's positions (O(K), not O(max_len)), and a recycled
+        page is always rewritten before any of its positions become
+        readable (reads mask ``cols < pos``)."""
+        cfg = self.cfg
+        tables = jnp.asarray(tables, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        x = self._embed_in(params, tokens)
+        x, aux, caches = self._run_blocks(params, x, None, "verify", pos,
+                                          caches, wmask=wmask,
+                                          tables=tables)
+        logits = None
+        if need_logits:
+            x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
+                               cfg.norm_eps)
+            logits = self._head(params, x)
+        return logits, caches
+
+    # chunked admission is the verify machinery pointed at the page pool
+    prefill_chunk_pages = verify_step_pages
 
     def decode_step_paged(self, params, bigs, acts, tokens, pos):
         """One decode step against a paged cache (see layers: BigKV/ActKV).

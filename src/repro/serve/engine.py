@@ -37,10 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
-from repro.serve.pool import Generation, SlotPool
+from repro.serve.pool import Generation, PagePool, SlotPool
 
-__all__ = ["DecodeState", "Generation", "ServeStats", "ServingEngine",
-           "SlotPool", "StepEngine"]
+__all__ = ["DecodeState", "Generation", "PagePool", "ServeStats",
+           "ServingEngine", "SlotPool", "StepEngine"]
 
 
 @dataclass
@@ -72,13 +72,16 @@ class DecodeState(NamedTuple):
     what else shares the pool.  Unseeded slots keep the pool schedule
     (bitwise ``generate`` equality).
     """
-    caches: Any           # decode-cache pytree, leaves (R, B, ...)
+    caches: Any           # decode-cache pytree: leaves (R, B, ...) for the
+    #                       row layout, (R, NP, ...) PagedKV banks when paged
     tok: jax.Array        # (B, 1) int32 — last sampled token per slot
     pos: jax.Array        # (B,) int32  — cache position `tok` is fed at
     key: jax.Array        # PRNG key, folded once per step
     t: jax.Array          # () int32    — global step counter
     rkey: jax.Array       # (B, 2) uint32 — per-slot request PRNG key
     seeded: jax.Array     # (B,) bool — slot draws from rkey, not the pool
+    table: jax.Array      # (B, P) int32 — per-slot page table (paged mode;
+    #                       (B, 0) placeholder for the row layout)
 
 
 @dataclass
@@ -91,6 +94,7 @@ class _PendingPrefill:
     rkeys: np.ndarray                     # (b, 2) uint32 per-row keys
     seeded: np.ndarray                    # (b,) bool
     done: int = 0                         # prompt tokens already chunked
+    tables: Optional[np.ndarray] = None   # (b, P) page tables (paged mode)
 
 
 class StepEngine(SlotPool):
@@ -123,12 +127,34 @@ class StepEngine(SlotPool):
     mid-prefill row's parked decode writes go to the last cache slot,
     which a ring would wrap onto live window entries, and recurrent state
     cannot carry across host-side chunk boundaries.
+
+    ``paged=True`` swaps the row-granular cache for a *paged slot pool*:
+    instead of one ``max_len`` cache row per slot, the cache is ONE
+    shared bank of ``num_pages`` fixed-size pages (``page_size`` tokens
+    each), each admitted row owns only the ``ceil((S+max_new-1)/page)``
+    pages its own lifetime needs, and a per-slot page table
+    (``DecodeState.table``, scalar-prefetched down to the
+    ``paged_attention`` kernel) maps virtual positions onto pool pages.
+    ``num_pages`` is the HBM budget knob: the default
+    ``batch_size * max_len/page_size + 1`` matches the row layout's
+    capacity, while a smaller bank serves MORE concurrent short requests
+    in the same memory (admission gates on ``can_admit``: free slots AND
+    free pages).  Retirement returns pages, not a whole row (FIFO
+    recycling, see ``PagePool``); non-live rows' per-step writes route to
+    the park page so a freed page can be recycled instantly without
+    disturbing its new owner.  Sampling never sees the cache layout, so
+    paged and row streams are bitwise-identical (greedy + seeded
+    temperature, one-shot + chunked admission — tested).  Paged mode
+    needs an all-attention, non-ring model, same as chunked prefill.
     """
 
     def __init__(self, model: LM, batch_size: int, max_len: int,
                  temperature: float = 0.0, seed: int = 0,
                  eos_id: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 paged: bool = False, page_size: int = 256,
+                 num_pages: Optional[int] = None,
+                 admit_jump_limit: int = 4):
         self.model = model
         self.max_len = max_len
         self.temperature = temperature
@@ -149,7 +175,39 @@ class StepEngine(SlotPool):
                     "pending row's parked decode writes would wrap onto "
                     "window entries the chunks just filled")
         self.prefill_chunk = prefill_chunk
+        self.admit_jump_limit = admit_jump_limit
+        self._jumps = 0              # consecutive short-prompt jump-aheads
         self._pending: deque[_PendingPrefill] = deque()
+
+        # ---- paged slot pool: per-slot page tables over one shared bank
+        self.paged = paged
+        if paged:
+            model._require_paged_support()   # all-attention, non-ring
+            page_size = min(page_size, max_len)
+            if max_len % page_size:
+                raise ValueError(
+                    f"page_size {page_size} must divide max_len "
+                    f"{max_len}: a row's virtual space is a whole number "
+                    "of pages (and the gathered view must equal the row "
+                    "cache elementwise for the identity guarantees)")
+            self.page_size = page_size
+            self.pages_per_row = max_len // page_size
+            if num_pages is None:
+                # capacity parity with the row layout: every slot can
+                # always hold a worst-case row (+1 park page)
+                num_pages = batch_size * self.pages_per_row + 1
+            if num_pages < self.pages_per_row + 1:
+                raise ValueError(
+                    f"num_pages {num_pages} cannot hold one worst-case "
+                    f"row ({self.pages_per_row} pages) plus the park "
+                    "page")
+            self.num_pages = num_pages
+            self._pages = PagePool(num_pages)
+        else:
+            self.page_size = None
+            self.pages_per_row = 0
+            self.num_pages = 0
+            self._pages = None
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
 
@@ -164,8 +222,15 @@ class StepEngine(SlotPool):
 
         def _step(params, state: DecodeState, live):
             key = jax.random.fold_in(state.key, state.t)
-            logits, caches = model.decode_step(params, state.caches,
-                                               state.tok, state.pos)
+            if paged:
+                # non-live rows' per-step writes route to the park page
+                # (their pages may already be recycled to a neighbor)
+                logits, caches = model.decode_step_pages(
+                    params, state.caches, state.tok, state.pos,
+                    state.table, live=live)
+            else:
+                logits, caches = model.decode_step(params, state.caches,
+                                                   state.tok, state.pos)
             last = logits[:, -1]                               # (B, V) f32
             if T > 0.0:
                 # pool schedule: argmax(l/T + gumbel) IS categorical's own
@@ -188,7 +253,8 @@ class StepEngine(SlotPool):
             return nxt, state._replace(caches=caches, tok=nxt[:, None],
                                        pos=pos, key=key, t=state.t + 1)
 
-        def _admit(params, state: DecodeState, tokens, slots, rkeys, seeded):
+        def _admit(params, state: DecodeState, tokens, slots, tables,
+                   rkeys, seeded):
             """Prefill (b, S) prompts into cache rows `slots`; sample their
             first tokens at t=0 with the *current* (unfolded) key — the
             same draw ``generate`` makes from its prefill logits.  Row r
@@ -200,7 +266,14 @@ class StepEngine(SlotPool):
             recycled here must not hand the newcomer the old occupant's
             last gumbel row (the salt lives above 2^30, disjoint from
             step folds).  Seeded rows draw from their own key instead
-            (folded with S: the first token is produced at position S)."""
+            (folded with S: the first token is produced at position S).
+
+            ``tables`` is the admitted rows' (b, P) page tables in paged
+            mode ((b, 0) placeholder otherwise): the prefilled rows
+            scatter into the rows' own pages instead of a slot row, and
+            the draw logic above is UNTOUCHED — sampling never sees the
+            cache layout, which is what makes paged and row streams
+            token-identical."""
             S = tokens.shape[1]
             logits, rows = model.prefill(params, tokens, max_len)
             last = logits[:, -1]                               # (b, V) f32
@@ -220,27 +293,41 @@ class StepEngine(SlotPool):
             else:
                 first = jnp.argmax(last, axis=-1)
             first = first.astype(jnp.int32)
-            caches = model.insert_cache_rows(state.caches, rows, slots)
+            if paged:
+                caches = model.insert_cache_pages(state.caches, rows,
+                                                  tables)
+            else:
+                caches = model.insert_cache_rows(state.caches, rows, slots)
             tok = state.tok.at[slots].set(first[:, None])
             pos = state.pos.at[slots].set(jnp.int32(S))
             return first, state._replace(
                 caches=caches, tok=tok, pos=pos,
+                table=state.table.at[slots].set(tables),
                 rkey=state.rkey.at[slots].set(rkeys),
                 seeded=state.seeded.at[slots].set(seeded))
 
         C = prefill_chunk
 
-        def _chunk(params, state: DecodeState, tokens, pos, slots):
+        def _chunk(params, state: DecodeState, tokens, pos, slots, tables):
             """One streaming (non-final) prefill chunk: write the (b, C)
             block's k/v into cache rows `slots` at per-row offsets `pos`.
             No logits, no sampling — ONE compiled program serves every
-            non-final chunk of every prompt length."""
-            _, caches = model.prefill_chunk(params, state.caches, tokens,
-                                            pos, slots, need_logits=False)
+            non-final chunk of every prompt length.  Paged mode writes
+            through the rows' page tables instead: exactly the chunk's
+            (pos, pos+C) positions move, O(C) per chunk instead of the
+            row path's O(max_len) gather/scatter."""
+            if paged:
+                _, caches = model.prefill_chunk_pages(
+                    params, state.caches, tokens, pos, tables,
+                    need_logits=False)
+            else:
+                _, caches = model.prefill_chunk(params, state.caches,
+                                                tokens, pos, slots,
+                                                need_logits=False)
             return state._replace(caches=caches)
 
         def _chunk_final(params, state: DecodeState, tokens, pos, slots,
-                         nvalid, rkeys, seeded):
+                         tables, nvalid, rkeys, seeded):
             """Final prefill chunk: the block is padded to C (`nvalid`
             real tokens per row; the write mask keeps pad k/v out of the
             cache) and the last real token's logits sample the first
@@ -250,9 +337,13 @@ class StepEngine(SlotPool):
             rows — so chunked and one-shot admission are token-identical
             for greedy and seeded-temperature streams."""
             wmask = jnp.arange(C, dtype=jnp.int32)[None, :] < nvalid[:, None]
-            logits, caches = model.prefill_chunk(params, state.caches,
-                                                 tokens, pos, slots,
-                                                 wmask=wmask)
+            if paged:
+                logits, caches = model.prefill_chunk_pages(
+                    params, state.caches, tokens, pos, tables, wmask=wmask)
+            else:
+                logits, caches = model.prefill_chunk(params, state.caches,
+                                                     tokens, pos, slots,
+                                                     wmask=wmask)
             last = jnp.take_along_axis(
                 logits, (nvalid - 1)[:, None, None], axis=1)[:, 0]  # (b, V)
             plen = pos + nvalid                    # (b,) prompt length S
@@ -304,7 +395,10 @@ class StepEngine(SlotPool):
                 for x in jax.tree.leaves(self.state.caches)):
             caches = self.state.caches   # reuse, unless a failed step
         if caches is None:               # donated them out from under us
-            caches = self.model.init_cache(B, self.max_len)
+            caches = (self.model.init_page_pool(self.num_pages,
+                                                self.page_size)
+                      if self.paged else
+                      self.model.init_cache(B, self.max_len))
         self.state = DecodeState(
             caches=caches,
             tok=jnp.zeros((B, 1), jnp.int32),
@@ -312,9 +406,15 @@ class StepEngine(SlotPool):
             key=jax.random.PRNGKey(self.seed if seed is None else seed),
             t=jnp.zeros((), jnp.int32),
             rkey=jnp.zeros((B, 2), jnp.uint32),
-            seeded=jnp.zeros((B,), bool))
+            seeded=jnp.zeros((B,), bool),
+            # every table entry must be a valid pool index; park (0) is
+            # the safe default — empty slots read/write garbage space
+            table=jnp.zeros((B, self.pages_per_row), jnp.int32))
         self._pool_reset()
+        if self._pages is not None:
+            self._pages.reset()
         self._pending.clear()
+        self._jumps = 0
 
     def _call(self, fn, params, *args):
         if self.runner is None:
@@ -324,6 +424,37 @@ class StepEngine(SlotPool):
     # -------------------------------------------------------------- queries
     def pending_slots(self) -> int:
         return sum(len(ps.gens) for ps in self._pending)
+
+    def free_pages(self) -> int:
+        return self._pages.free_pages() if self.paged else 0
+
+    def pages_needed(self, prompt_len: int, max_new: int) -> int:
+        """Pages one row needs for its whole lifetime: positions
+        ``0 .. prompt_len + max_new - 2`` are written/read (the final
+        sampled token is never fed back), so the last page is the one
+        holding position ``prompt_len + max_new - 2``."""
+        return max(1, -(-(prompt_len + max_new - 1) // self.page_size))
+
+    def can_admit(self, tokens, max_new: int) -> bool:
+        if not super().can_admit(tokens, max_new):
+            return False
+        if not self.paged:
+            return True
+        tokens = np.asarray(tokens)
+        b, S = (1, tokens.shape[0]) if tokens.ndim == 1 else tokens.shape
+        return b * self.pages_needed(S, max_new) <= self.free_pages()
+
+    # ------------------------------------------------------ page allocation
+    def _take_pages(self, b: int, S: int, max_new: int):
+        """Allocate each admitted row its pages and build the (b, P)
+        tables (unused tail entries point at the park page).  Returns
+        (tables, flat page list for failure restore)."""
+        npages = self.pages_needed(S, max_new)
+        pages = self._pages.take(b * npages)
+        tables = np.full((b, self.pages_per_row), PagePool.PARK, np.int32)
+        for i in range(b):
+            tables[i, :npages] = pages[i * npages:(i + 1) * npages]
+        return tables, pages
 
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,
@@ -354,16 +485,30 @@ class StepEngine(SlotPool):
             return self._admit_chunked(tokens, max_new, metas, rkeys,
                                        seeded)
         slots = self._take_slots(b)
+        tables = np.zeros((b, self.pages_per_row), np.int32)
+        pages = []
+        if self.paged:
+            try:
+                tables, pages = self._take_pages(b, S, max_new)
+            except BaseException:
+                self._restore_slots(slots)
+                raise
         try:
             first, self.state = self._call(
                 self._admit_fn, params, self.state,
                 jnp.asarray(tokens, jnp.int32), jnp.asarray(slots, jnp.int32),
-                jnp.asarray(rkeys), jnp.asarray(seeded))
+                jnp.asarray(tables), jnp.asarray(rkeys), jnp.asarray(seeded))
         except BaseException:
             self._restore_slots(slots)   # failed admit must not leak slots
+            if pages:                    # nor pages (front, original order)
+                self._pages.restore(pages)
             raise
         gens = self._register(slots, S, max_new, metas,
                               first=np.asarray(first))
+        if self.paged:
+            npages = self.pages_needed(S, max_new)
+            for i, g in enumerate(gens):
+                g.pages = pages[i * npages:(i + 1) * npages]
         if self._retire_done(gens):
             # a slot freed with no step in between (steps==1 / EOS at
             # admission): advance the key so a same-boundary re-admission
@@ -386,14 +531,57 @@ class StepEngine(SlotPool):
         this — hence the all-attention/non-ring constructor gate.)"""
         b, S = tokens.shape
         slots = self._take_slots(b)
-        self.state = self.state._replace(
-            pos=self.state.pos.at[jnp.asarray(slots, jnp.int32)].set(
-                self.max_len - 1))
+        tables, pages = None, []
+        if self.paged:
+            try:
+                tables, pages = self._take_pages(b, S, max_new)
+            except BaseException:
+                self._restore_slots(slots)
+                raise
+        jslots = jnp.asarray(slots, jnp.int32)
+        st = self.state._replace(
+            pos=self.state.pos.at[jslots].set(self.max_len - 1))
+        if self.paged:
+            # tables go live at reserve time: the decode steps that run
+            # while the prompt streams in don't read them (non-live rows
+            # park), the chunk programs write through an explicit arg,
+            # and the final chunk's sampled row needs them next step
+            st = st._replace(table=st.table.at[jslots].set(
+                jnp.asarray(tables)))
+        self.state = st
         gens = self._register(slots, S, max_new, metas)
+        if self.paged:
+            npages = self.pages_needed(S, max_new)
+            for i, g in enumerate(gens):
+                g.pages = pages[i * npages:(i + 1) * npages]
         self._pending.append(_PendingPrefill(
             tokens=np.asarray(tokens, np.int32), gens=gens, rkeys=rkeys,
-            seeded=seeded))
+            seeded=seeded, tables=tables))
         return gens
+
+    def _promote_pending(self):
+        """Admission priority: a short prompt (whole prompt in ONE chunk)
+        may jump ahead of a long prompt's queued chunk work — its single
+        final chunk costs the long prompt one tick of streaming but gets
+        the short request its first token immediately.  Bounded by a
+        fairness counter: after ``admit_jump_limit`` consecutive jumps
+        the head MUST run a chunk, so a stream of shorts can delay a
+        long prompt by at most ``limit`` ticks per chunk, never starve
+        it.  Rotates the chosen entry to the queue front."""
+        C = self.prefill_chunk
+        head = self._pending[0]
+        head_remaining = head.tokens.shape[1] - head.done
+        if (len(self._pending) > 1 and head_remaining > C
+                and self._jumps < self.admit_jump_limit):
+            for i in range(1, len(self._pending)):
+                if self._pending[i].tokens.shape[1] <= C:
+                    ps = self._pending[i]
+                    del self._pending[i]
+                    self._pending.appendleft(ps)
+                    self._jumps += 1
+                    return
+        if self._pending[0] is head:
+            self._jumps = 0              # the head made progress
 
     def prefill_tick(self, params) -> list[Generation]:
         """Run at most ONE chunk program — the admission budget.  A live
@@ -404,6 +592,8 @@ class StepEngine(SlotPool):
         if not self._pending:
             return []
         C = self.prefill_chunk
+        if self.admit_jump_limit:
+            self._promote_pending()
         ps = self._pending[0]
         b, S = ps.tokens.shape
         start = ps.done
@@ -412,26 +602,36 @@ class StepEngine(SlotPool):
         chunk = np.zeros((b, C), np.int32)
         chunk[:, :nvalid] = ps.tokens[:, start:end]
         slots = np.asarray([g.slot for g in ps.gens], np.int32)
+        tables = (ps.tables if ps.tables is not None
+                  else np.zeros((b, self.pages_per_row), np.int32))
         pos = np.full((b,), start, np.int32)
         try:
             if end < S:
                 self.state = self._call(
                     self._chunk_fn, params, self.state,
                     jnp.asarray(chunk), jnp.asarray(pos),
-                    jnp.asarray(slots))
+                    jnp.asarray(slots), jnp.asarray(tables))
                 ps.done = end
                 return []
             first, self.state = self._call(
                 self._chunk_final_fn, params, self.state,
                 jnp.asarray(chunk), jnp.asarray(pos), jnp.asarray(slots),
-                jnp.full((b,), nvalid, jnp.int32), jnp.asarray(ps.rkeys),
-                jnp.asarray(ps.seeded))
+                jnp.asarray(tables), jnp.full((b,), nvalid, jnp.int32),
+                jnp.asarray(ps.rkeys), jnp.asarray(ps.seeded))
         except BaseException:
             # a failed chunk abandons the whole request: release its rows
-            # so the pool keeps serving (the caller fails the futures)
+            # so the pool keeps serving (the caller fails the futures).
+            # Pages restore in ONE call, in their original take order —
+            # per-gen restore calls would reverse the group order and
+            # break the free-list's documented FIFO determinism.
             self._pending.popleft()
+            pages = []
             for g in ps.gens:
                 self.slots[g.slot] = None
+                pages += g.pages or []
+                g.pages = None
+            if pages:
+                self._pages.restore(pages)
             self._restore_slots([g.slot for g in ps.gens])
             raise
         self._pending.popleft()
@@ -442,6 +642,22 @@ class StepEngine(SlotPool):
         finished = self._retire_done(ps.gens)
         if finished:
             self._salt_admit_key()
+        return finished
+
+    # ----------------------------------------------------------- retirement
+    def _retire_done(self, gens: list[Generation]) -> list[Generation]:
+        """Retire finished rows AND release their pages (FIFO: to the
+        back of the page free-list).  No device-side table reset is
+        needed: the retired slot stops being ``live``, so its per-step
+        writes route to the park page from the next step on, and its
+        stale reads only feed a discarded output — freed pages can be
+        recycled to a neighbor immediately without a disturb hazard."""
+        finished = super()._retire_done(gens)
+        if self.paged:
+            for g in finished:
+                if g.pages:
+                    self._pages.release(g.pages)
+                    g.pages = None
         return finished
 
     # ---------------------------------------------------------------- step
@@ -485,7 +701,9 @@ class ServingEngine:
         # an entry frees its pool (a returning shape re-compiles, which
         # is what it paid before the step-engine refactor anyway).
         self.max_cached_pools = 4
-        self._step_engines: "OrderedDict[int, StepEngine]" = OrderedDict()
+        # keyed (batch_size, page_size | None): row and paged pools are
+        # different engines over different cache layouts
+        self._step_engines: "OrderedDict[tuple, StepEngine]" = OrderedDict()
 
         def _prefill(params, tokens, patch_embeds=None):
             return model.prefill(params, tokens, max_len,
@@ -506,17 +724,20 @@ class ServingEngine:
         here so temperature>0 requests are independent draws)."""
         return jax.random.PRNGKey(self.seed if seed is None else seed)
 
-    def step_engine(self, batch_size: int) -> StepEngine:
-        """The continuous-batching engine behind ``generate`` (cached per
-        batch shape; jitted programs compile once per shape; least
-        recently used shapes beyond ``max_cached_pools`` are dropped to
-        free their KV pools)."""
-        eng = self._step_engines.get(batch_size)
+    def step_engine(self, batch_size: int, paged: bool = False,
+                    page_size: int = 256) -> StepEngine:
+        """The continuous-batching engine behind ``generate`` /
+        ``generate_paged`` (cached per (batch shape, page layout); jitted
+        programs compile once per key; least recently used keys beyond
+        ``max_cached_pools`` are dropped to free their KV pools)."""
+        key = (batch_size, page_size if paged else None)
+        eng = self._step_engines.get(key)
         if eng is None:
             eng = StepEngine(self.model, batch_size, self.max_len,
-                             temperature=self.temperature, seed=self.seed)
-            self._step_engines[batch_size] = eng
-        self._step_engines.move_to_end(batch_size)
+                             temperature=self.temperature, seed=self.seed,
+                             paged=paged, page_size=page_size)
+            self._step_engines[key] = eng
+        self._step_engines.move_to_end(key)
         if len(self._step_engines) > self.max_cached_pools:
             # evict oldest IDLE shapes only: dropping an engine with live
             # rows would split state between the caller's handle and a
@@ -586,64 +807,42 @@ class ServingEngine:
     def generate_paged(self, tokens, steps: int,
                        page: int = 256,
                        seed: Optional[int] = None) -> np.ndarray:
-        """Paged-cache decode loop: the big cache is read-only per step
-        (one donated active page); filled pages are committed every `page`
-        steps.  Identical outputs to generate() — tested."""
-        from repro.models.layers import ActKV, BigKV, commit_page
-        model = self.model
+        """Paged-cache decode loop — a thin wrapper over
+        ``StepEngine(paged=True)``, exactly as ``generate`` wraps the row
+        engine: the whole batch is admitted at t=0 into per-slot page
+        tables over one shared page pool and stepped to completion.
+        Identical outputs to generate() — tested.  (The earlier
+        BigKV/ActKV commit-cadence loop lives on in
+        ``LM.decode_step_paged`` for the sharded/analysis paths; the
+        serving tier now pools pages across requests instead of
+        committing per-batch pages in lockstep.)
+
+        Models the page pool cannot express (recurrent/hybrid mixers,
+        sliding-window rings) fall back to the row engine: the output
+        contract (== ``generate``) is unchanged, only the cache layout
+        differs."""
+        tokens = np.asarray(tokens)
         B, S = tokens.shape
         page = min(page, self.max_len)
+        try:
+            self.model._require_paged_support()
+        except ValueError:
+            return self.generate(tokens, steps, seed=seed)
+        eng = self.step_engine(B, paged=True, page_size=page)
 
         t0 = time.perf_counter()
-        logits, caches = self._prefill(self.params, tokens)
-        key = self._key(seed)
-        tok = _sample(logits[:, -1], key, self.temperature)[:, None]
-        jax.block_until_ready(tok)       # else prefill leaks into decode_s
+        eng.reset(seed=self.seed if seed is None else seed)
+        gens = eng.admit(self.params, tokens, max_new=steps)
+        jax.block_until_ready(eng.state.tok)
         self.stats.prefill_s += time.perf_counter() - t0
 
-        # convert the dense prefill cache into (bigs, acts)
-        bigs, acts = model.init_paged_cache(B, self.max_len, page=page)
-        floor = (S // page) * page
-        for bkey in list(bigs):
-            if bigs[bkey] is None:                   # recurrent state block
-                acts[bkey] = caches[bkey]
-                continue
-            k, v = caches[bkey].k, caches[bkey].v    # (R, B, Hkv, Smax, hd)
-            R, Bk, Hkv, Smax, hd = k.shape
-            bigs[bkey] = BigKV(
-                k=k.reshape(R, Bk, Hkv, Smax // page, page, hd),
-                v=v.reshape(R, Bk, Hkv, Smax // page, page, hd))
-            # tokens past the last page boundary live in the active page
-            acts[bkey] = ActKV(
-                k=jax.lax.dynamic_slice_in_dim(k, floor, page, 3),
-                v=jax.lax.dynamic_slice_in_dim(v, floor, page, 3))
-
-        step_fn = jax.jit(
-            lambda p, b, a, t, pos, key: (
-                lambda lo_a: (_sample(lo_a[0][:, -1], key,
-                                      self.temperature)[:, None], lo_a[1])
-            )(model.decode_step_paged(p, b, a, t, pos)),
-            donate_argnums=(2,))
-        commit_fn = jax.jit(jax.vmap(commit_page, in_axes=(0, 0, None)),
-                            donate_argnums=(0,))
-
-        out = [np.asarray(tok)]
         t0 = time.perf_counter()
-        pos = S
-        for i in range(steps - 1):
-            key = jax.random.fold_in(key, i)
-            tok, acts = step_fn(self.params, bigs, acts, tok,
-                                jnp.int32(pos), key)
-            out.append(np.asarray(tok))
-            if pos % page == page - 1:               # page filled: commit
-                for bkey in list(bigs):
-                    if bigs[bkey] is not None:
-                        bigs[bkey] = commit_fn(bigs[bkey], acts[bkey], pos)
-            pos += 1
-        jax.block_until_ready(tok)
+        while eng.live_slots():
+            eng.step(self.params)
+        jax.block_until_ready(eng.state.tok)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.tokens += B * steps
-        return np.concatenate(out, axis=1)
+        return np.stack([np.asarray(g.tokens, np.int32) for g in gens])
 
     # ------------------------------------------------------------------
     def generate_fused(self, tokens, steps: int,

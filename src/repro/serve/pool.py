@@ -47,10 +47,68 @@ class Generation:
     tokens: list = field(default_factory=list)
     done: bool = False
     meta: Any = None                      # scheduler payload (futures etc.)
+    pages: Optional[list] = None          # pool pages owned (paged engines);
+    #                                       None once released at retirement
 
     @property
     def remaining(self) -> int:
         return self.max_new - len(self.tokens)
+
+
+class PagePool:
+    """Host-side page allocator over one shared device KV page bank.
+
+    The device side is a ``layers.PagedKV`` pool of ``total_pages``
+    pages; this class hands out page *ids*.  Page 0 is the PARK page: it
+    is never allocated, dead page-table entries point at it (every table
+    entry must be a valid pool index for the kernel's prefetch-driven
+    DMA), and non-live rows' per-step writes are routed into it — so
+    ``allocatable == total_pages - 1``.
+
+    Recycling contract (mirrors ``SlotPool``'s slot free-list, and is
+    load-bearing for test reproducibility the same way):
+
+      * **FIFO** — ``take`` pops from the *front*, ``release``
+        (retirement) appends to the *back*: a page is reused as late as
+        possible, and the allocation order of a fixed traffic pattern is
+        deterministic.
+      * **failed-admit restore** — ``restore`` puts pages back at the
+        *front in their original order*, so a retried admission draws
+        exactly the pages the failed call drew.
+    """
+
+    PARK = 0
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 park + 1 allocatable), "
+                             f"got {total_pages}")
+        self.total_pages = total_pages
+        self._free: deque[int] = deque(range(1, total_pages))
+
+    @property
+    def allocatable(self) -> int:
+        return self.total_pages - 1
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def take(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"take({n}) with {len(self._free)} free "
+                               "pages")
+        return [self._free.popleft() for _ in range(n)]
+
+    def restore(self, pages: list[int]):
+        """Failed admission: back to the FRONT in original order."""
+        self._free.extendleft(reversed(pages))
+
+    def release(self, pages: list[int]):
+        """Retirement: to the BACK (FIFO recycling)."""
+        self._free.extend(pages)
+
+    def reset(self):
+        self._free = deque(range(1, self.total_pages))
 
 
 class SlotPool:
@@ -89,6 +147,14 @@ class SlotPool:
 
     def live(self) -> list[Generation]:
         return [g for g in self.slots if g is not None]
+
+    def can_admit(self, tokens, max_new: int) -> bool:
+        """Whether ``admit(tokens, max_new)`` would fit *right now*.
+        Schedulers gate on this instead of ``free_slots`` so engines
+        with extra admission resources (the paged engine's page pool)
+        can veto without raising."""
+        b = 1 if np.ndim(tokens) == 1 else np.shape(tokens)[0]
+        return b <= self.free_slots()
 
     # ------------------------------------------------------------ admission
     def _admit_args(self, tokens, metas, seeds):

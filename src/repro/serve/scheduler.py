@@ -333,7 +333,8 @@ class ContinuousScheduler:
                  age_weight: float = 10.0, cost_weight: float = 1.0,
                  switch_margin: float = 1.5, preempt_margin: float = 6.0,
                  draft: Optional[dict] = None, spec_k: int = 4,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 paged: bool = False, page_size: int = 256):
         self.server = server
         self.batch_size = batch_size
         # chunked admission: plain contexts' engines split prefill into
@@ -341,6 +342,12 @@ class ContinuousScheduler:
         # behind decode steps instead of stalling them (speculative
         # contexts keep one-shot admission)
         self.prefill_chunk = prefill_chunk
+        # paged slot pool: plain contexts' engines pool KV pages across
+        # slots (per-request memory ∝ its own length, not max_len), so
+        # the same HBM serves more concurrent short requests; admission
+        # additionally gates on free pages via ``can_admit``
+        self.paged = paged
+        self.page_size = page_size
         self.age_weight = age_weight
         self.cost_weight = cost_weight
         self.switch_margin = switch_margin
@@ -445,7 +452,9 @@ class ContinuousScheduler:
         if name in self.draft:
             return self._spec_engine(name)
         eng = self.server.step_engine(name, self.batch_size,
-                                      prefill_chunk=self.prefill_chunk)
+                                      prefill_chunk=self.prefill_chunk,
+                                      paged=self.paged,
+                                      page_size=self.page_size)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -487,7 +496,8 @@ class ContinuousScheduler:
                     (name, self.draft[name], self.batch_size, self.spec_k))
             else:
                 eng = self.server._step_engines.get(
-                    (name, self.batch_size, self.prefill_chunk))
+                    (name, self.batch_size, self.prefill_chunk,
+                     self.page_size if self.paged else None))
             if eng is not None and eng.live_slots():
                 out[name] = eng
         return out
@@ -638,8 +648,8 @@ class ContinuousScheduler:
         while True:
             with self._cv:
                 q = self._queues[name]
-                if not q or q[0].tokens.shape[0] > eng.free_slots():
-                    return
+                if not q or not eng.can_admit(q[0].tokens, q[0].steps):
+                    return                 # no slot — or, paged, no pages
                 req = q.popleft()
             b = req.tokens.shape[0]
             inf = _Inflight(req=req, need=b)
@@ -697,7 +707,8 @@ class ContinuousScheduler:
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(exc)
-        for (name, bsz, _c), eng in list(self.server._step_engines.items()):
+        for (name, bsz, _c, _pg), eng in list(
+                self.server._step_engines.items()):
             if bsz == self.batch_size and (cur is None or name == cur) \
                     and eng.live_slots():
                 eng.reset()

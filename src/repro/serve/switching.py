@@ -51,7 +51,7 @@ class SwitchableServer:
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
         self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B,
-        #                                                     prefill chunk)
+        #                                    prefill chunk, page size|None)
         self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
         #                                                     pool B, K)
         self._state_snapshots: dict[str, Any] = {}
@@ -95,23 +95,27 @@ class SwitchableServer:
         return eng
 
     def step_engine(self, name: str, batch_size: int,
-                    prefill_chunk: Optional[int] = None) -> StepEngine:
+                    prefill_chunk: Optional[int] = None,
+                    paged: bool = False,
+                    page_size: int = 256) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
         paused context resumes exactly where its last step left off;
         weights are NOT captured (every call runs against the engine
         slot's current buffers via the scheduler's runner hook).
-        ``prefill_chunk`` keys the cache too: chunked and one-shot
-        admission build different jitted programs over the same pool
-        shape."""
-        key = (name, batch_size, prefill_chunk)
+        ``prefill_chunk`` and the page layout key the cache too: chunked
+        vs one-shot admission and paged vs row pools build different
+        jitted programs over the same pool shape."""
+        key = (name, batch_size, prefill_chunk,
+               page_size if paged else None)
         eng = self._step_engines.get(key)
         if eng is None:
             sm = self._served[name]
             eng = StepEngine(sm.model, batch_size, sm.max_len,
                              temperature=sm.temperature,
-                             prefill_chunk=prefill_chunk)
+                             prefill_chunk=prefill_chunk,
+                             paged=paged, page_size=page_size)
             self._step_engines[key] = eng
         return eng
 

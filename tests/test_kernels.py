@@ -171,6 +171,81 @@ def test_verify_reference_is_sequentially_exact(S, ring, pos):
 
 
 # ---------------------------------------------------------------------------
+# paged attention (per-row page tables over one shared page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_from_rows(k, v, page, seed, spare_pages=3):
+    """Scatter a contiguous (B, Hkv, S, hd) row cache into a SHUFFLED
+    shared page pool: non-contiguous, interleaved-across-rows tables are
+    the case a paged kernel must get right.  Page 0 stays the park page;
+    ``spare_pages`` extra pages hold garbage (never referenced)."""
+    B, Hkv, S, hd = k.shape
+    P = S // page
+    NP = B * P + 1 + spare_pages
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(np.arange(1, NP))[:B * P]
+    table = perm.reshape(B, P)
+    kp = rng.normal(size=(NP, Hkv, page, hd)).astype(np.asarray(k).dtype)
+    vp = rng.normal(size=(NP, Hkv, page, hd)).astype(np.asarray(v).dtype)
+    for b in range(B):
+        for j in range(P):
+            kp[table[b, j]] = np.asarray(k[b, :, j * page:(j + 1) * page])
+            vp[table[b, j]] = np.asarray(v[b, :, j * page:(j + 1) * page])
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table, jnp.int32)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,page,pos", [
+    (2, 8, 2, 256, 64, 64, (100, 255)),    # GQA, per-row positions
+    (1, 4, 4, 512, 32, 128, 511),          # MHA, last position
+    (3, 16, 1, 128, 64, 32, (0, 60, 127)),  # MQA, first token in the mix
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_row_oracle(B, H, Hkv, S, hd, page,
+                                                   pos, dtype):
+    """Kernel AND paged ref against the contiguous-row oracle, through a
+    shuffled non-contiguous page table."""
+    from repro.kernels.paged_attention.ops import (
+        paged_decode_attention, paged_decode_reference)
+    ks = jax.random.split(jax.random.key(S + page), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    kp, vp, table = _paged_from_rows(k, v, page, seed=S)
+    pos = jnp.asarray(pos, jnp.int32)
+    ref = decode_reference(q, k, v, pos, ring=False)
+    pref = paged_decode_reference(q, kp, vp, table, pos)
+    np.testing.assert_allclose(np.asarray(pref, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-6)
+    out = paged_decode_attention(q, kp, vp, table, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,page,K,pos", [
+    (2, 8, 2, 256, 64, 64, 4, (100, 3)),
+    (1, 4, 2, 128, 32, 32, 5, 0),          # admission chunk at pos 0
+    (2, 4, 4, 128, 64, 64, 3, (126, 40)),  # block reaches the row's end
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_verify_attention_matches_row_oracle(B, H, Hkv, S, hd, page,
+                                                   K, pos, dtype):
+    from repro.kernels.paged_attention.ops import (
+        paged_verify_attention, paged_verify_reference)
+    q, k, v, bk, bv = _verify_inputs(B, H, Hkv, S, hd, K, dtype, S + K)
+    kp, vp, table = _paged_from_rows(k, v, page, seed=S + 1)
+    pos = jnp.asarray(pos, jnp.int32)
+    ref = verify_reference(q, k, v, bk, bv, pos, ring=False)
+    pref = paged_verify_reference(q, kp, vp, bk, bv, table, pos)
+    np.testing.assert_allclose(np.asarray(pref, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-6)
+    out = paged_verify_attention(q, kp, vp, bk, bv, table, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
 # selective scan
 # ---------------------------------------------------------------------------
 
