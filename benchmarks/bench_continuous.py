@@ -110,6 +110,10 @@ def run(n_requests: int = 24, seq: int = 16, slots: int = 2,
             "loads": snap["loads"],
             "hidden_load_fraction": round(snap["hidden_load_fraction"], 3),
         }
+        if "steps_per_tick" in snap:
+            # step-engine modes report realized host-tick amortization
+            # (1.0 at multi_step=1; the fused engine pushes it toward T)
+            results[mode]["steps_per_tick"] = snap["steps_per_tick"]
         for k, v in results[mode].items():
             note = (f"{n_requests} mixed-length reqs x {len(MODELS)} models, "
                     f"{slots} slots" if k == "wall_s" else "")

@@ -1,0 +1,161 @@
+"""Device-resident multi-step decode + int8 page bank: the two levers
+for serving density.
+
+Part A — host-sync amortization.  A single-step engine pays one host
+round-trip (read back the sampled token, run the rank/drain/admit tick)
+per decoded token.  ``multi_step=T`` fuses up to T decode steps into one
+jitted device loop, so at steady state the engine syncs once per T
+tokens.  Measured directly off the engine's tick counters
+(``host_ticks`` = device->host syncs, ``device_steps`` = committed
+tokens).  Gate: syncs/token < 1.5/T at steady state — i.e. the fused
+engine actually amortizes, with 50% slack for ramp-down ticks at stream
+tails.
+
+Part B — int8 pages at a FIXED HBM budget.  An int8 page stores
+``hd + 4`` bytes per token-head (codes + f32 scale) vs ``2*hd`` for
+bf16 — at ``head_dim=64`` that is 1.88x more pages in the same bytes
+(the reduced test models' hd=32 would cap at 1.78x; serving-shaped
+heads are what the bank is for).  The page budget is computed from the
+MEASURED ``nbytes`` of the two pool layouts, then both engines take an
+admit-greedy burst of short requests.  Gate: int8 peak admitted
+concurrency >= 1.8x bf16.
+
+CI's bench-smoke job asserts both gates from
+``BENCH_bench_multistep.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+T = 8                   # fused steps per tick
+A_BATCH = 4
+A_MAX_LEN = 64
+A_STEPS = 33            # 32 decode steps: 4 full fused ticks at T=8
+
+PAGE = 16
+B_MAX_LEN = 32          # short requests: seq 16 + 16 new = 2 pages each
+B_SEQ, B_STEPS = 16, 16
+FP16_PAGES = 32         # allocatable page budget for the bf16 bank
+B_SLOTS = 48
+
+
+def _build(**extra):
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models.model import build_model
+    cfg = reduced(get_arch("tinyllama-1.1b"), **extra)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+# ---------------------------------------------------------------- part A
+
+def _amortization_pass(m, p, cfg, multi_step):
+    """One full stream: admit a uniform batch, drain, return the tick
+    counters and wall-clock tokens/s."""
+    import jax
+    from repro.serve.engine import StepEngine
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (A_BATCH, 8))
+    eng = StepEngine(m, batch_size=A_BATCH, max_len=A_MAX_LEN,
+                     multi_step=multi_step)
+    eng.admit(p, toks, max_new=A_STEPS)    # compiles happen here
+    jax.block_until_ready(eng.state.tok)
+    t0 = time.perf_counter()
+    while eng.live_slots():
+        eng.step(p)
+    jax.block_until_ready(eng.state.tok)
+    wall = time.perf_counter() - t0
+    return eng.stats["host_ticks"], eng.stats["device_steps"], wall
+
+
+# ---------------------------------------------------------------- part B
+
+def _page_bytes(m, quantized):
+    """Measured bytes per page across all layers of one bank layout."""
+    import jax
+    pools = m.init_page_pool(2, PAGE, abstract=True, quantized=quantized)
+    total = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(pools))
+    return total // 2                      # 2 pages in the probe pool
+
+
+def _peak_concurrency(eng, p, reqs):
+    """Admit-greedy drive (same contract as bench_paged): peak number of
+    simultaneously admitted requests."""
+    queue = list(reqs)
+    peak = 0
+    while queue or eng.live_slots():
+        while queue and eng.can_admit(queue[0][0], queue[0][1]):
+            toks, steps = queue.pop(0)
+            eng.admit(p, toks, max_new=steps)
+        peak = max(peak, eng.live_slots())
+        if eng.live_slots():
+            eng.step(p)
+    return peak
+
+
+def run() -> list[tuple]:
+    from repro.serve.engine import StepEngine
+
+    # A: host syncs per token, single-step vs fused
+    cfg, m, p = _build()
+    t1_ticks, t1_steps, t1_wall = _amortization_pass(m, p, cfg, 1)
+    tT_ticks, tT_steps, tT_wall = _amortization_pass(m, p, cfg, T)
+    spt = tT_ticks / tT_steps
+    n_tok = A_BATCH * (A_STEPS - 1)
+
+    # B: admit-greedy concurrency at a measured fixed byte budget.
+    # Serving-shaped heads (hd=64): the scale overhead is 1/16 of the
+    # page instead of 1/8, which is what buys the 1.88x page count.
+    cfg_q, m_q, p_q = _build(head_dim=64)
+    fp16_pb = _page_bytes(m_q, quantized=False)
+    int8_pb = _page_bytes(m_q, quantized=True)
+    budget = (FP16_PAGES + 1) * fp16_pb    # +1: the park page
+    int8_pages = budget // int8_pb - 1
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg_q.vocab_size, (1, B_SEQ)), B_STEPS)
+            for _ in range(B_SLOTS)]
+    peaks = {}
+    for name, quant, npages in (("fp16", None, FP16_PAGES),
+                                ("int8", "int8", int8_pages)):
+        eng = StepEngine(m_q, batch_size=B_SLOTS, max_len=B_MAX_LEN,
+                         paged=True, page_size=PAGE,
+                         num_pages=npages + 1, quantize_kv=quant)
+        peaks[name] = _peak_concurrency(eng, p_q, list(reqs))
+    ratio = peaks["int8"] / peaks["fp16"] if peaks["fp16"] else 0.0
+
+    return [
+        ("multistep_t1_host_ticks", t1_ticks,
+         f"{A_BATCH} rows x {A_STEPS - 1} decode steps"),
+        (f"multistep_t{T}_host_ticks", tT_ticks,
+         f"same stream, multi_step={T}"),
+        (f"multistep_t{T}_syncs_per_token", round(spt, 4),
+         f"host_ticks/device_steps; single-step pays "
+         f"{t1_ticks / t1_steps:.2f}"),
+        ("multistep_t1_tok_per_s", round(n_tok / t1_wall, 1), ""),
+        (f"multistep_t{T}_tok_per_s", round(n_tok / tT_wall, 1), ""),
+        ("multistep_syncs_amortized", int(spt < 1.5 / T),
+         f"{spt:.4f} < {1.5 / T:.4f} (1.5/T at T={T})"),
+        ("fp16_page_kib", round(fp16_pb / 1024, 2),
+         f"page={PAGE} tokens, head_dim=64, all layers"),
+        ("int8_page_kib", round(int8_pb / 1024, 2),
+         "codes + per-token-per-head f32 scales"),
+        ("int8_pages_at_budget", int(int8_pages),
+         f"vs {FP16_PAGES} bf16 pages in {budget // 1024} KiB"),
+        ("fp16_peak_concurrency", peaks["fp16"],
+         f"admit-greedy, {B_SLOTS} reqs of {B_SEQ}t + {B_STEPS} new"),
+        ("int8_peak_concurrency", peaks["int8"], "same burst"),
+        ("int8_concurrency_1_8x", int(ratio >= 1.8),
+         f"{peaks['int8']} vs {peaks['fp16']} concurrent "
+         f"({ratio:.2f}x) at equal bytes"),
+    ]
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    for row in run():
+        print(*row, sep=",")

@@ -1,0 +1,111 @@
+"""Diff two ``BENCH_<module>.json`` files and print per-key regressions.
+
+``python -m benchmarks.compare OLD.json NEW.json [--threshold 0.1]``
+
+The ``benchmarks.run --json`` emitter tracks the perf trajectory across
+PRs; this is the other half — given the same module's report from two
+checkouts, classify every row:
+
+  * throughput keys (``*_per_s``) regress when NEW is more than
+    ``threshold`` BELOW OLD;
+  * latency keys (``latency*``, ``ttft*``, ``stall*``, ``*_wall_s``)
+    regress when NEW is more than ``threshold`` ABOVE OLD;
+  * gate rows (0/1 in both files) regress on any 1 -> 0 flip;
+  * everything else numeric is reported as an informational delta.
+
+Exit status 1 if any key regressed, 0 otherwise — usable directly in a
+shell loop over paired BENCH files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _is_throughput(key: str) -> bool:
+    return "req_per_s" in key or "tok_per_s" in key or "per_s" in key
+
+
+def _is_latency(key: str) -> bool:
+    return ("latency" in key or "ttft" in key or "stall" in key
+            or key.endswith("_wall_s"))
+
+
+def classify(key: str, old, new, threshold: float):
+    """-> (status, detail) where status is one of 'regression', 'improved',
+    'ok', 'info'."""
+    if not (isinstance(old, (int, float)) and isinstance(new, (int, float))):
+        return ("info", f"{old!r} -> {new!r}") if old != new else ("ok", "")
+    if (isinstance(old, int) and isinstance(new, int)
+            and old in (0, 1) and new in (0, 1)
+            and not _is_throughput(key) and not _is_latency(key)):
+        if old == 1 and new == 0:
+            return "regression", "gate flipped 1 -> 0"
+        if old == 0 and new == 1:
+            return "improved", "gate flipped 0 -> 1"
+        return "ok", f"gate {new}"
+    delta = new - old
+    rel = delta / abs(old) if old else (0.0 if not delta else float("inf"))
+    detail = f"{old} -> {new} ({rel:+.1%})"
+    if _is_throughput(key):
+        if rel < -threshold:
+            return "regression", detail
+        return ("improved" if rel > threshold else "ok"), detail
+    if _is_latency(key):
+        if rel > threshold:
+            return "regression", detail
+        return ("improved" if rel < -threshold else "ok"), detail
+    return ("info", detail) if delta else ("ok", detail)
+
+
+def compare(old: dict, new: dict, threshold: float) -> list[tuple]:
+    """-> [(status, key, detail)] over the union of row keys."""
+    rows_old = old.get("rows", {})
+    rows_new = new.get("rows", {})
+    out = []
+    for key in sorted(set(rows_old) | set(rows_new)):
+        if key not in rows_new:
+            out.append(("info", key, "removed"))
+            continue
+        if key not in rows_old:
+            out.append(("info", key, f"new: {rows_new[key]['value']}"))
+            continue
+        status, detail = classify(key, rows_old[key]["value"],
+                                  rows_new[key]["value"], threshold)
+        out.append((status, key, detail))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.1,
+                    help="relative change treated as noise (default 0.1)")
+    ap.add_argument("--all", action="store_true",
+                    help="print unchanged keys too")
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if old.get("name") != new.get("name"):
+        print(f"warning: comparing {old.get('name')!r} "
+              f"against {new.get('name')!r}", file=sys.stderr)
+    results = compare(old, new, args.threshold)
+    regressions = 0
+    for status, key, detail in results:
+        if status == "ok" and not args.all:
+            continue
+        if status == "regression":
+            regressions += 1
+        print(f"{status.upper():<10} {key}: {detail}")
+    n = len(results)
+    print(f"-- {n} keys, {regressions} regression(s), "
+          f"threshold {args.threshold:.0%}")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,8 +3,10 @@
 ``PYTHONPATH=src python -m benchmarks.run``   prints ``name,value,notes``
 CSV; ``--only fig6`` filters by prefix; ``--json [DIR]`` additionally
 writes one machine-readable ``BENCH_<name>.json`` per module (throughput
-and latency fields pulled out of the rows) so the perf trajectory can be
-tracked across PRs by diffing the emitted files.
+and latency fields pulled out of the rows, plus platform / device /
+jax-version / git-sha provenance in ``meta``) so the perf trajectory can
+be tracked across PRs — ``python -m benchmarks.compare OLD NEW`` diffs
+two emitted files and prints per-key regressions.
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ import traceback
 
 
 def modules():
-    from benchmarks import (bench_continuous, bench_paged,
+    from benchmarks import (bench_continuous, bench_multistep, bench_paged,
                             bench_prefill_chunk, bench_serve_queue,
                             bench_speculative, bench_switch,
                             fig5_critical_path, fig5_primitives,
@@ -35,8 +37,30 @@ def modules():
         ("bench_speculative", bench_speculative.run),
         ("bench_prefill_chunk", bench_prefill_chunk.run),
         ("bench_paged", bench_paged.run),
+        ("bench_multistep", bench_multistep.run),
         ("roofline_table", roofline_table.run),
     ]
+
+
+def _metadata() -> dict:
+    """Where these numbers came from: BENCH files are diffed across PRs
+    and machines (``benchmarks.compare``), so each one records the
+    platform, the JAX device/version, and the git revision it measured."""
+    import platform
+    import subprocess
+
+    import jax
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {"platform": platform.platform(),
+            "device": f"{dev.platform}:{dev.device_kind}",
+            "jax_version": jax.__version__,
+            "git_sha": sha}
 
 
 def _json_report(name: str, rows: list[tuple], wall_s: float) -> dict:
@@ -66,8 +90,10 @@ def main(argv=None) -> int:
                     metavar="DIR",
                     help="also write BENCH_<name>.json per module to DIR")
     args = ap.parse_args(argv)
+    meta = None
     if args.json is not None:
         os.makedirs(args.json, exist_ok=True)
+        meta = _metadata()
     failures = 0
     print("name,value,notes")
     for name, fn in modules():
@@ -91,6 +117,7 @@ def main(argv=None) -> int:
             report = (_json_report(name, rows, wall) if rows is not None
                       else {"name": name, "error": True,
                             "wall_s": round(wall, 3)})
+            report["meta"] = meta
             with open(path, "w") as f:
                 json.dump(report, f, indent=1, sort_keys=True)
                 f.write("\n")

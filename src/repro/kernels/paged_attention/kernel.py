@@ -81,32 +81,91 @@ def _paged_decode_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel_q(pos_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref,
+                           vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                           scale: float, page: int, np_row: int):
+    """int8-bank variant: k/v tiles are int8 codes and two extra
+    (1, 1, page) scale tiles ride the SAME page-table index map, so the
+    per-position scale arrives with its page and the dequantize happens
+    in VMEM right before the matmul."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * page
+
+    @pl.when(k_start <= pos)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = (k_ref[0, 0].astype(jnp.float32)
+             * ks_ref[0, 0][:, None])                     # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = (v_ref[0, 0].astype(jnp.float32)
+             * vs_ref[0, 0][:, None])                     # (page, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(j == np_row - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
 def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, pos, *,
                                   scale: float | None = None,
+                                  k_scale=None, v_scale=None,
                                   interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, G, hd); k_pages/v_pages: (NP, Hkv, page, hd) shared
     pool; page_table: (B, P) int32 pool-page ids (dead entries must hold
     a valid index — the park page); pos: (B,) int32 valid length per
-    row."""
+    row.  ``k_scale``/``v_scale`` ((NP, Hkv, page) f32) select the int8
+    bank path: codes dequantize inside the kernel."""
     B, Hkv, G, hd = q.shape
     NP, _, page, _ = k_pages.shape
     P = page_table.shape[1]
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
 
-    kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               page=page, np_row=P)
+    page_spec = pl.BlockSpec((1, 1, page, hd),
+                             lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, h, j, pos, pt: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        kernel = functools.partial(_paged_decode_kernel_q, scale=scale,
+                                   page=page, np_row=P)
+        scale_spec = pl.BlockSpec(
+            (1, 1, page), lambda b, h, j, pos, pt: (pt[b, j], h, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    else:
+        kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                                   page=page, np_row=P)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, j, pos, pt: (b, h, 0, 0)),
         scratch_shapes=[
@@ -124,7 +183,7 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, pos, *,
         interpret=interpret,
         name="paged_decode_attention",
     )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
-      jnp.asarray(page_table, jnp.int32), q, k_pages, v_pages)
+      jnp.asarray(page_table, jnp.int32), *operands)
 
 
 def _paged_verify_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kb_ref,
@@ -180,13 +239,70 @@ def _paged_verify_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kb_ref,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_verify_kernel_q(pos_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref,
+                           vs_ref, kb_ref, vb_ref, o_ref, m_scr, l_scr,
+                           acc_scr, *, scale: float, page: int,
+                           np_row: int, K: int, G: int):
+    """int8-bank verify: cache pages dequantize in VMEM via the
+    co-travelling (1, 1, page) scale tiles; the block's own K keys/values
+    stay full precision (they have not been written to the pool yet)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _fold(s, v):
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    k_start = j * page
+
+    @pl.when(k_start < pos)
+    def _cache_page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (K*G, hd)
+        k = (k_ref[0, 0].astype(jnp.float32)
+             * ks_ref[0, 0][:, None])                     # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(cols < pos, s, NEG_INF),
+              v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None])
+
+    @pl.when(j == np_row - 1)
+    def _block_and_finalize():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (K*G, hd)
+        kb = kb_ref[0, 0].astype(jnp.float32)             # (K, hd)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _fold(jnp.where(jj <= qi, s, NEG_INF),
+              vb_ref[0, 0].astype(jnp.float32))
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
 def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
                                   pos, *, scale: float | None = None,
+                                  k_scale=None, v_scale=None,
                                   interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, K*G, hd) — row r is query r//G of kv head h;
     k_pages/v_pages: (NP, Hkv, page, hd) shared pool BEFORE the block's
     writes; kb/vb: (B, Hkv, K, hd) block keys/values; page_table: (B, P)
-    int32; pos: (B,) int32 base positions."""
+    int32; pos: (B,) int32 base positions.  ``k_scale``/``v_scale``
+    ((NP, Hkv, page) f32) select the int8 bank path."""
     B, Hkv, KG, hd = q.shape
     K = kb.shape[2]
     assert KG % K == 0, (KG, K)
@@ -195,24 +311,35 @@ def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
     P = page_table.shape[1]
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
 
-    kernel = functools.partial(_paged_verify_kernel, scale=scale,
-                               page=page, np_row=P, K=K, G=G)
+    page_spec = pl.BlockSpec((1, 1, page, hd),
+                             lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0))
+    blk_spec = pl.BlockSpec((1, 1, K, hd),
+                            lambda b, h, j, pos, pt: (b, h, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, KG, hd),
+                     lambda b, h, j, pos, pt: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        kernel = functools.partial(_paged_verify_kernel_q, scale=scale,
+                                   page=page, np_row=P, K=K, G=G)
+        scale_spec = pl.BlockSpec(
+            (1, 1, page), lambda b, h, j, pos, pt: (pt[b, j], h, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    else:
+        kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                                   page=page, np_row=P, K=K, G=G)
+    in_specs += [blk_spec, blk_spec]
+    operands += [kb, vb]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, KG, hd),
-                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, K, hd),
-                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, K, hd),
-                         lambda b, h, j, pos, pt: (b, h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, KG, hd),
                                lambda b, h, j, pos, pt: (b, h, 0, 0)),
         scratch_shapes=[
@@ -230,4 +357,4 @@ def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
         interpret=interpret,
         name="paged_verify_attention",
     )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
-      jnp.asarray(page_table, jnp.int32), q, k_pages, v_pages, kb, vb)
+      jnp.asarray(page_table, jnp.int32), *operands)

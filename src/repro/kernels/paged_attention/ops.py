@@ -8,7 +8,8 @@ import jax
 from repro.kernels.paged_attention.kernel import (
     paged_decode_attention_kernel, paged_verify_attention_kernel)
 from repro.kernels.paged_attention.ref import (
-    gather_pages, paged_decode_reference, paged_verify_reference)
+    gather_pages, gather_scales, paged_decode_reference,
+    paged_verify_reference)
 
 
 def _on_tpu() -> bool:
@@ -18,6 +19,7 @@ def _on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
                            scale: float | None = None,
+                           k_scale=None, v_scale=None,
                            interpret: bool | None = None) -> jax.Array:
     """q: (B, H, hd); k_pages/v_pages: (NP, Hkv, page, hd) shared pool;
     page_table: (B, P) int32; pos: () or (B,) int32 -> (B, H, hd).
@@ -27,7 +29,9 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
     step j of row b resolved through the scalar-prefetched page table
     instead of a contiguous row.  Dead table entries (past a row's
     allocation) must hold a valid pool index — the engine points them at
-    the park page; they are masked by ``pos`` regardless."""
+    the park page; they are masked by ``pos`` regardless.  An int8 pool
+    passes its (NP, Hkv, page) f32 ``k_scale``/``v_scale`` leaves and
+    the kernel dequantizes in VMEM."""
     if interpret is None:
         interpret = not _on_tpu()
     B, H, hd = q.shape
@@ -36,6 +40,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
     qg = q.reshape(B, Hkv, G, hd)
     out = paged_decode_attention_kernel(qg, k_pages, v_pages, page_table,
                                         pos, scale=scale,
+                                        k_scale=k_scale, v_scale=v_scale,
                                         interpret=interpret)
     return out.reshape(B, H, hd)
 
@@ -43,6 +48,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
                            pos, *, scale: float | None = None,
+                           k_scale=None, v_scale=None,
                            interpret: bool | None = None) -> jax.Array:
     """q: (B, K, H, hd); pool holds the cache BEFORE the block's writes;
     blk_k/blk_v: (B, K, Hkv, hd); page_table: (B, P); pos: () or (B,)
@@ -64,11 +70,12 @@ def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
     vb = blk_v.swapaxes(1, 2)
     out = paged_verify_attention_kernel(qg, k_pages, v_pages, kb, vb,
                                         page_table, pos, scale=scale,
+                                        k_scale=k_scale, v_scale=v_scale,
                                         interpret=interpret)
     return (out.reshape(B, Hkv, K, G, hd).transpose(0, 2, 1, 3, 4)
             .reshape(B, K, H, hd))
 
 
-__all__ = ["gather_pages", "paged_decode_attention",
+__all__ = ["gather_pages", "gather_scales", "paged_decode_attention",
            "paged_decode_reference", "paged_verify_attention",
            "paged_verify_reference"]

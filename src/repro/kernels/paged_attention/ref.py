@@ -33,19 +33,50 @@ def gather_pages(pages, page_table):
     return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * page, hd)
 
 
+def gather_scales(scales, page_table):
+    """(NP, Hkv, page) int8-bank scale leaf + (B, P) table ->
+    (B, Hkv, P*page) per-position scales — ``gather_pages`` minus the
+    head-dim axis, so a gathered int8 row dequantizes elementwise as
+    ``codes * scales[..., None]``."""
+    g = scales[jnp.asarray(page_table, jnp.int32)]  # (B, P, Hkv, page)
+    B, P, Hkv, page = g.shape
+    return g.transpose(0, 2, 1, 3).reshape(B, Hkv, P * page)
+
+
+def _dequant(pages, scales, page_table):
+    codes = gather_pages(pages, page_table)
+    s = gather_scales(scales, page_table)
+    return codes.astype(jnp.float32) * s[..., None]
+
+
 def paged_decode_reference(q, k_pages, v_pages, page_table, pos, *,
-                           scale: float | None = None):
-    """q: (B, H, hd) -> (B, H, hd); see module docstring for layouts."""
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+                           scale: float | None = None,
+                           k_scale=None, v_scale=None):
+    """q: (B, H, hd) -> (B, H, hd); see module docstring for layouts.
+    ``k_scale``/``v_scale`` ((NP, Hkv, page) f32) mark an int8 bank:
+    codes are dequantized after the gather, then the row oracle runs
+    unchanged."""
+    if k_scale is not None:
+        k = _dequant(k_pages, k_scale, page_table)
+        v = _dequant(v_pages, v_scale, page_table)
+    else:
+        k = gather_pages(k_pages, page_table)
+        v = gather_pages(v_pages, page_table)
     return decode_reference(q, k, v, pos, ring=False, scale=scale)
 
 
 def paged_verify_reference(q, k_pages, v_pages, blk_k, blk_v, page_table,
-                           pos, *, scale: float | None = None):
+                           pos, *, scale: float | None = None,
+                           k_scale=None, v_scale=None):
     """q: (B, K, H, hd); blk_k/blk_v: (B, K, Hkv, hd) block keys/values;
-    the pool holds the cache BEFORE the block's writes -> (B, K, H, hd)."""
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    the pool holds the cache BEFORE the block's writes -> (B, K, H, hd).
+    ``k_scale``/``v_scale`` dequantize an int8 bank (the block k/v stay
+    full precision — they have not been written yet)."""
+    if k_scale is not None:
+        k = _dequant(k_pages, k_scale, page_table)
+        v = _dequant(v_pages, v_scale, page_table)
+    else:
+        k = gather_pages(k_pages, page_table)
+        v = gather_pages(v_pages, page_table)
     return verify_reference(q, k, v, blk_k, blk_v, pos, ring=False,
                             scale=scale)

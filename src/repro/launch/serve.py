@@ -17,7 +17,10 @@ Four modes:
     (``--pool`` sets the slot-pool width).  ``--paged --page-size N``
     swaps each context's row-granular KV pool for the paged slot pool:
     per-slot page tables over one shared page bank, so a request only
-    holds the pages its own length needs.
+    holds the pages its own length needs.  ``--multi-step T`` fuses up
+    to T decode steps per tick (host bookkeeping amortizes over T
+    tokens); ``--quantize-kv int8`` stores the page bank in int8 for
+    ~2x pages per HBM budget.
   * ``--mode speculative`` — continuous batching with speculative cascade
     decode: ``--draft NAME`` names the draft context; every other
     registered context becomes a verify target whose requests run on a
@@ -120,6 +123,19 @@ def main(argv=None) -> int:
     ap.add_argument("--page-size", type=int, default=256,
                     help="paged mode: tokens per KV page (must divide "
                          "the serving max_len)")
+    ap.add_argument("--multi-step", type=int, default=1,
+                    help="continuous mode: fuse up to T decode steps "
+                         "into one device program per scheduler tick "
+                         "(the host's rank/drain/admit bookkeeping "
+                         "amortizes over up to T tokens; streams stay "
+                         "bitwise-identical to T single steps)")
+    ap.add_argument("--quantize-kv", choices=("none", "int8"),
+                    default="none",
+                    help="paged mode: store the shared KV page bank in "
+                         "int8 with per-token-per-head scales — about "
+                         "half the bytes per page, ~2x admitted "
+                         "concurrency per HBM budget (outputs are "
+                         "tolerance-close, not bitwise)")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -127,6 +143,11 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.quantize_kv != "none" and not args.paged:
+        ap.error("--quantize-kv targets the shared page bank: it "
+                 "requires --paged")
+    if args.multi_step < 1:
+        ap.error("--multi-step must be >= 1")
 
     names = args.archs.split(",")
     slack = args.spec_k if args.mode == "speculative" else 0
@@ -156,7 +177,10 @@ def main(argv=None) -> int:
                          s, batch_size=args.pool, draft=draft_map,
                          spec_k=args.spec_k,
                          prefill_chunk=args.prefill_chunk,
-                         paged=args.paged, page_size=args.page_size))
+                         paged=args.paged, page_size=args.page_size,
+                         multi_step=args.multi_step,
+                         quantize_kv=(None if args.quantize_kv == "none"
+                                      else args.quantize_kv)))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]

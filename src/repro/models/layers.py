@@ -10,7 +10,7 @@ three entry points matching the framework's execution modes:
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -380,24 +380,64 @@ def commit_page(big: BigKV, act: ActKV, pos) -> BigKV:
 
 class PagedKV(NamedTuple):
     """Shared page pool: virtual row position j*page+s of a request lives
-    at ``pool[table[j], :, s]`` for that request's page table."""
-    k: jax.Array          # (NP, Hkv, page, hd)
+    at ``pool[table[j], :, s]`` for that request's page table.
+
+    ``ks``/``vs`` are the int8 bank's scale leaves ((NP, Hkv, page) f32,
+    ``None`` for full-precision pools): when present, ``k``/``v`` hold
+    symmetric-absmax int8 codes and the real value of pool entry
+    ``[p, h, s, :]`` is ``k[p, h, s, :] * ks[p, h, s]`` — one scale per
+    token per kv head, riding the same page table as the codes, so a
+    single decoded token quantizes independently without rescaling its
+    page."""
+    k: jax.Array          # (NP, Hkv, page, hd) — cache dtype, or int8
     v: jax.Array
+    ks: Any = None        # (NP, Hkv, page) f32 scales (int8 pools only)
+    vs: Any = None
 
 
 PARK_PAGE = 0
+
+KV_QMAX = 127.0           # symmetric int8: codes in [-127, 127]
 
 PAGED_LOGICAL = PagedKV(k=("kv_pages", "kv_heads", None, "head_dim"),
                         v=("kv_pages", "kv_heads", None, "head_dim"))
 
 
 def init_page_pool(cfg: ArchConfig, num_pages: int, page: int,
-                   dtype=jnp.bfloat16, abstract: bool = False) -> PagedKV:
+                   dtype=jnp.bfloat16, abstract: bool = False,
+                   quantized: bool = False) -> PagedKV:
     shape = (num_pages, cfg.num_kv_heads, page, cfg.head_dim)
+    if quantized:
+        sshape = shape[:-1]
+        if abstract:
+            return PagedKV(k=jax.ShapeDtypeStruct(shape, jnp.int8),
+                           v=jax.ShapeDtypeStruct(shape, jnp.int8),
+                           ks=jax.ShapeDtypeStruct(sshape, jnp.float32),
+                           vs=jax.ShapeDtypeStruct(sshape, jnp.float32))
+        return PagedKV(k=jnp.zeros(shape, jnp.int8),
+                       v=jnp.zeros(shape, jnp.int8),
+                       ks=jnp.zeros(sshape, jnp.float32),
+                       vs=jnp.zeros(sshape, jnp.float32))
     if abstract:
         return PagedKV(k=jax.ShapeDtypeStruct(shape, dtype),
                        v=jax.ShapeDtypeStruct(shape, dtype))
     return PagedKV(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def quantize_kv(x):
+    """Symmetric absmax int8 over the last axis: ``x (..., hd)`` ->
+    ``(codes int8 (..., hd), scale f32 (...,))`` with
+    ``x ~= codes * scale``.  One scale per token per head — the grain a
+    token-at-a-time decode write can produce without touching the rest
+    of its page."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / KV_QMAX
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 # The contiguous per-row view of a paged bank: (NP, Hkv, page, hd) pool +
@@ -406,7 +446,8 @@ def init_page_pool(cfg: ArchConfig, num_pages: int, page: int,
 # row-cache layout holds at every written position, so the row attention
 # math downstream is bitwise the row engine's (unwritten positions differ
 # only in masked garbage).
-from repro.kernels.paged_attention.ref import gather_pages as _gather_pages
+from repro.kernels.paged_attention.ref import (  # noqa: E402
+    gather_pages as _gather_pages, gather_scales as _gather_scales)
 
 
 def _page_write(cache: PagedKV, k, v, tables, positions, wmask=None):
@@ -416,7 +457,11 @@ def _page_write(cache: PagedKV, k, v, tables, positions, wmask=None):
     virtual positions; ``wmask`` ((B, K) bool, optional) routes False
     tokens' writes to the PARK page instead — pad tokens in a chunk, and
     non-live rows' per-step decode writes, land in garbage space without
-    touching any request's pages."""
+    touching any request's pages.
+
+    int8 pools (``cache.ks is not None``) quantize on write: each token's
+    (Hkv, hd) k/v rows become int8 codes plus a per-head scale scattered
+    into the parallel scale leaf at the same (page, head, slot)."""
     P = tables.shape[1]
     page = cache.k.shape[2]
     positions = jnp.asarray(positions, jnp.int32)
@@ -425,9 +470,28 @@ def _page_write(cache: PagedKV, k, v, tables, positions, wmask=None):
     if wmask is not None:
         pids = jnp.where(wmask, pids, PARK_PAGE)
     slots = positions % page
+    if cache.ks is not None:
+        kq, ksc = quantize_kv(k)                    # (B, K, Hkv, hd/)
+        vq, vsc = quantize_kv(v)
+        return PagedKV(k=cache.k.at[pids, :, slots, :].set(kq),
+                       v=cache.v.at[pids, :, slots, :].set(vq),
+                       ks=cache.ks.at[pids, :, slots].set(ksc),
+                       vs=cache.vs.at[pids, :, slots].set(vsc))
     k_new = cache.k.at[pids, :, slots, :].set(k.astype(cache.k.dtype))
     v_new = cache.v.at[pids, :, slots, :].set(v.astype(cache.v.dtype))
     return PagedKV(k=k_new, v=v_new)
+
+
+def _gather_dequant(cache: PagedKV, tables, dtype):
+    """Reference read of an int8 bank: gather codes and scales through
+    the tables, dequantize to ``dtype`` -> (kg, vg) (B, Hkv, P*page, hd).
+    Unwritten positions hold code 0 (dequantizes to exact 0.0 — same
+    masked-garbage story as the full-precision pool)."""
+    kg = dequantize_kv(_gather_pages(cache.k, tables),
+                       _gather_scales(cache.ks, tables), dtype)
+    vg = dequantize_kv(_gather_pages(cache.v, tables),
+                       _gather_scales(cache.vs, tables), dtype)
+    return kg, vg
 
 
 def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
@@ -453,7 +517,13 @@ def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
         from repro.kernels.paged_attention.ops import paged_decode_attention
         interp = None if kernels.get_mode() == "auto" else True
         out = paged_decode_attention(q[:, 0], cache.k, cache.v, tables,
-                                     pos, interpret=interp)[:, None]
+                                     pos, k_scale=cache.ks,
+                                     v_scale=cache.vs,
+                                     interpret=interp)[:, None]
+    elif cache.ks is not None:
+        kg, vg = _gather_dequant(cache, tables, x.dtype)
+        valid = jnp.arange(kg.shape[2])[None, :] <= pos[:, None]
+        out = decode_sdpa(q, kg, vg, valid, cfg)
     else:
         kg = _gather_pages(cache.k, tables)
         vg = _gather_pages(cache.v, tables)
@@ -486,7 +556,12 @@ def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
         from repro.kernels.paged_attention.ops import paged_verify_attention
         interp = None if kernels.get_mode() == "auto" else True
         out = paged_verify_attention(q, cache.k, cache.v, k, v, tables,
-                                     pos, interpret=interp)
+                                     pos, k_scale=cache.ks,
+                                     v_scale=cache.vs, interpret=interp)
+    elif cache.ks is not None:
+        from repro.kernels.verify_attention.ref import verify_reference
+        kg, vg = _gather_dequant(cache, tables, x.dtype)
+        out = verify_reference(q, kg, vg, k, v, pos, ring=False)
     else:
         from repro.kernels.verify_attention.ref import verify_reference
         kg = _gather_pages(cache.k, tables)
@@ -510,10 +585,20 @@ def insert_pages(cache: PagedKV, rows: KVCache, tables) -> PagedKV:
     page = cache.k.shape[2]
     assert S == P * page, (S, P, page)
 
+    def paged_view(r):
+        return (r.reshape(B, Hkv, P, page, hd)
+                .transpose(0, 2, 1, 3, 4))          # (B, P, Hkv, page, hd)
+
+    if cache.ks is not None:                        # quantize on insert
+        kq, ksc = quantize_kv(paged_view(rows.k))
+        vq, vsc = quantize_kv(paged_view(rows.v))
+        return PagedKV(k=cache.k.at[tables].set(kq),
+                       v=cache.v.at[tables].set(vq),
+                       ks=cache.ks.at[tables].set(ksc),
+                       vs=cache.vs.at[tables].set(vsc))
+
     def scatter(pool, r):
-        r = (r.reshape(B, Hkv, P, page, hd).transpose(0, 2, 1, 3, 4)
-             .astype(pool.dtype))                   # (B, P, Hkv, page, hd)
-        return pool.at[tables].set(r)
+        return pool.at[tables].set(paged_view(r).astype(pool.dtype))
 
     return PagedKV(k=scatter(cache.k, rows.k), v=scatter(cache.v, rows.v))
 

@@ -427,17 +427,20 @@ class LM:
                 "ring slots alias positions a page table cannot express")
 
     def init_page_pool(self, num_pages: int, page: int,
-                       abstract: bool = False):
+                       abstract: bool = False, quantized: bool = False):
         """Shared-page decode cache: one ``layers.PagedKV`` bank per
         block, leaves (R, NP, Hkv, page, hd).  Page 0 is the PARK page
         (see ``layers._page_write``); the page table is shared across
         layers — page id p is position range [j*page, (j+1)*page) of its
-        owning row in EVERY layer's bank."""
+        owning row in EVERY layer's bank.  ``quantized`` stores the bank
+        as int8 codes plus (R, NP, Hkv, page) f32 scale leaves — roughly
+        half the bytes per page, so ~2x pages per HBM budget."""
         self._require_paged_support()
         out = {}
         for i in range(len(self.pattern)):
             one = layers.init_page_pool(self.cfg, num_pages, page,
-                                        self.cache_dtype, abstract)
+                                        self.cache_dtype, abstract,
+                                        quantized=quantized)
             out[f"b{i}"] = _stack_tree(one, self.repeats, abstract)
         return out
 
@@ -505,6 +508,78 @@ class LM:
 
     # chunked admission is the verify machinery pointed at the page pool
     prefill_chunk_pages = verify_step_pages
+
+    # ------------------------------------------------------ multi-step decode
+    def _decode_multi(self, params, caches, tokens, pos, steps, sample_fn,
+                      stop_fn, carry, live=None, pos_cap=None, tables=None):
+        """Up to ``steps`` decode steps in ONE device loop (the host tick
+        amortizes over every iteration; see ``StepEngine(multi_step=T)``).
+
+        Each iteration runs the SAME ``decode_step`` /
+        ``decode_step_pages`` body a single-step engine would, then:
+
+          * ``nxt, carry = sample_fn(last_logits, pos, carry)`` — the
+            engine supplies its exact sampling rule (keys advance inside
+            ``carry``), which is what keeps the fused stream bitwise
+            equal to iterated single steps;
+          * ``stop = stop_fn(nxt, advanced_pos, i)`` — a () bool that is
+            True the moment ANY slot changes occupancy (EOS, token
+            budget, page exhaustion).  The loop commits this step and
+            exits, handing control back to the host while every slot's
+            membership is still exactly what the host last saw.
+
+        ``pos_cap`` clamps the advanced positions (the single-step
+        engine's run-off guard); ``stop_fn`` sees them UNCLAMPED so a
+        budget bitmap can fire on the true value.  Returns
+        ``(out (B, steps) int32, n_steps () int32, caches, tok, pos,
+        carry)`` — only ``out[:, :n_steps]`` is meaningful.
+        """
+        B = tokens.shape[0]
+
+        def cond(st):
+            return (st[0] < steps) & ~st[1]
+
+        def body(st):
+            i, stop, caches, tok, pos, carry, out = st
+            if tables is None:
+                logits, caches = self.decode_step(params, caches, tok, pos)
+            else:
+                logits, caches = self.decode_step_pages(
+                    params, caches, tok, pos, tables, live=live)
+            nxt, carry = sample_fn(logits[:, -1], pos, carry)
+            posr = pos + 1 if live is None else jnp.where(live, pos + 1, pos)
+            stop = stop_fn(nxt, posr, i)
+            if pos_cap is not None:
+                posr = jnp.minimum(posr, pos_cap)
+            out = jax.lax.dynamic_update_index_in_dim(out, nxt, i, 1)
+            return (i + 1, stop, caches, nxt[:, None], posr, carry, out)
+
+        init = (jnp.zeros((), jnp.int32), jnp.zeros((), bool), caches,
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32),
+                carry, jnp.zeros((B, steps), jnp.int32))
+        n, _, caches, tok, pos, carry, out = jax.lax.while_loop(
+            cond, body, init)
+        return out, n, caches, tok, pos, carry
+
+    def decode_multi_step(self, params, caches, tokens, pos, steps,
+                          sample_fn, stop_fn, carry, live=None,
+                          pos_cap=None):
+        """Row-cache multi-step decode; see ``_decode_multi``.  ``steps``
+        must be static (it sizes the output buffer)."""
+        return self._decode_multi(params, caches, tokens, pos, steps,
+                                  sample_fn, stop_fn, carry, live=live,
+                                  pos_cap=pos_cap)
+
+    def decode_multi_step_pages(self, params, caches, tokens, pos, tables,
+                                steps, sample_fn, stop_fn, carry,
+                                live=None, pos_cap=None):
+        """Paged multi-step decode; see ``_decode_multi``.  ``tables``
+        is loop-invariant by construction: the loop exits before any
+        occupancy change, so no page moves while it runs."""
+        return self._decode_multi(params, caches, tokens, pos, steps,
+                                  sample_fn, stop_fn, carry, live=live,
+                                  pos_cap=pos_cap,
+                                  tables=jnp.asarray(tables, jnp.int32))
 
     def decode_step_paged(self, params, bigs, acts, tokens, pos):
         """One decode step against a paged cache (see layers: BigKV/ActKV).

@@ -146,6 +146,28 @@ class StepEngine(SlotPool):
     paged and row streams are bitwise-identical (greedy + seeded
     temperature, one-shot + chunked admission — tested).  Paged mode
     needs an all-attention, non-ring model, same as chunked prefill.
+
+    ``multi_step=T`` fuses up to T decode steps into ONE device program
+    per tick (``LM.decode_multi_step[_pages]``): the host's
+    rank/drain/admit bookkeeping amortizes over every committed step
+    instead of being paid per token.  On-device EOS / token-budget /
+    page-exhaustion bitmaps early-exit the loop the moment any slot
+    would change occupancy, so retirement timing — and, because the
+    sampling rule and key-fold chain are shared with the single-step
+    program, every sampled token — is bitwise-identical to T single
+    steps (tested).  While a chunked prefill is mid-stream the engine
+    drops to single steps so the prompt keeps its one-chunk-per-tick
+    admission latency.
+
+    ``quantize_kv="int8"`` (paged mode only) stores the shared page bank
+    as int8 codes with per-token-per-head f32 scales in parallel leaves
+    — about half the bytes per page, so roughly 2x the pages fit in the
+    same HBM budget and admitted concurrency rises with them.  Writes
+    quantize on insert/decode/verify; the paged attention kernel
+    dequantizes in VMEM (the scales ride the same scalar-prefetched page
+    table).  Outputs are no longer bitwise-equal to fp16 — the parity
+    suite bounds greedy logit divergence and distribution-level sampling
+    drift instead (tested).
     """
 
     def __init__(self, model: LM, batch_size: int, max_len: int,
@@ -154,12 +176,25 @@ class StepEngine(SlotPool):
                  prefill_chunk: Optional[int] = None,
                  paged: bool = False, page_size: int = 256,
                  num_pages: Optional[int] = None,
-                 admit_jump_limit: int = 4):
+                 admit_jump_limit: int = 4,
+                 multi_step: int = 1,
+                 quantize_kv: Optional[str] = None):
         self.model = model
         self.max_len = max_len
         self.temperature = temperature
         self.seed = seed
         self.eos_id = eos_id
+        if multi_step < 1:
+            raise ValueError(f"multi_step must be >= 1, got {multi_step}")
+        self.multi_step = multi_step
+        if quantize_kv not in (None, "int8"):
+            raise ValueError(f"quantize_kv must be None or 'int8', got "
+                             f"{quantize_kv!r}")
+        if quantize_kv is not None and not paged:
+            raise ValueError(
+                "quantize_kv targets the shared page bank: it needs "
+                "paged=True (the row cache stays full precision)")
+        self.quantize_kv = quantize_kv
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError(f"prefill_chunk must be >= 1, got "
@@ -220,6 +255,25 @@ class StepEngine(SlotPool):
             return jax.vmap(
                 lambda k: jax.random.gumbel(k, (V,), jnp.float32))(folded)
 
+        def _sample_tok(last, key, pos, live, seeded, rkey):
+            """The engine's ONE sampling rule, shared verbatim by the
+            single-step and fused multi-step programs — that sharing is
+            what makes ``multi_step=T`` bitwise-identical to T single
+            steps.  Pool schedule: argmax(l/T + gumbel) IS categorical's
+            own computation, bitwise (same key, same (B, V) field).  The
+            per-row seeded field only exists while a LIVE seeded row
+            does (lax.cond) — unseeded pools pay nothing extra."""
+            if T > 0.0:
+                g = jax.random.gumbel(key, (B, V), jnp.float32)
+                sl = seeded & live
+                g = jax.lax.cond(
+                    sl.any(),
+                    lambda g: jnp.where(
+                        sl[:, None], _row_gumbel(rkey, pos + 1), g),
+                    lambda g: g, g)
+                return jnp.argmax(last / T + g, axis=-1).astype(jnp.int32)
+            return jnp.argmax(last, axis=-1).astype(jnp.int32)
+
         def _step(params, state: DecodeState, live):
             key = jax.random.fold_in(state.key, state.t)
             if paged:
@@ -231,27 +285,57 @@ class StepEngine(SlotPool):
             else:
                 logits, caches = model.decode_step(params, state.caches,
                                                    state.tok, state.pos)
-            last = logits[:, -1]                               # (B, V) f32
-            if T > 0.0:
-                # pool schedule: argmax(l/T + gumbel) IS categorical's own
-                # computation, bitwise (same key, same (B, V) field).  The
-                # per-row seeded field only exists while a LIVE seeded row
-                # does (lax.cond) — unseeded pools pay nothing extra.
-                g = jax.random.gumbel(key, (B, V), jnp.float32)
-                sl = state.seeded & live
-                g = jax.lax.cond(
-                    sl.any(),
-                    lambda g: jnp.where(
-                        sl[:, None],
-                        _row_gumbel(state.rkey, state.pos + 1), g),
-                    lambda g: g, g)
-                nxt = jnp.argmax(last / T + g, axis=-1).astype(jnp.int32)
-            else:
-                nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            nxt = _sample_tok(logits[:, -1], key, state.pos, live,
+                              state.seeded, state.rkey)
             pos = jnp.where(live, state.pos + 1, state.pos)
             pos = jnp.minimum(pos, max_len - 1)               # parked slots
             return nxt, state._replace(caches=caches, tok=nxt[:, None],
                                        pos=pos, key=key, t=state.t + 1)
+
+        MS = multi_step
+        eos = eos_id
+
+        def _mstep(params, state: DecodeState, live, rem, budget):
+            """Up to ``multi_step`` decode steps in ONE device program
+            (``LM.decode_multi_step[_pages]``): the host tick amortizes
+            over every committed step.  ``rem`` ((B,) int32) is each live
+            row's remaining token budget and ``budget`` its position cap
+            (page allocation / cache end); together with EOS they form
+            the on-device occupancy bitmap — the loop exits the moment
+            any live slot would change occupancy, so the host's view of
+            the pool is never stale.  The (key, t) fold chain threads
+            through the loop carry exactly as the single-step program
+            advances it."""
+
+            def sample_fn(last, pos, carry):
+                key, t = carry
+                k2 = jax.random.fold_in(key, t)
+                nxt = _sample_tok(last, k2, pos, live, state.seeded,
+                                  state.rkey)
+                return nxt, (k2, t + 1)
+
+            def stop_fn(nxt, posr, i):
+                done = live & (rem <= i + 1)          # token budget spent
+                if eos is not None:
+                    done = done | (live & (nxt == eos))
+                done = done | (live & (posr >= budget))   # pages exhausted
+                return done.any()
+
+            carry = (state.key, state.t)
+            if paged:
+                out, n, caches, tok, pos, carry = (
+                    model.decode_multi_step_pages(
+                        params, state.caches, state.tok, state.pos,
+                        state.table, MS, sample_fn, stop_fn, carry,
+                        live=live, pos_cap=max_len - 1))
+            else:
+                out, n, caches, tok, pos, carry = model.decode_multi_step(
+                    params, state.caches, state.tok, state.pos, MS,
+                    sample_fn, stop_fn, carry, live=live,
+                    pos_cap=max_len - 1)
+            key, t = carry
+            return out, n, state._replace(caches=caches, tok=tok, pos=pos,
+                                          key=key, t=t)
 
         def _admit(params, state: DecodeState, tokens, slots, tables,
                    rkeys, seeded):
@@ -368,6 +452,7 @@ class StepEngine(SlotPool):
                 seeded=state.seeded.at[slots].set(seeded))
 
         self._step_fn = jax.jit(_step, donate_argnums=(1,))
+        self._mstep_fn = jax.jit(_mstep, donate_argnums=(1,))
         self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
         self._chunk_fn = jax.jit(_chunk, donate_argnums=(1,))
         self._chunk_final_fn = jax.jit(_chunk_final, donate_argnums=(1,))
@@ -395,8 +480,9 @@ class StepEngine(SlotPool):
                 for x in jax.tree.leaves(self.state.caches)):
             caches = self.state.caches   # reuse, unless a failed step
         if caches is None:               # donated them out from under us
-            caches = (self.model.init_page_pool(self.num_pages,
-                                                self.page_size)
+            caches = (self.model.init_page_pool(
+                          self.num_pages, self.page_size,
+                          quantized=self.quantize_kv is not None)
                       if self.paged else
                       self.model.init_cache(B, self.max_len))
         self.state = DecodeState(
@@ -663,15 +749,26 @@ class StepEngine(SlotPool):
     # ---------------------------------------------------------------- step
     def step(self, params) -> list[Generation]:
         """One engine tick: at most one prefill chunk (chunked admission),
-        then one decode step for every live slot.  Returns the
-        generations that finished (EOS or step limit) at this boundary;
-        their slots are already back on the free-list."""
+        then one decode step for every live slot — or, with
+        ``multi_step=T`` and no prompt mid-stream, up to T fused decode
+        steps in one device program (the loop early-exits the moment any
+        slot would change occupancy, so the returned retirements are
+        exactly what T single ticks would have produced).  While chunked
+        prefill work is pending the engine stays single-step: a fused
+        loop would stall the streaming prompt for T tokens instead of
+        one.  Returns the generations that finished (EOS or step limit)
+        at this boundary; their slots are already back on the
+        free-list."""
         finished = self.prefill_tick(params) if self._pending else []
         if not self._live.any():
             return finished
+        if self.multi_step > 1 and not self._pending:
+            return finished + self._step_multi(params)
         nxt, self.state = self._call(self._step_fn, params, self.state,
                                      jnp.asarray(self._live))
         nxt = np.asarray(nxt)
+        self.stats["host_ticks"] += 1
+        self.stats["device_steps"] += 1
         stepped = []
         for s in range(self.batch_size):
             g = self.slots[s]
@@ -680,6 +777,37 @@ class StepEngine(SlotPool):
             g.tokens.append(int(nxt[s]))
             stepped.append(g)
         return finished + self._retire_done(stepped)
+
+    def _step_multi(self, params) -> list[Generation]:
+        """The fused tick: ship every live row's remaining-token budget
+        and position cap to the device, run up to ``multi_step`` decode
+        steps, read back ONE (tokens, n_steps) pair.  Exactly one host
+        sync per call regardless of how many steps committed."""
+        B = self.batch_size
+        rem = np.zeros((B,), np.int32)
+        budget = np.zeros((B,), np.int32)
+        for s in range(B):
+            g = self.slots[s]
+            if g is None or not self._live[s]:
+                continue
+            rem[s] = g.remaining
+            budget[s] = (len(g.pages) * self.page_size
+                         if self.paged and g.pages else self.max_len)
+        toks, n, self.state = self._call(
+            self._mstep_fn, params, self.state, jnp.asarray(self._live),
+            jnp.asarray(rem), jnp.asarray(budget))
+        toks = np.asarray(toks)
+        n = int(n)
+        self.stats["host_ticks"] += 1
+        self.stats["device_steps"] += n
+        stepped = []
+        for s in range(B):
+            g = self.slots[s]
+            if g is None or not self._live[s]:
+                continue
+            g.tokens.extend(int(t) for t in toks[s, :n])
+            stepped.append(g)
+        return self._retire_done(stepped)
 
 
 # ---------------------------------------------------------------------------

@@ -126,6 +126,12 @@ class SlotPool:
         self._free: deque[int] = deque(range(batch_size))
         self._live = np.zeros(batch_size, dtype=bool)
         self._rid = 0
+        # Engine-lifetime tick counters (NOT cleared by ``reset``;
+        # benches take deltas): ``host_ticks`` counts decode round-trips
+        # to the device, ``device_steps`` the decode steps those trips
+        # retired — their ratio is the multi-step amortization.
+        # Engines with richer accounting (SpecEngine) overwrite this.
+        self.stats = {"host_ticks": 0, "device_steps": 0}
 
     def _pool_reset(self):
         self.slots = [None] * self.batch_size

@@ -334,9 +334,18 @@ class ContinuousScheduler:
                  switch_margin: float = 1.5, preempt_margin: float = 6.0,
                  draft: Optional[dict] = None, spec_k: int = 4,
                  prefill_chunk: Optional[int] = None,
-                 paged: bool = False, page_size: int = 256):
+                 paged: bool = False, page_size: int = 256,
+                 multi_step: int = 1,
+                 quantize_kv: Optional[str] = None):
         self.server = server
         self.batch_size = batch_size
+        # device-resident multi-step decode: each engine tick runs up to
+        # ``multi_step`` fused decode steps, so the scheduler's
+        # rank/drain/admit bookkeeping amortizes over several tokens
+        # (snapshot()['steps_per_tick'] reports the realized ratio)
+        self.multi_step = multi_step
+        # int8 page bank (paged mode): ~2x pages per HBM budget
+        self.quantize_kv = quantize_kv
         # chunked admission: plain contexts' engines split prefill into
         # (b, C) chunks, one per tick, so a long prompt's admission hides
         # behind decode steps instead of stalling them (speculative
@@ -454,7 +463,9 @@ class ContinuousScheduler:
         eng = self.server.step_engine(name, self.batch_size,
                                       prefill_chunk=self.prefill_chunk,
                                       paged=self.paged,
-                                      page_size=self.page_size)
+                                      page_size=self.page_size,
+                                      multi_step=self.multi_step,
+                                      quantize_kv=self.quantize_kv)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -488,6 +499,15 @@ class ContinuousScheduler:
             eng.runner = runner
         return eng
 
+    def _step_key(self, name: str) -> tuple:
+        """The server-side ``_step_engines`` cache key this scheduler's
+        configuration resolves to (mirrors ``SwitchableServer
+        .step_engine``; full-key matching matters because the server
+        outlives schedulers with different configurations)."""
+        return (name, self.batch_size, self.prefill_chunk,
+                self.page_size if self.paged else None, self.multi_step,
+                self.quantize_kv)
+
     def _live_engines(self):
         out = {}
         for name in self.server.served():
@@ -495,9 +515,7 @@ class ContinuousScheduler:
                 eng = self.server._spec_engines.get(
                     (name, self.draft[name], self.batch_size, self.spec_k))
             else:
-                eng = self.server._step_engines.get(
-                    (name, self.batch_size, self.prefill_chunk,
-                     self.page_size if self.paged else None))
+                eng = self.server._step_engines.get(self._step_key(name))
             if eng is not None and eng.live_slots():
                 out[name] = eng
         return out
@@ -707,7 +725,7 @@ class ContinuousScheduler:
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(exc)
-        for (name, bsz, _c, _pg), eng in list(
+        for (name, bsz, *_), eng in list(
                 self.server._step_engines.items()):
             if bsz == self.batch_size and (cur is None or name == cur) \
                     and eng.live_slots():
@@ -721,6 +739,18 @@ class ContinuousScheduler:
     # ------------------------------------------------------------- report
     def snapshot(self) -> dict:
         out = _snapshot(self.stats, self.server.engine)
+        ticks = dsteps = 0
+        for key, eng in self.server._step_engines.items():
+            # full-key match, same reason as the spec block below
+            if key == self._step_key(key[0]):
+                ticks += eng.stats["host_ticks"]
+                dsteps += eng.stats["device_steps"]
+        if ticks:
+            out["host_ticks"] = ticks
+            out["device_steps"] = dsteps
+            # the multi-step amortization actually realized: decode steps
+            # committed per host round-trip (1.0 when multi_step == 1)
+            out["steps_per_tick"] = round(dsteps / ticks, 3)
         rounds = row_rounds = committed = 0
         for (name, dname, bsz, k), eng in self.server._spec_engines.items():
             # full-key match: the server outlives schedulers, so engines

@@ -97,25 +97,30 @@ class SwitchableServer:
     def step_engine(self, name: str, batch_size: int,
                     prefill_chunk: Optional[int] = None,
                     paged: bool = False,
-                    page_size: int = 256) -> StepEngine:
+                    page_size: int = 256,
+                    multi_step: int = 1,
+                    quantize_kv: Optional[str] = None) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
         paused context resumes exactly where its last step left off;
         weights are NOT captured (every call runs against the engine
         slot's current buffers via the scheduler's runner hook).
-        ``prefill_chunk`` and the page layout key the cache too: chunked
-        vs one-shot admission and paged vs row pools build different
-        jitted programs over the same pool shape."""
+        ``prefill_chunk``, the page layout, ``multi_step``, and
+        ``quantize_kv`` key the cache too: each combination builds
+        different jitted programs (and for int8, a different bank
+        layout) over the same pool shape."""
         key = (name, batch_size, prefill_chunk,
-               page_size if paged else None)
+               page_size if paged else None, multi_step, quantize_kv)
         eng = self._step_engines.get(key)
         if eng is None:
             sm = self._served[name]
             eng = StepEngine(sm.model, batch_size, sm.max_len,
                              temperature=sm.temperature,
                              prefill_chunk=prefill_chunk,
-                             paged=paged, page_size=page_size)
+                             paged=paged, page_size=page_size,
+                             multi_step=multi_step,
+                             quantize_kv=quantize_kv)
             self._step_engines[key] = eng
         return eng
 

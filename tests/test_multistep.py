@@ -1,0 +1,178 @@
+"""Device-resident multi-step decode: ``StepEngine(multi_step=T)`` runs
+up to T decode steps in ONE jitted device loop per tick.
+
+The contract under test: the fused loop commits EXACTLY the device-step
+sequence T iterated single steps would — bitwise-identical token
+streams (greedy + seeded temperature, row + paged engines), retirement
+at the same step boundaries (the on-device EOS / token-budget bitmaps
+early-exit the loop the moment any slot would change occupancy), and
+the host tick count amortized by up to T.  Bitwise comparisons run in
+f32 end to end, same reason as the paged identity matrix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import StepEngine
+
+
+@pytest.fixture(scope="module")
+def f32_lm():
+    cfg = reduced_arch("tinyllama-1.1b", dtype="float32",
+                       param_dtype="float32")
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _drain(eng, p):
+    while eng.live_slots():
+        eng.step(p)
+
+
+def _engine(m, multi_step, paged, temperature=0.0, **kw):
+    return StepEngine(m, batch_size=3, max_len=64, temperature=temperature,
+                      seed=5, paged=paged, page_size=16,
+                      multi_step=multi_step, **kw)
+
+
+def _mixed_stream(eng, p, cfg, temperature):
+    """Admit A (short budget) + B at t=0, drain until A's retirement
+    early-exits the loop, admit C at that boundary, drain.  Admissions
+    land at identical device-step counts in the single-step and fused
+    engines BECAUSE retirement early-exits the fused loop — which is the
+    occupancy-change contract itself."""
+    seeds = [7, 9, 11] if temperature > 0 else [None, None, None]
+    ga = eng.admit(p, np.asarray(tokens_for(cfg, 1, 8, seed=1)),
+                   max_new=3, seeds=[seeds[0]])[0]
+    gb = eng.admit(p, np.asarray(tokens_for(cfg, 1, 20, seed=2)),
+                   max_new=9, seeds=[seeds[1]])[0]
+    while not ga.done:                     # A retires at device step 2
+        eng.step(p)
+    gc = eng.admit(p, np.asarray(tokens_for(cfg, 1, 12, seed=3)),
+                   max_new=5, seeds=[seeds[2]])[0]
+    _drain(eng, p)
+    return [g.tokens for g in (ga, gb, gc)]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("paged", [False, True])
+def test_multistep_streams_bitwise_identical(f32_lm, temperature, paged):
+    """multi_step=4 == 4 iterated single steps, bitwise: greedy and
+    seeded temperature, row and paged pools, with a mid-stream admission
+    at a retirement boundary (the early-exit keeps the two engines'
+    admission keys and positions in lockstep)."""
+    cfg, m, p = f32_lm
+    ref_eng = _engine(m, 1, paged, temperature)
+    ref = _mixed_stream(ref_eng, p, cfg, temperature)
+    eng = _engine(m, 4, paged, temperature)
+    got = _mixed_stream(eng, p, cfg, temperature)
+    assert got == ref
+    # the same device steps were committed — in fewer host ticks
+    assert eng.stats["device_steps"] == ref_eng.stats["device_steps"]
+    assert eng.stats["host_ticks"] < ref_eng.stats["host_ticks"]
+    if paged:
+        assert eng.free_pages() == eng._pages.allocatable
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_multistep_mid_loop_eos_retire(f32_lm, paged):
+    """A row hitting EOS inside the fused loop exits the loop AT that
+    step: the stream stops exactly where the single-step engine stops,
+    the slot frees, and the co-resident row's tokens are untouched."""
+    cfg, m, p = f32_lm
+    prompt = np.asarray(tokens_for(cfg, 1, 8, seed=1))
+    probe = _engine(m, 1, paged)
+    g = probe.admit(p, prompt, max_new=8)[0]
+    _drain(probe, p)
+    eos = g.tokens[2]                      # greedy: this token becomes EOS
+    cut = g.tokens[:g.tokens.index(eos) + 1]   # stream up to FIRST hit
+    assert 1 < len(cut) < len(g.tokens)    # mid-loop for T=8, mid-stream
+
+    runs = []
+    for T in (1, 8):
+        eng = _engine(m, T, paged, eos_id=eos)
+        ge = eng.admit(p, prompt, max_new=8)[0]
+        gn = eng.admit(p, np.asarray(tokens_for(cfg, 1, 12, seed=2)),
+                       max_new=8)[0]
+        _drain(eng, p)
+        assert ge.done and ge.tokens == cut   # retired AT the EOS step
+        assert eng.free_slots() == 3
+        runs.append((ge.tokens, gn.tokens, eng.stats["device_steps"]))
+    assert runs[0] == runs[1]              # streams AND step count
+
+
+def test_multistep_amortizes_host_ticks(f32_lm):
+    """Steady state (no retirement in sight): one host tick per T
+    committed steps — 16 decode steps in exactly ceil(16/8)=2 ticks."""
+    cfg, m, p = f32_lm
+    eng = _engine(m, 8, False)
+    eng.admit(p, np.asarray(tokens_for(cfg, 3, 8)), max_new=17)
+    _drain(eng, p)
+    assert eng.stats["device_steps"] == 16
+    assert eng.stats["host_ticks"] == 2
+
+
+def test_multistep_single_steps_while_prefill_pending(f32_lm):
+    """Chunked-prefill interaction: while a prompt is streaming chunks
+    the engine drops to single decode steps (the streaming prompt keeps
+    its one-chunk-per-tick admission latency); fused ticks resume once
+    the queue drains.  Streams stay bitwise equal to the single-step
+    engine driven tick-for-tick."""
+    cfg, m, p = f32_lm
+
+    def run(T):
+        eng = _engine(m, T, False, prefill_chunk=4)
+        ga = eng.admit(p, np.asarray(tokens_for(cfg, 1, 12, seed=1)),
+                       max_new=8)[0]
+        for _ in range(3):                 # 2 stream chunks + final
+            eng.step(p)
+        assert not eng._pending and ga.tokens   # A live, queue drained
+        gb = eng.admit(p, np.asarray(tokens_for(cfg, 1, 20, seed=2)),
+                       max_new=6)[0]
+        d0 = eng.stats["device_steps"]
+        eng.step(p)                        # B pending -> exactly 1 step
+        assert eng.stats["device_steps"] == d0 + 1
+        _drain(eng, p)
+        return [ga.tokens, gb.tokens]
+
+    # Per-row greedy streams don't depend on tick alignment (attention is
+    # per-row, the pool program is fixed-shape), so even though T=4 fuses
+    # A's early steps before B arrives, the streams must match exactly.
+    assert run(4) == run(1)
+
+
+def test_multistep_guards(f32_lm):
+    cfg, m, p = f32_lm
+    with pytest.raises(ValueError, match="multi_step"):
+        StepEngine(m, batch_size=2, max_len=64, multi_step=0)
+
+
+def test_continuous_scheduler_multistep():
+    """ContinuousScheduler(multi_step=4) end to end: greedy outputs
+    equal the run-to-completion server reference, and the snapshot
+    reports the realized amortization (steps_per_tick > 1)."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-super", "supersub-sub"]
+    server, cfgs = build_server(names, 2, 32, load_delay_s=0.01,
+                                arch_overrides={"dtype": "float32",
+                                                "param_dtype": "float32"})
+    rng = np.random.default_rng(0)
+    reqs = [(names[r % 2],
+             rng.integers(0, cfgs[names[r % 2]].vocab_size, (2, 12)))
+            for r in range(4)]
+    with ContinuousScheduler(server, batch_size=2,
+                             multi_step=4) as sched:
+        futs = [sched.submit(n, t, steps=8) for n, t in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+    snap = sched.snapshot()
+    assert snap["device_steps"] > snap["host_ticks"]
+    assert snap["steps_per_tick"] > 1.0
+    for (name, toks), out in zip(reqs, outs):
+        ref = server.serve_batch(name, toks, steps=8)
+        np.testing.assert_array_equal(out, ref)
+    server.shutdown()

@@ -218,6 +218,44 @@ def test_generate_paged_falls_back_for_unsupported_models():
                                   eng.generate(prompt, steps=4))
 
 
+def test_page_pool_batched_release_under_multistep(f32_lm):
+    """A fused multi-step tick can retire SEVERAL slots in one host call
+    — one ``_retire_done`` batch, several page releases back to back.
+    The batch must land on the BACK of the free-list row-by-row in slot
+    order (exactly what that tick's single-step equivalent does), and
+    the randomized churn invariants — ``free_pages == allocatable``,
+    deterministic replay of streams and free-list order — hold under
+    fused ticks too."""
+    cfg, m, p = f32_lm
+    # deterministic batch retire: 3 equal-budget rows finish on the SAME
+    # fused tick
+    eng = StepEngine(m, batch_size=4, max_len=64, paged=True,
+                     page_size=16, num_pages=13, seed=5, multi_step=8)
+    free0 = list(eng._pages._free)
+    gens = [eng.admit(p, np.asarray(tokens_for(cfg, 1, 8, seed=s)),
+                      max_new=4)[0] for s in (1, 2, 3)]
+    owned = [g.pages[:] for g in gens]     # 1 page each (8+4-1 < 16)
+    finished = eng.step(p)                 # the 3 remaining tokens ...
+    assert sorted(g.rid for g in finished) == sorted(g.rid for g in gens)
+    assert eng.stats["host_ticks"] == 1    # ... in ONE fused tick
+    assert eng.stats["device_steps"] == 3
+    assert eng.free_pages() == eng._pages.allocatable
+    # FIFO after a batched release: survivors first, then the batch's
+    # pages in slot order
+    assert list(eng._pages._free) == \
+        free0[3:] + owned[0] + owned[1] + owned[2]
+
+    final = []
+    for attempt in range(2):               # randomized churn, replayed
+        e2 = StepEngine(m, batch_size=4, max_len=64, paged=True,
+                        page_size=16, num_pages=10, seed=5, multi_step=4)
+        streams = _random_traffic(e2, m, p, cfg, rounds=40, seed=123)
+        assert e2.free_slots() == 4
+        assert e2.free_pages() == e2._pages.allocatable == 9
+        final.append((streams, list(e2._pages._free)))
+    assert final[0] == final[1]
+
+
 def test_page_pool_no_leak_no_fragmentation(f32_lm):
     """N rounds of randomized admit/retire/fail traffic end with every
     page back on the free-list (free_pages == allocatable) and every
@@ -423,7 +461,7 @@ def test_continuous_scheduler_paged():
     for (name, toks), out in zip(reqs, outs):
         ref = server.serve_batch(name, toks, steps=4)
         np.testing.assert_array_equal(out, ref)
-    for (n, b, c, pg), eng in server._step_engines.items():
+    for (n, b, c, pg, ms, qkv), eng in server._step_engines.items():
         assert pg == 16 and eng.paged
         assert eng.free_pages() == eng._pages.allocatable
     server.shutdown()
