@@ -151,6 +151,12 @@ def run() -> list[tuple]:
          f"{peak_paged} vs {peak_row} concurrent at equal memory"),
         ("paged_uniform_within_10pct", int(ratio >= 0.9),
          f"paged/row tok/s ratio {ratio:.3f}"),
+        # prefix-sharing counters ride in every paged engine's stats
+        # (zero here: this bench runs with prefix_cache off — the
+        # sharing numbers live in BENCH_bench_prefix.json)
+        ("prefix_hits", paged.stats.get("prefix_hits", 0),
+         "prefix_cache off in this bench"),
+        ("cache_evictions", paged.stats.get("cache_evictions", 0), ""),
     ]
     return rows
 

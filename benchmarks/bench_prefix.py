@@ -1,0 +1,204 @@
+"""Prefix cache: N requests sharing one long prompt prefix, fixed HBM.
+
+The serving pattern this targets is system-prompt traffic: every request
+opens with the same ~2k-token preamble and diverges only in a short
+user-specific suffix.  Cold, each admission prefills the full prompt and
+holds its own pages for it; with ``prefix_cache=True`` the first
+admission indexes its fully-written prompt pages, and every later
+request maps them read-only (refcounted; copy-on-write on the boundary
+page) and prefills *only its divergent suffix* — attention cost
+``O(suffix * S)`` instead of ``O(S^2)``, page cost ``owned`` instead of
+``pages_needed(S)``.
+
+Three measurements plus the correctness gate, all at one page budget:
+
+  * ``*_ttft_s`` — time from ``admit`` to the first sampled token, best
+    of 3 (compiles warmed).  Gate: hit TTFT < 0.35x cold TTFT.
+  * ``*_peak_concurrency`` — admit-greedy drive of shared-prefix
+    requests at a page budget sized for ~2 cold requests.  Gate: the
+    prefix engine admits strictly more than cold (the shared pages are
+    paid once, not per request).
+  * ``*_decode_tok_per_s`` — steady-state decode with the feature on vs
+    off (same shapes; the decode path is untouched — only admission
+    bookkeeping differs).  Gate: within 10%.
+  * ``prefix_stream_identical`` — the hit stream is bitwise-identical
+    to the cold stream for the same request (greedy; the engine's
+    headline invariant, asserted exhaustively in
+    ``tests/test_prefix_cache.py``).
+
+The emitted ``BENCH_bench_prefix.json`` also carries the engine's
+``prefix_hits`` / ``prefix_pages_mapped`` / ``cow_copies`` /
+``cache_evictions`` counters so the sharing actually realized is
+visible in the perf trajectory, and CI's bench-smoke job asserts every
+gate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+PAGE = 256
+PREFIX = 2048                    # 8 exact pages shared by every request
+SUFFIX = 32                      # per-request divergent tail
+STEPS = 16
+MAX_LEN = 2304                   # 9 pages: prompt + steps headroom
+N_REQS = 10
+CONC_PAGES = 2 * (MAX_LEN // PAGE) + 1   # budget: ~2 cold requests
+DECODE_STEPS = 32
+
+
+def _build(**extra):
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models.model import build_model
+    cfg = reduced(get_arch("tinyllama-1.1b"), **extra)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _requests(cfg, n=N_REQS, seed=0):
+    """n prompts: one shared PREFIX-token preamble + unique suffixes."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (1, PREFIX))
+    return [np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, (1, SUFFIX))], axis=1)
+        for _ in range(n)]
+
+
+def _ttft(eng, p, toks, passes=3):
+    """admit -> first token wall time, best of ``passes`` (a fresh
+    engine reset per pass; the donor request that populates the cache is
+    admitted outside the timed region)."""
+    import jax
+    best = float("inf")
+    for _ in range(passes):
+        jax.block_until_ready(eng.state.tok)
+        t0 = time.perf_counter()
+        gens = eng.admit(p, toks, max_new=STEPS)
+        jax.block_until_ready(eng.state.tok)
+        assert gens[0].tokens                # first token sampled at admit
+        best = min(best, time.perf_counter() - t0)
+        for g in eng.drain(p):
+            pass
+    return best
+
+
+def _peak_concurrency(eng, p, reqs):
+    queue = [(t, STEPS) for t in reqs]
+    peak = 0
+    while queue or eng.live_slots():
+        while queue and eng.can_admit(queue[0][0], queue[0][1]):
+            toks, steps = queue.pop(0)
+            eng.admit(p, toks, max_new=steps)
+        peak = max(peak, eng.live_slots())
+        if eng.live_slots():
+            eng.step(p)
+    return peak
+
+
+def _decode_pass(eng, p, toks):
+    import jax
+    eng.reset()
+    eng.admit(p, toks, max_new=DECODE_STEPS)
+    jax.block_until_ready(eng.state.tok)
+    b = toks.shape[0]
+    t0 = time.perf_counter()
+    n = 0
+    while eng.live_slots():
+        eng.step(p)
+        n += b
+    jax.block_until_ready(eng.state.tok)
+    return n / (time.perf_counter() - t0)
+
+
+def run() -> list[tuple]:
+    from repro.serve.engine import StepEngine
+    cfg, m, p = _build()
+    reqs = _requests(cfg)
+
+    # --- TTFT: cold full-prompt prefill vs suffix-only hit prefill ----
+    cold = StepEngine(m, batch_size=2, max_len=MAX_LEN, paged=True,
+                      page_size=PAGE)
+    hot = StepEngine(m, batch_size=2, max_len=MAX_LEN, paged=True,
+                     page_size=PAGE, prefix_cache=True)
+    for g in hot.admit(p, reqs[0], max_new=STEPS):
+        pass
+    hot.drain(p)                           # donor populates the index
+    # warm every compile outside the timed region (cold S=2080 program,
+    # hit suffix program, decode step)
+    _ttft(cold, p, reqs[1], passes=1)
+    _ttft(hot, p, reqs[1], passes=1)
+    ttft_cold = _ttft(cold, p, reqs[2])
+    ttft_hot = _ttft(hot, p, reqs[2])
+    ratio_ttft = ttft_hot / ttft_cold if ttft_cold else 1.0
+
+    # --- bitwise gate: hit stream == cold stream ----------------------
+    cold.reset()
+    cold.admit(p, reqs[3], max_new=STEPS)
+    ref = cold.drain(p)[0].tokens
+    hot.admit(p, reqs[3], max_new=STEPS)
+    out = hot.drain(p)[0].tokens
+    identical = int(out == ref)
+    hot_stats = dict(hot.stats)
+
+    # --- concurrency at a ~2-cold-request page budget -----------------
+    conc_cold = StepEngine(m, batch_size=N_REQS, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE,
+                           num_pages=CONC_PAGES)
+    conc_hot = StepEngine(m, batch_size=N_REQS, max_len=MAX_LEN,
+                          paged=True, page_size=PAGE,
+                          num_pages=CONC_PAGES, prefix_cache=True)
+    peak_cold = _peak_concurrency(conc_cold, p, reqs)
+    peak_hot = _peak_concurrency(conc_hot, p, reqs)
+
+    # --- decode throughput parity (feature on vs off) -----------------
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab_size, (4, SUFFIX))
+    d_cold = StepEngine(m, batch_size=4, max_len=512, paged=True,
+                        page_size=64)
+    d_hot = StepEngine(m, batch_size=4, max_len=512, paged=True,
+                       page_size=64, prefix_cache=True)
+    for eng in (d_cold, d_hot):
+        _decode_pass(eng, p, toks)         # warm pass
+    tps_cold = tps_hot = 0.0
+    for _ in range(5):                     # interleaved best-of-5
+        tps_cold = max(tps_cold, _decode_pass(d_cold, p, toks))
+        tps_hot = max(tps_hot, _decode_pass(d_hot, p, toks))
+    ratio_tps = tps_hot / tps_cold if tps_cold else 0.0
+
+    note = (f"{PREFIX}t shared prefix + {SUFFIX}t suffix, page {PAGE}, "
+            f"{N_REQS} requests")
+    rows = [
+        ("cold_ttft_s", round(ttft_cold, 4), f"full {PREFIX + SUFFIX}t "
+         "prefill, best of 3"),
+        ("hit_ttft_s", round(ttft_hot, 4), f"suffix-only prefill, "
+         f"ratio {ratio_ttft:.3f}"),
+        ("cold_peak_concurrency", peak_cold,
+         f"{CONC_PAGES - 1} allocatable pages"),
+        ("hit_peak_concurrency", peak_hot, note),
+        ("cold_decode_tok_per_s", round(tps_cold, 1), ""),
+        ("hit_decode_tok_per_s", round(tps_hot, 1),
+         f"prefix_cache on, ratio {ratio_tps:.3f}"),
+        ("prefix_hits", hot_stats["prefix_hits"],
+         "TTFT engine counters"),
+        ("prefix_pages_mapped", hot_stats["prefix_pages_mapped"], ""),
+        ("cow_copies", hot_stats["cow_copies"], ""),
+        ("cache_evictions", hot_stats["cache_evictions"], ""),
+        ("prefix_ttft_speedup", int(ratio_ttft < 0.35),
+         f"hit/cold TTFT {ratio_ttft:.3f} (gate < 0.35)"),
+        ("prefix_concurrency_gain", int(peak_hot > peak_cold),
+         f"{peak_hot} vs {peak_cold} admitted at equal memory"),
+        ("prefix_decode_within_10pct", int(ratio_tps >= 0.9),
+         f"on/off decode tok/s ratio {ratio_tps:.3f}"),
+        ("prefix_stream_identical", identical,
+         "hit stream bitwise == cold stream (greedy)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    for row in run():
+        print(*row, sep=",")

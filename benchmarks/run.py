@@ -20,11 +20,11 @@ import traceback
 
 def modules():
     from benchmarks import (bench_continuous, bench_multistep, bench_paged,
-                            bench_prefill_chunk, bench_serve_queue,
-                            bench_speculative, bench_switch,
-                            fig5_critical_path, fig5_primitives,
-                            fig6_cases, fig6b_accuracy, figS1_pipeline,
-                            roofline_table)
+                            bench_prefill_chunk, bench_prefix,
+                            bench_serve_queue, bench_speculative,
+                            bench_switch, fig5_critical_path,
+                            fig5_primitives, fig6_cases, fig6b_accuracy,
+                            figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -37,6 +37,7 @@ def modules():
         ("bench_speculative", bench_speculative.run),
         ("bench_prefill_chunk", bench_prefill_chunk.run),
         ("bench_paged", bench_paged.run),
+        ("bench_prefix", bench_prefix.run),
         ("bench_multistep", bench_multistep.run),
         ("roofline_table", roofline_table.run),
     ]

@@ -20,7 +20,9 @@ Four modes:
     holds the pages its own length needs.  ``--multi-step T`` fuses up
     to T decode steps per tick (host bookkeeping amortizes over T
     tokens); ``--quantize-kv int8`` stores the page bank in int8 for
-    ~2x pages per HBM budget.
+    ~2x pages per HBM budget; ``--prefix-cache`` shares already-written
+    prompt pages across admissions (refcounted, copy-on-write), so a
+    cache-hit prompt prefills only its divergent suffix.
   * ``--mode speculative`` — continuous batching with speculative cascade
     decode: ``--draft NAME`` names the draft context; every other
     registered context becomes a verify target whose requests run on a
@@ -136,6 +138,15 @@ def main(argv=None) -> int:
                          "half the bytes per page, ~2x admitted "
                          "concurrency per HBM budget (outputs are "
                          "tolerance-close, not bitwise)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged mode: share already-written prompt pages "
+                         "across admissions — a request whose prompt "
+                         "starts with a cached whole-page run maps those "
+                         "pages read-only and prefills only the "
+                         "divergent suffix (copy-on-write on the "
+                         "boundary page; streams stay bitwise-identical "
+                         "to cold admission); cached pages are evicted "
+                         "LRU-first under page pressure")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -145,6 +156,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.quantize_kv != "none" and not args.paged:
         ap.error("--quantize-kv targets the shared page bank: it "
+                 "requires --paged")
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache shares pages of the pooled bank: it "
                  "requires --paged")
     if args.multi_step < 1:
         ap.error("--multi-step must be >= 1")
@@ -180,7 +194,8 @@ def main(argv=None) -> int:
                          paged=args.paged, page_size=args.page_size,
                          multi_step=args.multi_step,
                          quantize_kv=(None if args.quantize_kv == "none"
-                                      else args.quantize_kv)))
+                                      else args.quantize_kv),
+                         prefix_cache=args.prefix_cache))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]

@@ -603,6 +603,26 @@ def insert_pages(cache: PagedKV, rows: KVCache, tables) -> PagedKV:
     return PagedKV(k=scatter(cache.k, rows.k), v=scatter(cache.v, rows.v))
 
 
+def copy_pages(cache: PagedKV, src, dst) -> PagedKV:
+    """Device-side page copy: ``pool[dst[i]] = pool[src[i]]`` for every
+    leaf of the bank (codes AND scales for an int8 pool — the copy is a
+    byte copy, never a re-quantization).  src/dst: (n,) int32 page ids.
+
+    This is the copy-on-write primitive of prefix sharing: a request
+    that diverges mid-page gets a private copy of the shared boundary
+    page BEFORE its first write, so shared pages are never mutated and
+    every reader keeps seeing bitwise the values its cold admission
+    would have produced."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(pool):
+        return None if pool is None else pool.at[dst].set(pool[src])
+
+    return PagedKV(k=cp(cache.k), v=cp(cache.v),
+                   ks=cp(cache.ks), vs=cp(cache.vs))
+
+
 def attention_decode(params, x, pos, cache: KVCache, cfg: ArchConfig):
     """One-step decode.  x: (B, 1, D); pos: scalar int32 (whole batch at
     one position — the run-to-completion loop) or (B,) int32 (continuous

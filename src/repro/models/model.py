@@ -461,6 +461,18 @@ class LM:
         ins = jax.vmap(layers.insert_pages, in_axes=(0, 0, None))
         return {key: ins(c, rows[key], tables) for key, c in caches.items()}
 
+    def copy_cache_pages(self, caches, src, dst):
+        """Copy-on-write support: duplicate pool pages ``src[i]`` into
+        ``dst[i]`` across every block and repeat of the paged ``caches``
+        (all leaves — int8 codes and their scales move together).  The
+        page table is layer-shared, so one (src, dst) pair names the same
+        position range in every bank; everything outside ``dst`` is
+        untouched."""
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        cp = jax.vmap(layers.copy_pages, in_axes=(0, None, None))
+        return {key: cp(c, src, dst) for key, c in caches.items()}
+
     def decode_step_pages(self, params, caches, tokens, pos, tables,
                           live=None):
         """One decode step against the shared page pool.  tokens: (B, 1)

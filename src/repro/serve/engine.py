@@ -37,10 +37,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
-from repro.serve.pool import Generation, PagePool, SlotPool
+from repro.serve.pool import Generation, PagePool, PrefixIndex, SlotPool
 
-__all__ = ["DecodeState", "Generation", "PagePool", "ServeStats",
-           "ServingEngine", "SlotPool", "StepEngine"]
+__all__ = ["DecodeState", "EngineKey", "Generation", "PagePool",
+           "PrefixIndex", "ServeStats", "ServingEngine", "SlotPool",
+           "StepEngine"]
+
+
+class EngineKey(NamedTuple):
+    """Frozen cache key for ONE step-engine configuration.
+
+    Every knob that changes a compiled program or the cache layout is a
+    named field; the engine caches in ``ServingEngine``,
+    ``SwitchableServer``, and ``ContinuousScheduler`` all key on this
+    type, so adding the next knob means adding a field here (with a
+    default) — it can no longer silently alias two configurations the
+    way a growing positional tuple could.  ``page_size is None`` means
+    the row cache layout (``paged=False``); a paged engine always
+    records its page size."""
+    name: Optional[str] = None          # model context (None: single-model)
+    batch_size: int = 1
+    prefill_chunk: Optional[int] = None
+    page_size: Optional[int] = None     # None == row layout (paged off)
+    multi_step: int = 1
+    quantize_kv: Optional[str] = None
+    prefix_cache: bool = False
 
 
 @dataclass
@@ -94,7 +115,11 @@ class _PendingPrefill:
     rkeys: np.ndarray                     # (b, 2) uint32 per-row keys
     seeded: np.ndarray                    # (b,) bool
     done: int = 0                         # prompt tokens already chunked
+    #                                       (starts at the first divergent
+    #                                       token on a prefix hit)
     tables: Optional[np.ndarray] = None   # (b, P) page tables (paged mode)
+    cow: Optional[tuple] = None           # (src, dst) page pair to copy
+    #                                       before the first chunk write
 
 
 class StepEngine(SlotPool):
@@ -168,6 +193,26 @@ class StepEngine(SlotPool):
     table).  Outputs are no longer bitwise-equal to fp16 — the parity
     suite bounds greedy logit divergence and distribution-level sampling
     drift instead (tested).
+
+    ``prefix_cache=True`` (paged mode only) shares already-written
+    prompt pages across admissions: every completed prompt's whole pages
+    are indexed by their token runs (``PrefixIndex``), and a new
+    admission whose prompt starts with an indexed run maps those page
+    ids straight into its table — refcounted, read-only — and prefills
+    only from the first divergent token.  A full-prefix hit recomputes
+    just the last prompt token, and because that write would land in a
+    *shared* page, the engine copy-on-writes that one boundary page
+    (``LM.copy_cache_pages``) before it: shared pages are never mutated,
+    so a prefix-hit stream is bitwise-identical to the same request
+    admitted cold (greedy + seeded temperature — tested).  Retired
+    prompts' pages live on in the cache at refcount 1; when admission
+    would fail on pages, ``can_admit`` evicts those cached pages
+    LRU-first (leaf pages before their parents) until the request fits
+    or nothing evictable remains.  Lookup is per-request (single-row
+    admissions; multi-row admits stay cold but still populate the
+    index).  int8 banks index under their own namespace — codes are a
+    lossy function of the same tokens, so fp16 and int8 entries never
+    cross-match.
     """
 
     def __init__(self, model: LM, batch_size: int, max_len: int,
@@ -178,7 +223,8 @@ class StepEngine(SlotPool):
                  num_pages: Optional[int] = None,
                  admit_jump_limit: int = 4,
                  multi_step: int = 1,
-                 quantize_kv: Optional[str] = None):
+                 quantize_kv: Optional[str] = None,
+                 prefix_cache: bool = False):
         self.model = model
         self.max_len = max_len
         self.temperature = temperature
@@ -243,6 +289,16 @@ class StepEngine(SlotPool):
             self.pages_per_row = 0
             self.num_pages = 0
             self._pages = None
+        if prefix_cache and not paged:
+            raise ValueError(
+                "prefix_cache shares pages of the pooled bank: it needs "
+                "paged=True (the row cache has nothing to share)")
+        self.prefix_cache = prefix_cache
+        # int8 codes are a lossy function of the same source tokens:
+        # namespacing keeps fp16/int8 entries from ever cross-matching
+        self._prefix = (PrefixIndex(self.page_size,
+                                    namespace=quantize_kv or "fp16")
+                        if prefix_cache else None)
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
 
@@ -419,8 +475,13 @@ class StepEngine(SlotPool):
             ``_admit`` — shared (B, V) field indexed by slot for pool
             rows, per-row key folded with the prompt length for seeded
             rows — so chunked and one-shot admission are token-identical
-            for greedy and seeded-temperature streams."""
-            wmask = jnp.arange(C, dtype=jnp.int32)[None, :] < nvalid[:, None]
+            for greedy and seeded-temperature streams.  The chunk width
+            is read off ``tokens`` (not the closure) so the same program
+            also serves one-shot prefix-hit admission, which runs the
+            prompt's un-cached suffix — whatever its width — as one
+            final chunk."""
+            W = tokens.shape[1]
+            wmask = jnp.arange(W, dtype=jnp.int32)[None, :] < nvalid[:, None]
             if paged:
                 logits, caches = model.prefill_chunk_pages(
                     params, state.caches, tokens, pos, tables, wmask=wmask)
@@ -451,11 +512,21 @@ class StepEngine(SlotPool):
                 rkey=state.rkey.at[slots].set(rkeys),
                 seeded=state.seeded.at[slots].set(seeded))
 
+        def _copy(params, state: DecodeState, src, dst):
+            """Copy-on-write: duplicate pool pages src -> dst across all
+            banks BEFORE the diverging row's first write.  ``params`` is
+            unused but keeps the runner's uniform ``fn(params, *args)``
+            calling convention."""
+            del params
+            return state._replace(
+                caches=model.copy_cache_pages(state.caches, src, dst))
+
         self._step_fn = jax.jit(_step, donate_argnums=(1,))
         self._mstep_fn = jax.jit(_mstep, donate_argnums=(1,))
         self._admit_fn = jax.jit(_admit, donate_argnums=(1,))
         self._chunk_fn = jax.jit(_chunk, donate_argnums=(1,))
         self._chunk_final_fn = jax.jit(_chunk_final, donate_argnums=(1,))
+        self._copy_fn = jax.jit(_copy, donate_argnums=(1,))
 
         # Execution hook: when set, every device program runs as
         # ``runner(fn, params, *args)`` — the continuous scheduler points
@@ -465,6 +536,11 @@ class StepEngine(SlotPool):
 
         self.state: Optional[DecodeState] = None
         self._pool_init(B)
+        if paged:
+            # prefix-cache counters (stay 0 with the cache off): benches
+            # and the scheduler snapshot surface them engine-lifetime
+            self.stats.update(prefix_hits=0, prefix_pages_mapped=0,
+                              cow_copies=0, cache_evictions=0)
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
@@ -499,6 +575,8 @@ class StepEngine(SlotPool):
         self._pool_reset()
         if self._pages is not None:
             self._pages.reset()
+        if self._prefix is not None:
+            self._prefix.clear()     # its pages just left the allocator
         self._pending.clear()
         self._jumps = 0
 
@@ -528,7 +606,106 @@ class StepEngine(SlotPool):
             return True
         tokens = np.asarray(tokens)
         b, S = (1, tokens.shape[0]) if tokens.ndim == 1 else tokens.shape
-        return b * self.pages_needed(S, max_new) <= self.free_pages()
+        needed = b * self.pages_needed(S, max_new)
+        protect = []
+        if self.prefix_cache and b == 1:
+            plan = self._prefix_plan(tokens.reshape(1, S), max_new)
+            if plan is not None:
+                retained, cow_src, _, owned = plan
+                needed = owned           # shared pages cost nothing
+                protect = retained + ([cow_src] if cow_src is not None
+                                      else [])
+        if needed <= self.free_pages():
+            return True
+        # under pressure the cache gives memory back before admission is
+        # rejected: refcount-1 cached pages (no live table maps them)
+        # leave LRU-first until the request fits or nothing evictable
+        # remains — never the pages this very request is about to map.
+        self._reclaim(needed - self.free_pages(), protect=protect)
+        return needed <= self.free_pages()
+
+    # -------------------------------------------------------- prefix cache
+    def _reclaim(self, deficit: int, protect=()) -> int:
+        """Evict up to ``deficit`` cached prefix pages (LRU leaves first;
+        only refcount-1 pages, i.e. held by nothing but the index) back
+        into the free-list.  -> pages reclaimed."""
+        if self._prefix is None or deficit <= 0:
+            return 0
+        keep = set(protect)
+        evicted = self._prefix.evict_lru(
+            deficit, lambda p: p not in keep
+            and self._pages.refcount(p) == 1)
+        if evicted:
+            self._pages.release(evicted)
+            self.stats["cache_evictions"] += len(evicted)
+        return len(evicted)
+
+    def _prefix_plan(self, tokens, max_new: int):
+        """Look up the longest indexed whole-page prefix of a single-row
+        prompt.  -> ``(retained, cow_src, d, owned)`` or ``None`` (miss /
+        cache off / multi-row): ``retained`` are the page ids mapped
+        read-only, ``d`` the position prefill resumes at (the first
+        divergent token, floored at S-1 — the last prompt token is always
+        recomputed so there are logits to sample from), ``cow_src`` the
+        shared boundary page to copy-on-write when ``d`` lands mid-page
+        inside it, and ``owned`` the fresh pages still to allocate
+        (including the CoW destination)."""
+        if self._prefix is None or tokens.shape[0] != 1:
+            return None
+        b, S = tokens.shape
+        hit = self._prefix.lookup(tokens[0])
+        if not hit:
+            return None
+        ps = self.page_size
+        d = min(len(hit) * ps, S - 1)
+        retained = hit[:d // ps]
+        cow_src = hit[d // ps] if d < len(hit) * ps else None
+        owned = self.pages_needed(S, max_new) - len(retained)
+        return retained, cow_src, d, owned
+
+    def _take_prefix_pages(self, plan, S: int, max_new: int):
+        """Build a prefix-hit row's table: matched pages mapped read-only
+        (one pool reference each), fresh pages for the rest — the first
+        fresh page is the CoW destination when the plan has one.
+        Returns ``(table (1, P), pages in table order, fresh)``."""
+        retained, cow_src, d, owned = plan
+        if owned > self._pages.free_pages():
+            self._reclaim(owned - self._pages.free_pages(),
+                          protect=retained + ([cow_src] if cow_src
+                                              is not None else []))
+        fresh = self._pages.take(owned)          # raises if still short
+        self._pages.acquire(retained)
+        npages = len(retained) + owned
+        table = np.full((1, self.pages_per_row), PagePool.PARK, np.int32)
+        table[0, :len(retained)] = retained
+        table[0, len(retained):npages] = fresh
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_pages_mapped"] += len(retained)
+        if cow_src is not None:
+            self.stats["cow_copies"] += 1
+        return table, retained + fresh, fresh
+
+    def _drop_prefix_pages(self, plan, fresh):
+        """Failed prefix-hit admission: fresh pages back to the FRONT in
+        original order (the retry re-draws them), the mapped references
+        dropped (the index still pins those pages, so they never free)."""
+        retained, _, _, _ = plan
+        self._pages.restore(fresh)
+        self._pages.release(retained)
+
+    def _index_prompt(self, tokens_row, pages):
+        """Index one row's *fully written* prompt pages — called only
+        once its prefill completed, so every indexed page holds its
+        complete token run and is never written again (the owner's
+        remaining writes are decode tokens at positions >= S).  The
+        partially-filled last prompt page never enters.  The index takes
+        one pool reference per page it newly adopted; runs already
+        indexed keep their first writer's page."""
+        if self._prefix is None or pages is None:
+            return
+        n = len(tokens_row) // self.page_size
+        if n:
+            self._pages.acquire(self._prefix.insert(tokens_row, pages[:n]))
 
     # ------------------------------------------------------ page allocation
     def _take_pages(self, b: int, S: int, max_new: int):
@@ -536,6 +713,8 @@ class StepEngine(SlotPool):
         tables (unused tail entries point at the park page).  Returns
         (tables, flat page list for failure restore)."""
         npages = self.pages_needed(S, max_new)
+        if self.prefix_cache and b * npages > self._pages.free_pages():
+            self._reclaim(b * npages - self._pages.free_pages())
         pages = self._pages.take(b * npages)
         tables = np.full((b, self.pages_per_row), PagePool.PARK, np.int32)
         for i in range(b):
@@ -567,9 +746,14 @@ class StepEngine(SlotPool):
         if S + max_new > self.max_len:
             raise ValueError(f"prompt {S} + {max_new} new tokens exceeds "
                              f"max_len {self.max_len}")
+        plan = (self._prefix_plan(tokens, max_new) if self.paged
+                and self.prefix_cache else None)
         if self.prefill_chunk is not None:
             return self._admit_chunked(tokens, max_new, metas, rkeys,
-                                       seeded)
+                                       seeded, plan=plan)
+        if plan is not None:
+            return self._admit_prefix_hit(params, tokens, max_new, metas,
+                                          rkeys, seeded, plan)
         slots = self._take_slots(b)
         tables = np.zeros((b, self.pages_per_row), np.int32)
         pages = []
@@ -595,6 +779,7 @@ class StepEngine(SlotPool):
             npages = self.pages_needed(S, max_new)
             for i, g in enumerate(gens):
                 g.pages = pages[i * npages:(i + 1) * npages]
+                self._index_prompt(tokens[i], g.pages)
         if self._retire_done(gens):
             # a slot freed with no step in between (steps==1 / EOS at
             # admission): advance the key so a same-boundary re-admission
@@ -602,7 +787,56 @@ class StepEngine(SlotPool):
             self._salt_admit_key()
         return gens
 
-    def _admit_chunked(self, tokens, max_new, metas, rkeys, seeded):
+    def _admit_prefix_hit(self, params, tokens, max_new: int, metas,
+                          rkeys, seeded, plan) -> list[Generation]:
+        """One-shot admission on a prefix hit: the matched pages map
+        read-only into the new row's table, the boundary page is
+        copied-on-write when the divergence lands inside one (BEFORE any
+        write — shared pages are never mutated), and only the prompt's
+        un-cached suffix runs, as ONE final-chunk program.  The final
+        chunk samples under the same admission gumbel rules as
+        ``_admit`` and the shared pages hold bitwise the k/v this
+        prompt's own prefill would have written (same tokens, same
+        positions, same math), so the stream is bitwise a cold
+        admission's."""
+        b, S = tokens.shape
+        retained, cow_src, d, owned = plan
+        slots = self._take_slots(b)
+        try:
+            table, pages, fresh = self._take_prefix_pages(plan, S, max_new)
+        except BaseException:
+            self._restore_slots(slots)
+            raise
+        jslots = jnp.asarray(slots, jnp.int32)
+        jtable = jnp.asarray(table)
+        try:
+            if cow_src is not None:
+                self.state = self._call(
+                    self._copy_fn, params, self.state,
+                    jnp.asarray([cow_src], jnp.int32),
+                    jnp.asarray([fresh[0]], jnp.int32))
+            self.state = self.state._replace(
+                table=self.state.table.at[jslots].set(jtable))
+            first, self.state = self._call(
+                self._chunk_final_fn, params, self.state,
+                jnp.asarray(tokens[:, d:], jnp.int32),
+                jnp.full((b,), d, jnp.int32), jslots, jtable,
+                jnp.full((b,), S - d, jnp.int32),
+                jnp.asarray(rkeys), jnp.asarray(seeded))
+        except BaseException:
+            self._restore_slots(slots)
+            self._drop_prefix_pages(plan, fresh)
+            raise
+        gens = self._register(slots, S, max_new, metas,
+                              first=np.asarray(first))
+        gens[0].pages = pages
+        self._index_prompt(tokens[0], pages)
+        if self._retire_done(gens):
+            self._salt_admit_key()
+        return gens
+
+    def _admit_chunked(self, tokens, max_new, metas, rkeys, seeded,
+                       plan=None):
         """Reserve slots and queue the prompt for chunked prefill.  The
         reserved rows' parked position moves to the LAST cache slot:
         every decode step still writes a (garbage) k/v for every row, and
@@ -617,10 +851,20 @@ class StepEngine(SlotPool):
         this — hence the all-attention/non-ring constructor gate.)"""
         b, S = tokens.shape
         slots = self._take_slots(b)
-        tables, pages = None, []
+        tables, pages, done, cow = None, [], 0, None
         if self.paged:
             try:
-                tables, pages = self._take_pages(b, S, max_new)
+                if plan is not None:
+                    # prefix hit: matched pages map read-only, chunking
+                    # resumes at the first divergent token; the boundary
+                    # page (if any) copies right before the first chunk
+                    tables, pages, fresh = self._take_prefix_pages(
+                        plan, S, max_new)
+                    done = plan[2]
+                    if plan[1] is not None:
+                        cow = (plan[1], fresh[0])
+                else:
+                    tables, pages = self._take_pages(b, S, max_new)
             except BaseException:
                 self._restore_slots(slots)
                 raise
@@ -642,7 +886,7 @@ class StepEngine(SlotPool):
                 g.pages = pages[i * npages:(i + 1) * npages]
         self._pending.append(_PendingPrefill(
             tokens=np.asarray(tokens, np.int32), gens=gens, rkeys=rkeys,
-            seeded=seeded, tables=tables))
+            seeded=seeded, done=done, tables=tables, cow=cow))
         return gens
 
     def _promote_pending(self):
@@ -692,6 +936,15 @@ class StepEngine(SlotPool):
                   else np.zeros((b, self.pages_per_row), np.int32))
         pos = np.full((b,), start, np.int32)
         try:
+            if ps.cow is not None:
+                # copy-on-write the shared boundary page BEFORE this
+                # request's first write lands in it
+                src, dst = ps.cow
+                self.state = self._call(
+                    self._copy_fn, params, self.state,
+                    jnp.asarray([src], jnp.int32),
+                    jnp.asarray([dst], jnp.int32))
+                ps.cow = None
             if end < S:
                 self.state = self._call(
                     self._chunk_fn, params, self.state,
@@ -725,6 +978,12 @@ class StepEngine(SlotPool):
         for i, g in enumerate(ps.gens):
             g.tokens.append(int(first[i]))
             self._live[g.slot] = True
+        if self.paged:
+            # the prompt is now fully written: its whole pages become
+            # indexable (BEFORE retirement, so an instant retire still
+            # populates the cache — the index reference outlives the row)
+            for i, g in enumerate(ps.gens):
+                self._index_prompt(ps.tokens[i], g.pages)
         finished = self._retire_done(ps.gens)
         if finished:
             self._salt_admit_key()
@@ -829,9 +1088,11 @@ class ServingEngine:
         # an entry frees its pool (a returning shape re-compiles, which
         # is what it paid before the step-engine refactor anyway).
         self.max_cached_pools = 4
-        # keyed (batch_size, page_size | None): row and paged pools are
-        # different engines over different cache layouts
-        self._step_engines: "OrderedDict[tuple, StepEngine]" = OrderedDict()
+        # keyed ``EngineKey``: row and paged pools are different engines
+        # over different cache layouts, and every future knob is a named
+        # field instead of a silently-aliasing positional slot
+        self._step_engines: "OrderedDict[EngineKey, StepEngine]" = (
+            OrderedDict())
 
         def _prefill(params, tokens, patch_embeds=None):
             return model.prefill(params, tokens, max_len,
@@ -858,7 +1119,8 @@ class ServingEngine:
         ``generate_paged`` (cached per (batch shape, page layout); jitted
         programs compile once per key; least recently used keys beyond
         ``max_cached_pools`` are dropped to free their KV pools)."""
-        key = (batch_size, page_size if paged else None)
+        key = EngineKey(batch_size=batch_size,
+                        page_size=page_size if paged else None)
         eng = self._step_engines.get(key)
         if eng is None:
             eng = StepEngine(self.model, batch_size, self.max_len,

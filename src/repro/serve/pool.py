@@ -56,7 +56,8 @@ class Generation:
 
 
 class PagePool:
-    """Host-side page allocator over one shared device KV page bank.
+    """Host-side *refcounted* page allocator over one shared device KV
+    page bank.
 
     The device side is a ``layers.PagedKV`` pool of ``total_pages``
     pages; this class hands out page *ids*.  Page 0 is the PARK page: it
@@ -65,16 +66,25 @@ class PagePool:
     DMA), and non-live rows' per-step writes are routed into it — so
     ``allocatable == total_pages - 1``.
 
+    Every allocated page carries a reference count.  ``take`` hands out
+    fresh pages at refcount 1; ``acquire`` adds a reference (prefix
+    sharing: the same physical page mapped into another table, or held
+    by the prefix index); ``release``/``restore`` *decrement*, and a
+    page re-enters the free-list only when its count reaches 0.  With
+    every page at refcount 1 — the only state that existed before prefix
+    sharing — the observable behavior is unchanged, which is what keeps
+    the pre-existing reproducibility tests pinned.
+
     Recycling contract (mirrors ``SlotPool``'s slot free-list, and is
     load-bearing for test reproducibility the same way):
 
       * **FIFO** — ``take`` pops from the *front*, ``release``
-        (retirement) appends to the *back*: a page is reused as late as
-        possible, and the allocation order of a fixed traffic pattern is
-        deterministic.
-      * **failed-admit restore** — ``restore`` puts pages back at the
-        *front in their original order*, so a retried admission draws
-        exactly the pages the failed call drew.
+        (retirement) appends pages reaching refcount 0 to the *back*: a
+        page is reused as late as possible, and the allocation order of
+        a fixed traffic pattern is deterministic.
+      * **failed-admit restore** — ``restore`` puts pages reaching
+        refcount 0 back at the *front in their original order*, so a
+        retried admission draws exactly the pages the failed call drew.
     """
 
     PARK = 0
@@ -85,6 +95,7 @@ class PagePool:
                              f"got {total_pages}")
         self.total_pages = total_pages
         self._free: deque[int] = deque(range(1, total_pages))
+        self._ref: dict[int, int] = {}   # page id -> refcount (allocated)
 
     @property
     def allocatable(self) -> int:
@@ -93,22 +104,183 @@ class PagePool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        """References held on an allocated page (0 == on the free-list)."""
+        return self._ref.get(page, 0)
+
     def take(self, n: int) -> list[int]:
         if n > len(self._free):
             raise RuntimeError(f"take({n}) with {len(self._free)} free "
                                "pages")
-        return [self._free.popleft() for _ in range(n)]
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def acquire(self, pages: list[int]):
+        """Add one reference to each (already-allocated) page — prefix
+        sharing maps the same physical page into another table, or the
+        prefix index pins it past its owner's retirement."""
+        for p in pages:
+            if self._ref.get(p, 0) < 1:
+                raise ValueError(f"acquire({p}): page is not allocated")
+            self._ref[p] += 1
+
+    def _decref(self, pages: list[int]) -> list[int]:
+        """Drop one reference per page; -> the pages that hit 0, in the
+        order given (those leave ``_ref`` and must rejoin the free-list)."""
+        freed = []
+        for p in pages:
+            n = self._ref.get(p, 0)
+            if n < 1:
+                raise ValueError(f"refcount underflow on page {p}")
+            if n == 1:
+                del self._ref[p]
+                freed.append(p)
+            else:
+                self._ref[p] = n - 1
+        return freed
 
     def restore(self, pages: list[int]):
-        """Failed admission: back to the FRONT in original order."""
-        self._free.extendleft(reversed(pages))
+        """Failed admission: drop one reference; pages reaching refcount
+        0 go back to the FRONT in original order."""
+        self._free.extendleft(reversed(self._decref(pages)))
 
     def release(self, pages: list[int]):
-        """Retirement: to the BACK (FIFO recycling)."""
-        self._free.extend(pages)
+        """Retirement: drop one reference; pages reaching refcount 0 go
+        to the BACK (FIFO recycling)."""
+        self._free.extend(self._decref(pages))
 
     def reset(self):
         self._free = deque(range(1, self.total_pages))
+        self._ref = {}
+
+
+@dataclass
+class _PrefixNode:
+    """One cached prompt page: the edge from its parent is the page's
+    full token run, ``page`` is the pool page holding those tokens'
+    k/v."""
+    page: int
+    run: tuple
+    parent: Optional["_PrefixNode"]
+    children: dict = field(default_factory=dict)   # run tuple -> node
+    last_used: int = 0
+
+
+class PrefixIndex:
+    """Radix / longest-common-prefix index over *fully written* prompt
+    pages.
+
+    Granularity is whole pages: an edge is one page's complete
+    ``page_size``-token run, so a lookup matches the longest indexed
+    prefix in units of pages and nothing finer.  A page is only inserted
+    once its owner has completely written it (the last, partially-filled
+    prompt page never enters; decode tokens land past the prompt so an
+    indexed page is immutable for the rest of its life).  ``namespace``
+    keys the bank's value format into every path — an int8 bank's codes
+    are a lossy function of the same source tokens, so fp16 and int8
+    entries must never cross-match even if an index were shared.
+
+    The index itself holds no refcounts: the engine pairs ``insert``
+    with ``PagePool.acquire`` (the index's reference) and ``evict_lru``
+    with ``PagePool.release``.  Eviction is leaf-first — an inner node's
+    children are only reachable through it — and LRU within the leaves,
+    the same recency ranking ``ReconfigPolicy`` uses for context slots.
+    """
+
+    def __init__(self, page_size: int, namespace: str = "fp16"):
+        self.page_size = page_size
+        self.namespace = namespace
+        self._root: dict = {}            # (namespace, run) -> _PrefixNode
+        self._clock = 0                  # monotonic recency counter
+
+    def __len__(self) -> int:
+        return len(self.pages())
+
+    def _runs(self, tokens) -> list[tuple]:
+        toks = np.asarray(tokens).reshape(-1)
+        ps = self.page_size
+        return [tuple(int(x) for x in toks[j * ps:(j + 1) * ps])
+                for j in range(len(toks) // ps)]
+
+    def _key(self, node: Optional[_PrefixNode], run: tuple):
+        return (self.namespace, run) if node is None else run
+
+    def _children(self, node: Optional[_PrefixNode]) -> dict:
+        return self._root if node is None else node.children
+
+    def lookup(self, tokens) -> list[int]:
+        """Longest indexed prefix of ``tokens`` in WHOLE pages -> the
+        page ids holding it (possibly []).  Bumps recency on the path."""
+        self._clock += 1
+        node, out = None, []
+        for run in self._runs(tokens):
+            nxt = self._children(node).get(self._key(node, run))
+            if nxt is None:
+                break
+            nxt.last_used = self._clock
+            out.append(nxt.page)
+            node = nxt
+        return out
+
+    def insert(self, tokens, pages: list[int]) -> list[int]:
+        """Index one admitted row's fully-written prompt pages:
+        ``pages[j]`` holds tokens ``[j*page_size, (j+1)*page_size)``.
+        Runs already indexed keep their existing page (first writer
+        wins); -> the page ids NEWLY inserted, for which the caller must
+        ``PagePool.acquire`` the index's reference."""
+        self._clock += 1
+        node, fresh = None, []
+        for j, run in enumerate(self._runs(tokens)):
+            if j >= len(pages):
+                break
+            key = self._key(node, run)
+            kids = self._children(node)
+            nxt = kids.get(key)
+            if nxt is None:
+                nxt = _PrefixNode(page=int(pages[j]), run=run, parent=node,
+                                  last_used=self._clock)
+                kids[key] = nxt
+                fresh.append(nxt.page)
+            else:
+                nxt.last_used = self._clock
+            node = nxt
+        return fresh
+
+    def _nodes(self) -> list[_PrefixNode]:
+        out, stack = [], list(self._root.values())
+        while stack:
+            nd = stack.pop()
+            out.append(nd)
+            stack.extend(nd.children.values())
+        return out
+
+    def pages(self) -> set[int]:
+        """Every page id the index currently pins."""
+        return {nd.page for nd in self._nodes()}
+
+    def evict_lru(self, n: int, can_evict) -> list[int]:
+        """Drop up to ``n`` cached pages, least-recently-used *leaves*
+        first (``ReconfigPolicy``-style recency ranking; an inner node
+        cannot go before its children or the subtree leaks).  Only pages
+        ``can_evict`` approves leave — the engine passes refcount == 1,
+        i.e. no live table still maps the page.  -> the evicted page
+        ids; the caller drops the index's pool reference for each."""
+        out = []
+        while len(out) < n:
+            leaves = [nd for nd in self._nodes()
+                      if not nd.children and can_evict(nd.page)]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: (nd.last_used, nd.page))
+            kids = self._children(victim.parent)
+            del kids[self._key(victim.parent, victim.run)]
+            out.append(victim.page)
+        return out
+
+    def clear(self):
+        self._root = {}
 
 
 class SlotPool:

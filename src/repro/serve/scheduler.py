@@ -47,6 +47,8 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.serve.engine import EngineKey
+
 
 @dataclass
 class _Request:
@@ -336,7 +338,8 @@ class ContinuousScheduler:
                  prefill_chunk: Optional[int] = None,
                  paged: bool = False, page_size: int = 256,
                  multi_step: int = 1,
-                 quantize_kv: Optional[str] = None):
+                 quantize_kv: Optional[str] = None,
+                 prefix_cache: bool = False):
         self.server = server
         self.batch_size = batch_size
         # device-resident multi-step decode: each engine tick runs up to
@@ -346,6 +349,13 @@ class ContinuousScheduler:
         self.multi_step = multi_step
         # int8 page bank (paged mode): ~2x pages per HBM budget
         self.quantize_kv = quantize_kv
+        # prefix cache (paged mode): admissions whose prompt starts with
+        # an already-written whole-page run map those pages read-only
+        # and prefill only the divergent suffix; ``can_admit`` evicts
+        # cached pages LRU-first under page pressure
+        self.prefix_cache = prefix_cache
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache needs paged=True")
         # chunked admission: plain contexts' engines split prefill into
         # (b, C) chunks, one per tick, so a long prompt's admission hides
         # behind decode steps instead of stalling them (speculative
@@ -465,7 +475,8 @@ class ContinuousScheduler:
                                       paged=self.paged,
                                       page_size=self.page_size,
                                       multi_step=self.multi_step,
-                                      quantize_kv=self.quantize_kv)
+                                      quantize_kv=self.quantize_kv,
+                                      prefix_cache=self.prefix_cache)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -499,14 +510,18 @@ class ContinuousScheduler:
             eng.runner = runner
         return eng
 
-    def _step_key(self, name: str) -> tuple:
+    def _step_key(self, name: str) -> EngineKey:
         """The server-side ``_step_engines`` cache key this scheduler's
-        configuration resolves to (mirrors ``SwitchableServer
-        .step_engine``; full-key matching matters because the server
-        outlives schedulers with different configurations)."""
-        return (name, self.batch_size, self.prefill_chunk,
-                self.page_size if self.paged else None, self.multi_step,
-                self.quantize_kv)
+        configuration resolves to (the same frozen ``EngineKey``
+        ``SwitchableServer.step_engine`` builds; full-key matching
+        matters because the server outlives schedulers with different
+        configurations)."""
+        return EngineKey(name=name, batch_size=self.batch_size,
+                         prefill_chunk=self.prefill_chunk,
+                         page_size=self.page_size if self.paged else None,
+                         multi_step=self.multi_step,
+                         quantize_kv=self.quantize_kv,
+                         prefix_cache=self.prefix_cache)
 
     def _live_engines(self):
         out = {}
@@ -740,17 +755,24 @@ class ContinuousScheduler:
     def snapshot(self) -> dict:
         out = _snapshot(self.stats, self.server.engine)
         ticks = dsteps = 0
+        prefix = {"prefix_hits": 0, "prefix_pages_mapped": 0,
+                  "cow_copies": 0, "cache_evictions": 0}
         for key, eng in self.server._step_engines.items():
             # full-key match, same reason as the spec block below
-            if key == self._step_key(key[0]):
+            if key == self._step_key(key.name):
                 ticks += eng.stats["host_ticks"]
                 dsteps += eng.stats["device_steps"]
+                for k in prefix:
+                    prefix[k] += eng.stats.get(k, 0)
         if ticks:
             out["host_ticks"] = ticks
             out["device_steps"] = dsteps
             # the multi-step amortization actually realized: decode steps
             # committed per host round-trip (1.0 when multi_step == 1)
             out["steps_per_tick"] = round(dsteps / ticks, 3)
+        if self.prefix_cache:
+            # prefix-cache effectiveness across this config's engines
+            out.update(prefix)
         rounds = row_rounds = committed = 0
         for (name, dname, bsz, k), eng in self.server._spec_engines.items():
             # full-key match: the server outlives schedulers, so engines

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core.context import ContextDescriptor, ContextSwitchEngine
 from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
-from repro.serve.engine import ServingEngine, StepEngine, _sample
+from repro.serve.engine import (EngineKey, ServingEngine, StepEngine,
+                                _sample)
 from repro.serve.speculative import SpecEngine
 
 
@@ -50,8 +51,7 @@ class SwitchableServer:
                                           policy=policy)
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
-        self._step_engines: dict[tuple, StepEngine] = {}   # (name, pool B,
-        #                                    prefill chunk, page size|None)
+        self._step_engines: dict[EngineKey, StepEngine] = {}
         self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
         #                                                     pool B, K)
         self._state_snapshots: dict[str, Any] = {}
@@ -99,19 +99,23 @@ class SwitchableServer:
                     paged: bool = False,
                     page_size: int = 256,
                     multi_step: int = 1,
-                    quantize_kv: Optional[str] = None) -> StepEngine:
+                    quantize_kv: Optional[str] = None,
+                    prefix_cache: bool = False) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
         paused context resumes exactly where its last step left off;
         weights are NOT captured (every call runs against the engine
-        slot's current buffers via the scheduler's runner hook).
-        ``prefill_chunk``, the page layout, ``multi_step``, and
-        ``quantize_kv`` key the cache too: each combination builds
-        different jitted programs (and for int8, a different bank
-        layout) over the same pool shape."""
-        key = (name, batch_size, prefill_chunk,
-               page_size if paged else None, multi_step, quantize_kv)
+        slot's current buffers via the scheduler's runner hook).  Every
+        engine knob is a field of the frozen ``EngineKey``: each
+        combination builds different jitted programs (and for int8 or a
+        prefix cache, different bank bookkeeping) over the same pool
+        shape, and a knob that isn't in the key cannot exist."""
+        key = EngineKey(name=name, batch_size=batch_size,
+                        prefill_chunk=prefill_chunk,
+                        page_size=page_size if paged else None,
+                        multi_step=multi_step, quantize_kv=quantize_kv,
+                        prefix_cache=prefix_cache)
         eng = self._step_engines.get(key)
         if eng is None:
             sm = self._served[name]
@@ -120,7 +124,8 @@ class SwitchableServer:
                              prefill_chunk=prefill_chunk,
                              paged=paged, page_size=page_size,
                              multi_step=multi_step,
-                             quantize_kv=quantize_kv)
+                             quantize_kv=quantize_kv,
+                             prefix_cache=prefix_cache)
             self._step_engines[key] = eng
         return eng
 

@@ -461,7 +461,7 @@ def test_continuous_scheduler_paged():
     for (name, toks), out in zip(reqs, outs):
         ref = server.serve_batch(name, toks, steps=4)
         np.testing.assert_array_equal(out, ref)
-    for (n, b, c, pg, ms, qkv), eng in server._step_engines.items():
-        assert pg == 16 and eng.paged
+    for key, eng in server._step_engines.items():
+        assert key.page_size == 16 and eng.paged
         assert eng.free_pages() == eng._pages.allocatable
     server.shutdown()

@@ -1,0 +1,423 @@
+"""Page-level prefix sharing: refcounted pages + copy-on-write admission.
+
+Covers the refcounted ``PagePool`` contract (acquire/decref, free only
+at refcount 0, FIFO + restore order preserved), the ``PrefixIndex``
+radix semantics (whole-page matching, first-writer-wins, LRU-leaf
+eviction, namespace separation), the headline bitwise gate — a
+prefix-hit admission's token stream is identical to a cold admission's
+across {greedy, seeded temperature} x {one-shot, chunked} x {fp16-path
+f32, int8} — CoW immutability of shared donor pages, cache eviction
+under page pressure, and a randomized admit/diverge/retire fuzz whose
+refcount-conservation invariants are checked after every event and
+whose whole run replays deterministically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import EngineKey, StepEngine
+from repro.serve.pool import PagePool, PrefixIndex
+
+
+@pytest.fixture(scope="module")
+def f32_lm():
+    """f32 end to end: the identity tests assert BITWISE equality of
+    token streams between a cold prefill and a prefix-hit admission that
+    reuses device pages written by an earlier request — which holds
+    exactly (same causal math, same positions) only in a dtype where the
+    intermediates are the same numbers."""
+    cfg = reduced_arch("tinyllama-1.1b", dtype="float32",
+                       param_dtype="float32")
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _engine(m, prefix_cache, chunk=None, batch=4, max_len=64, page=8,
+            temp=0.0, num_pages=None, quantize=None):
+    return StepEngine(m, batch_size=batch, max_len=max_len,
+                      temperature=temp, prefill_chunk=chunk,
+                      paged=True, page_size=page, num_pages=num_pages,
+                      quantize_kv=quantize, prefix_cache=prefix_cache)
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcounts
+# ---------------------------------------------------------------------------
+
+def test_refcount_lifecycle():
+    pool = PagePool(8)
+    a = pool.take(3)
+    assert [pool.refcount(p) for p in a] == [1, 1, 1]
+    pool.acquire(a)                         # second reference (index/table)
+    assert [pool.refcount(p) for p in a] == [2, 2, 2]
+    pool.release(a)                         # first owner retires...
+    assert pool.free_pages() == 4           # ...pages stay allocated
+    assert [pool.refcount(p) for p in a] == [1, 1, 1]
+    pool.release(a)                         # last reference drops
+    assert pool.free_pages() == 7
+    assert [pool.refcount(p) for p in a] == [0, 0, 0]
+
+
+def test_refcount_guards():
+    pool = PagePool(4)
+    with pytest.raises(ValueError):
+        pool.acquire([1])                   # never allocated
+    a = pool.take(1)
+    pool.release(a)
+    with pytest.raises(ValueError):
+        pool.release(a)                     # refcount underflow
+
+
+def test_refcount_restore_front_release_back():
+    """Order contract survives refcounts: restore puts pages reaching 0
+    at the FRONT in order, release at the BACK; a page another holder
+    still references touches neither end."""
+    pool = PagePool(8)
+    a = pool.take(3)                        # [1, 2, 3]
+    pool.acquire([a[1]])                    # page 2 held twice
+    pool.restore(a)                         # 1, 3 -> front; 2 stays out
+    assert pool.take(2) == [1, 3]
+    assert pool.refcount(2) == 1
+    pool.release([2])
+    assert pool.take(5) == [4, 5, 6, 7, 2]  # 2 recycled last (FIFO back)
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex
+# ---------------------------------------------------------------------------
+
+def test_index_whole_page_matching():
+    idx = PrefixIndex(page_size=4)
+    toks = list(range(10))                  # 2 full pages + 2 leftover
+    assert idx.insert(toks, [5, 6, 7]) == [5, 6]   # partial page ignored
+    assert idx.lookup(toks) == [5, 6]
+    assert idx.lookup(toks[:8]) == [5, 6]
+    assert idx.lookup(toks[:7]) == [5]      # second page incomplete
+    assert idx.lookup([9] + toks[1:]) == []
+    assert idx.pages() == {5, 6}
+
+
+def test_index_first_writer_wins():
+    idx = PrefixIndex(page_size=4)
+    toks = list(range(8))
+    assert idx.insert(toks, [1, 2]) == [1, 2]
+    assert idx.insert(toks, [3, 4]) == []   # duplicate content: no adoption
+    assert idx.lookup(toks) == [1, 2]
+    # divergent second page under the same first page
+    assert idx.insert(list(range(4)) + [9] * 4, [1, 7]) == [7]
+    assert idx.lookup(list(range(4)) + [9] * 4) == [1, 7]
+
+
+def test_index_lru_leaf_eviction():
+    idx = PrefixIndex(page_size=2)
+    idx.insert([0, 1, 2, 3], [1, 2])        # chain 1 -> 2
+    idx.insert([0, 1, 8, 9], [1, 3])        # chain 1 -> 3
+    idx.lookup([0, 1, 2, 3])                # bump leaf 2
+    # leaf 3 is LRU; inner page 1 is not a leaf and must survive first
+    assert idx.evict_lru(2, lambda p: True) == [3, 2]
+    assert idx.evict_lru(5, lambda p: True) == [1]   # now a leaf
+    assert idx.pages() == set()
+
+
+def test_index_eviction_respects_can_evict():
+    idx = PrefixIndex(page_size=2)
+    idx.insert([0, 1, 2, 3], [1, 2])
+    assert idx.evict_lru(2, lambda p: p != 2) == []   # leaf 2 pinned;
+    assert idx.pages() == {1, 2}                      # 1 unreachable-safe
+
+
+def test_index_namespace_separation():
+    """fp16 and int8 banks store different bytes for the same tokens:
+    their index entries must never cross-match."""
+    a = PrefixIndex(page_size=2, namespace="fp16")
+    b = PrefixIndex(page_size=2, namespace="int8")
+    a.insert([0, 1], [1])
+    assert b.lookup([0, 1]) == []
+    b.insert([0, 1], [1])
+    assert a.lookup([0, 1]) == [1] and b.lookup([0, 1]) == [1]
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity: prefix hit == cold admission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 16])
+@pytest.mark.parametrize("seeded", [False, True])
+def test_hit_stream_matches_cold(f32_lm, chunk, seeded):
+    """The headline gate: a request admitted through a prefix hit (pages
+    mapped read-only, CoW on the boundary, suffix-only prefill) emits a
+    token stream bitwise-identical to the same request admitted cold."""
+    cfg, m, p = f32_lm
+    prompt = tokens_for(cfg, 1, 40, seed=3)          # 5 exact pages
+    temp = 0.8 if seeded else 0.0
+    seeds = [11] if seeded else None
+
+    cold = _engine(m, False, chunk=chunk, temp=temp)
+    cold.admit(p, prompt, max_new=6, seeds=seeds)
+    ref = cold.drain(p)[0].tokens
+
+    eng = _engine(m, True, chunk=chunk, temp=temp)
+    eng.admit(p, prompt, max_new=6, seeds=seeds)     # donor (cold, indexes)
+    eng.drain(p)
+    gens = eng.admit(p, prompt, max_new=6, seeds=seeds)
+    eng.drain(p)
+    assert gens[0].tokens == ref
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_pages_mapped"] == 4     # 5th page is the CoW
+    assert eng.stats["cow_copies"] == 1
+
+
+def test_hit_stream_matches_cold_partial_divergence(f32_lm):
+    """Divergence mid-prompt: only the shared whole pages map, the
+    suffix prefills from the first divergent token, no CoW needed."""
+    cfg, m, p = f32_lm
+    base = np.asarray(tokens_for(cfg, 1, 37, seed=4))
+    var = base.copy()
+    var[0, 20:] = (var[0, 20:] + 1) % cfg.vocab_size
+
+    cold = _engine(m, False, chunk=16)
+    cold.admit(p, var, max_new=6)
+    ref = cold.drain(p)[0].tokens
+
+    eng = _engine(m, True, chunk=16)
+    eng.admit(p, base, max_new=6)
+    eng.drain(p)
+    gens = eng.admit(p, var, max_new=6)
+    eng.drain(p)
+    assert gens[0].tokens == ref
+    assert eng.stats["prefix_pages_mapped"] == 2     # pages 0-1 shared
+    assert eng.stats["cow_copies"] == 0
+
+
+def test_hit_stream_matches_cold_int8(f32_lm):
+    """int8 bank: quantized page codes are a deterministic function of
+    the source k/v, so hit == cold holds bitwise *within* the int8
+    namespace too."""
+    cfg, m, p = f32_lm
+    prompt = tokens_for(cfg, 1, 40, seed=5)
+
+    cold = _engine(m, False, chunk=16, quantize="int8")
+    cold.admit(p, prompt, max_new=6)
+    ref = cold.drain(p)[0].tokens
+
+    eng = _engine(m, True, chunk=16, quantize="int8")
+    eng.admit(p, prompt, max_new=6)
+    eng.drain(p)
+    gens = eng.admit(p, prompt, max_new=6)
+    eng.drain(p)
+    assert gens[0].tokens == ref
+    assert eng.stats["prefix_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CoW: shared pages are never mutated
+# ---------------------------------------------------------------------------
+
+def test_cow_leaves_donor_pages_untouched(f32_lm):
+    """An exact-multiple prompt fully covered by the cache forces the
+    boundary page to be CoW-copied: the hit's last-token recompute (and
+    its decode writes) land in the copy, and every indexed donor page is
+    bit-identical before and after the hit's whole generation."""
+    cfg, m, p = f32_lm
+    prompt = tokens_for(cfg, 1, 40, seed=6)
+    eng = _engine(m, True)
+    eng.admit(p, prompt, max_new=6)
+    eng.drain(p)
+    donors = sorted(eng._prefix.pages())
+    assert len(donors) == 5
+    before = jax.tree.map(np.asarray, eng.state.caches)
+
+    eng.admit(p, prompt, max_new=6)
+    eng.drain(p)
+    assert eng.stats["cow_copies"] == 1
+    after = jax.tree.map(np.asarray, eng.state.caches)
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        # leaf shape (blocks, NP, ...): axis 1 is the page axis
+        np.testing.assert_array_equal(b[:, donors], a[:, donors])
+
+
+# ---------------------------------------------------------------------------
+# eviction under page pressure
+# ---------------------------------------------------------------------------
+
+def test_cached_pages_evicted_lru_under_pressure(f32_lm):
+    """When free pages cannot cover an admission, refcount-1 cached
+    pages are reclaimed LRU-first instead of rejecting; live tables'
+    pages are never touched."""
+    cfg, m, p = f32_lm
+    # max_len 32 / page 8 -> 4 pages per row; 9 pages total (8 usable)
+    eng = _engine(m, True, batch=2, max_len=32, num_pages=9)
+    a = tokens_for(cfg, 1, 24, seed=7)
+    b = tokens_for(cfg, 1, 24, seed=8)
+    c = tokens_for(cfg, 1, 24, seed=9)
+    eng.admit(p, a, max_new=4)
+    eng.drain(p)                            # A indexes 3 pages
+    eng.admit(p, b, max_new=4)
+    eng.drain(p)                            # B indexes 3 more: 6 cached
+    assert eng.free_pages() == 2
+    assert eng.can_admit(c, 4)              # forces a reclaim of 2 pages
+    eng.admit(p, c, max_new=4)
+    eng.drain(p)
+    assert eng.stats["cache_evictions"] >= 2
+    # A's chain went first (least recently used)
+    assert len(eng._prefix.lookup(a[0])) < 3
+    # drained engine: every non-cached page is back on the free-list
+    assert eng.free_pages() + len(eng._prefix.pages()) == 8
+
+
+def test_full_cache_drops_for_fresh_admissions(f32_lm):
+    """Degenerate pressure: the cache may hold every page; the next
+    cold-prefix admission must still get in by emptying it."""
+    cfg, m, p = f32_lm
+    eng = _engine(m, True, batch=1, max_len=32, num_pages=5)
+    a = tokens_for(cfg, 1, 24, seed=10)
+    eng.admit(p, a, max_new=4)
+    eng.drain(p)
+    assert len(eng._prefix.pages()) == 3
+    c = tokens_for(cfg, 1, 24, seed=11)
+    assert eng.can_admit(c, 4)
+    eng.admit(p, c, max_new=4)
+    eng.drain(p)
+    assert eng.stats["cache_evictions"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# randomized fuzz: refcount conservation + deterministic replay
+# ---------------------------------------------------------------------------
+
+def _check_invariants(eng):
+    """Refcount conservation after any event:
+
+      free + |pages reachable from live tables  U  cached index pages|
+        == allocatable,
+
+    and each allocated page's refcount equals the number of tables
+    mapping it plus the index's pin — so a page can only appear in two
+    tables if its refcount is > 1."""
+    held = [g.pages for g in eng.slots if g is not None and g.pages]
+    table_pages = [p for pages in held for p in pages]
+    index_pages = eng._prefix.pages()
+    reachable = set(table_pages) | index_pages
+    assert eng.free_pages() + len(reachable) == eng._pages.allocatable, (
+        "page leak/double-free", eng.free_pages(), sorted(reachable))
+    for pg in reachable:
+        want = table_pages.count(pg) + (1 if pg in index_pages else 0)
+        assert eng._pages.refcount(pg) == want, (pg, want)
+    for pg in range(1, eng._pages.total_pages):
+        if pg not in reachable:
+            assert eng._pages.refcount(pg) == 0, pg
+
+
+def _check_indexed_immutable(eng, snaps):
+    """CoW-never-mutates, observed directly: every page the index pins
+    is byte-identical to its content at index time (decode writes land
+    past the prompt; hits write only their own fresh/CoW pages).  An
+    evicted page leaves ``snaps`` — its storage may be recycled."""
+    leaf = np.asarray(jax.tree.leaves(eng.state.caches)[0])
+    cached = eng._prefix.pages()
+    for pg in list(snaps):
+        if pg not in cached:
+            del snaps[pg]
+    for pg in cached:
+        if pg in snaps:
+            np.testing.assert_array_equal(leaf[:, pg], snaps[pg])
+        else:
+            snaps[pg] = leaf[:, pg].copy()
+
+
+def _fuzz_run(m, p, cfg, seed):
+    rng = np.random.default_rng(seed)
+    eng = _engine(m, True, chunk=8, batch=3, max_len=32, page=4,
+                  num_pages=16)
+    families = [np.asarray(tokens_for(cfg, 1, 28, seed=100 + i))
+                for i in range(3)]
+    streams, snaps = [], {}
+    for _ in range(40):
+        act = rng.integers(0, 3)
+        if act == 0 and eng.free_slots() and not eng.pending_slots():
+            fam = families[rng.integers(0, len(families))]
+            cut = int(rng.integers(4, 25))
+            toks = fam[:, :cut].copy()
+            if rng.random() < 0.5:          # diverge the tail
+                toks[0, -1] = int((toks[0, -1] + 1) % cfg.vocab_size)
+            if eng.can_admit(toks, 3):
+                eng.admit(p, toks, max_new=3)
+        elif act == 1 and eng.live_slots():
+            for g in eng.step(p):
+                streams.append(tuple(g.tokens))
+        elif act == 2 and eng.live_slots():
+            for g in eng.drain(p):
+                streams.append(tuple(g.tokens))
+        _check_invariants(eng)
+        _check_indexed_immutable(eng, snaps)
+    for g in eng.drain(p):
+        streams.append(tuple(g.tokens))
+    _check_invariants(eng)
+    _check_indexed_immutable(eng, snaps)
+    # fully drained: only the index still pins pages
+    assert eng.free_pages() + len(eng._prefix.pages()) \
+        == eng._pages.allocatable
+    return streams, list(eng._pages._free), dict(eng.stats)
+
+
+def test_fuzz_refcount_conservation_and_replay(f32_lm):
+    cfg, m, p = f32_lm
+    s1, f1, st1 = _fuzz_run(m, p, cfg, seed=0)
+    s2, f2, st2 = _fuzz_run(m, p, cfg, seed=0)
+    assert s1 == s2 and f1 == f2 and st1 == st2   # deterministic replay
+    assert st1["prefix_hits"] > 0                 # traffic actually shared
+
+
+# ---------------------------------------------------------------------------
+# EngineKey / plumbing
+# ---------------------------------------------------------------------------
+
+def test_engine_key_fields_and_aliasing():
+    k = EngineKey(name="a", batch_size=4, page_size=8, prefix_cache=True)
+    assert k.name == "a" and k.prefix_cache and k.multi_step == 1
+    assert k != EngineKey(name="a", batch_size=4, page_size=8)
+    # positional prefix unpacking (scheduler failure path) still works
+    name, bsz, *_ = k
+    assert (name, bsz) == ("a", 4)
+
+
+def test_prefix_cache_requires_paged(f32_lm):
+    cfg, m, p = f32_lm
+    with pytest.raises(ValueError, match="paged"):
+        StepEngine(m, batch_size=2, max_len=64, prefix_cache=True)
+
+
+def test_scheduler_prefix_cache_end_to_end():
+    """ContinuousScheduler(prefix_cache=True): shared-prefix traffic
+    produces the run-to-completion reference outputs, and the snapshot
+    surfaces the sharing counters."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-super", "supersub-sub"]
+    server, cfgs = build_server(names, 2, 64,
+                                arch_overrides={"dtype": "float32",
+                                                "param_dtype": "float32"})
+    rng = np.random.default_rng(0)
+    shared = {n: rng.integers(0, cfgs[n].vocab_size, (1, 32))
+              for n in names}
+    reqs = []
+    for r in range(6):
+        n = names[r % 2]
+        tail = rng.integers(0, cfgs[n].vocab_size, (1, 8))
+        reqs.append((n, np.concatenate([shared[n], tail], axis=1)))
+    with ContinuousScheduler(server, batch_size=4, paged=True,
+                             page_size=16, prefix_cache=True) as sched:
+        futs = [sched.submit(n, t, steps=4) for n, t in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+        snap = sched.snapshot()
+    for (name, toks), out in zip(reqs, outs):
+        ref = server.serve_batch(name, toks, steps=4)
+        np.testing.assert_array_equal(out, ref)
+    assert snap["prefix_hits"] >= 4          # 2 of 6 are cold firsts
+    assert snap["prefix_pages_mapped"] >= 8  # 2 shared pages per hit
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousScheduler(server, batch_size=4, prefix_cache=True)
+    server.shutdown()
