@@ -119,7 +119,12 @@ class _PendingPrefill:
     #                                       token on a prefix hit)
     tables: Optional[np.ndarray] = None   # (b, P) page tables (paged mode)
     cow: Optional[tuple] = None           # (src, dst) page pair to copy
-    #                                       before the first chunk write
+    #                                       before the first chunk write;
+    #                                       src holds a pool reference
+    #                                       (dropped when the copy runs)
+    hit: bool = False                     # admitted through a prefix hit
+    mapped: int = 0                       # shared pages mapped read-only
+    had_cow: bool = False                 # plan included a boundary copy
 
 
 class StepEngine(SlotPool):
@@ -609,7 +614,8 @@ class StepEngine(SlotPool):
         needed = b * self.pages_needed(S, max_new)
         protect = []
         if self.prefix_cache and b == 1:
-            plan = self._prefix_plan(tokens.reshape(1, S), max_new)
+            plan = self._prefix_plan(tokens.reshape(1, S), max_new,
+                                     peek=True)
             if plan is not None:
                 retained, cow_src, _, owned = plan
                 needed = owned           # shared pages cost nothing
@@ -640,7 +646,7 @@ class StepEngine(SlotPool):
             self.stats["cache_evictions"] += len(evicted)
         return len(evicted)
 
-    def _prefix_plan(self, tokens, max_new: int):
+    def _prefix_plan(self, tokens, max_new: int, peek: bool = False):
         """Look up the longest indexed whole-page prefix of a single-row
         prompt.  -> ``(retained, cow_src, d, owned)`` or ``None`` (miss /
         cache off / multi-row): ``retained`` are the page ids mapped
@@ -649,11 +655,14 @@ class StepEngine(SlotPool):
         recomputed so there are logits to sample from), ``cow_src`` the
         shared boundary page to copy-on-write when ``d`` lands mid-page
         inside it, and ``owned`` the fresh pages still to allocate
-        (including the CoW destination)."""
+        (including the CoW destination).  ``peek`` keeps the index's LRU
+        recency untouched — ``can_admit`` is a pure capacity probe and
+        the ``admit`` that may follow does the one real (bumping)
+        lookup."""
         if self._prefix is None or tokens.shape[0] != 1:
             return None
         b, S = tokens.shape
-        hit = self._prefix.lookup(tokens[0])
+        hit = self._prefix.lookup(tokens[0], peek=peek)
         if not hit:
             return None
         ps = self.page_size
@@ -666,8 +675,15 @@ class StepEngine(SlotPool):
     def _take_prefix_pages(self, plan, S: int, max_new: int):
         """Build a prefix-hit row's table: matched pages mapped read-only
         (one pool reference each), fresh pages for the rest — the first
-        fresh page is the CoW destination when the plan has one.
-        Returns ``(table (1, P), pages in table order, fresh)``."""
+        fresh page is the CoW destination when the plan has one.  The CoW
+        *source* also takes a pool reference even though it never enters
+        the table: the copy may run later (chunked admission defers it to
+        the first chunk tick), and without the pin an interleaved
+        admission's ``_reclaim`` could see it at refcount 1 once its
+        original owner retired, evict it, and recycle the storage before
+        the copy reads it.  The pin drops when the copy executes (or on
+        the failure paths).  Returns ``(table (1, P), pages in table
+        order, fresh)``."""
         retained, cow_src, d, owned = plan
         if owned > self._pages.free_pages():
             self._reclaim(owned - self._pages.free_pages(),
@@ -675,23 +691,24 @@ class StepEngine(SlotPool):
                                               is not None else []))
         fresh = self._pages.take(owned)          # raises if still short
         self._pages.acquire(retained)
+        if cow_src is not None:
+            self._pages.acquire([cow_src])       # pinned until the copy
         npages = len(retained) + owned
         table = np.full((1, self.pages_per_row), PagePool.PARK, np.int32)
         table[0, :len(retained)] = retained
         table[0, len(retained):npages] = fresh
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_pages_mapped"] += len(retained)
-        if cow_src is not None:
-            self.stats["cow_copies"] += 1
         return table, retained + fresh, fresh
 
     def _drop_prefix_pages(self, plan, fresh):
         """Failed prefix-hit admission: fresh pages back to the FRONT in
         original order (the retry re-draws them), the mapped references
-        dropped (the index still pins those pages, so they never free)."""
-        retained, _, _, _ = plan
+        dropped (the index still pins those pages, so they never free),
+        and the CoW-source pin released."""
+        retained, cow_src, _, _ = plan
         self._pages.restore(fresh)
         self._pages.release(retained)
+        if cow_src is not None:
+            self._pages.release([cow_src])
 
     def _index_prompt(self, tokens_row, pages):
         """Index one row's *fully written* prompt pages — called only
@@ -827,10 +844,19 @@ class StepEngine(SlotPool):
             self._restore_slots(slots)
             self._drop_prefix_pages(plan, fresh)
             raise
+        if cow_src is not None:
+            self._pages.release([cow_src])       # copy done: pin drops
         gens = self._register(slots, S, max_new, metas,
                               first=np.asarray(first))
         gens[0].pages = pages
         self._index_prompt(tokens[0], pages)
+        # counters only once the admission committed — a failed program
+        # rolls pages and slots back and must leave the stats (and the
+        # BENCH gates reading them) untouched
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_pages_mapped"] += len(retained)
+        if cow_src is not None:
+            self.stats["cow_copies"] += 1
         if self._retire_done(gens):
             self._salt_admit_key()
         return gens
@@ -886,7 +912,10 @@ class StepEngine(SlotPool):
                 g.pages = pages[i * npages:(i + 1) * npages]
         self._pending.append(_PendingPrefill(
             tokens=np.asarray(tokens, np.int32), gens=gens, rkeys=rkeys,
-            seeded=seeded, done=done, tables=tables, cow=cow))
+            seeded=seeded, done=done, tables=tables, cow=cow,
+            hit=plan is not None,
+            mapped=len(plan[0]) if plan is not None else 0,
+            had_cow=cow is not None))
         return gens
 
     def _promote_pending(self):
@@ -945,6 +974,10 @@ class StepEngine(SlotPool):
                     jnp.asarray([src], jnp.int32),
                     jnp.asarray([dst], jnp.int32))
                 ps.cow = None
+                self._pages.release([src])   # copy done: the admission-
+                #                              time pin on the source
+                #                              drops (the index still
+                #                              holds its own reference)
             if end < S:
                 self.state = self._call(
                     self._chunk_fn, params, self.state,
@@ -964,6 +997,10 @@ class StepEngine(SlotPool):
             # per-gen restore calls would reverse the group order and
             # break the free-list's documented FIFO determinism.
             self._pending.popleft()
+            if ps.cow is not None:
+                # the deferred copy never ran: drop the source pin so the
+                # page goes back to being plain index-cached (evictable)
+                self._pages.release([ps.cow[0]])
             pages = []
             for g in ps.gens:
                 self.slots[g.slot] = None
@@ -974,6 +1011,14 @@ class StepEngine(SlotPool):
             self._restore_slots([g.slot for g in ps.gens])
             raise
         self._pending.popleft()
+        if ps.hit:
+            # counters only once the prefix-hit admission committed (its
+            # final chunk sampled): an abandoned pending rolled its pages
+            # back and must not inflate the stats
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_pages_mapped"] += ps.mapped
+            if ps.had_cow:
+                self.stats["cow_copies"] += 1
         first = np.asarray(first)
         for i, g in enumerate(ps.gens):
             g.tokens.append(int(first[i]))

@@ -210,16 +210,21 @@ class PrefixIndex:
     def _children(self, node: Optional[_PrefixNode]) -> dict:
         return self._root if node is None else node.children
 
-    def lookup(self, tokens) -> list[int]:
+    def lookup(self, tokens, peek: bool = False) -> list[int]:
         """Longest indexed prefix of ``tokens`` in WHOLE pages -> the
-        page ids holding it (possibly []).  Bumps recency on the path."""
-        self._clock += 1
+        page ids holding it (possibly []).  Bumps recency on the path;
+        ``peek`` leaves recency untouched — capacity probes
+        (``can_admit``) must not keep never-admitted prefixes hot or
+        double-bump the path their ``admit`` bumps again."""
+        if not peek:
+            self._clock += 1
         node, out = None, []
         for run in self._runs(tokens):
             nxt = self._children(node).get(self._key(node, run))
             if nxt is None:
                 break
-            nxt.last_used = self._clock
+            if not peek:
+                nxt.last_used = self._clock
             out.append(nxt.page)
             node = nxt
         return out

@@ -283,6 +283,46 @@ def test_full_cache_drops_for_fresh_admissions(f32_lm):
     assert eng.stats["cache_evictions"] >= 2
 
 
+def test_deferred_cow_source_survives_reclaim(f32_lm):
+    """Chunked prefix-hit admission defers its boundary CoW copy to the
+    request's first chunk tick.  Until that tick the copy SOURCE must be
+    refcount-pinned: without the pin, an interleaved admission's
+    ``can_admit`` reclaim sees the page at refcount 1 (its donor
+    retired; only the index holds it), evicts it, and the next admission
+    recycles and overwrites the storage the deferred copy then reads —
+    silently corrupting the hit's stream."""
+    cfg, m, p = f32_lm
+    # 32/8 -> 4 pages per row; 10 pages -> 9 allocatable
+    eng = _engine(m, True, chunk=8, batch=3, max_len=32, page=8,
+                  num_pages=10)
+    F = tokens_for(cfg, 1, 24, seed=20)
+    cold = _engine(m, False, chunk=8, batch=3, max_len=32, page=8,
+                   num_pages=10)
+    cold.admit(p, F, max_new=4)
+    ref = cold.drain(p)[0].tokens
+
+    eng.admit(p, F, max_new=4)                   # donor
+    eng.drain(p)                                 # indexes h0, h1, h2
+    h2 = eng._prefix.lookup(F[0], peek=True)[2]
+    # a long cold prompt occupies the chunk queue so the hit behind it
+    # waits several ticks before its final chunk (and its CoW copy) runs
+    eng.admit(p, tokens_for(cfg, 1, 24, seed=21), max_new=4)
+    hit = eng.admit(p, F, max_new=4)[0]          # pending, cow = (h2, .)
+    assert eng._pages.refcount(h2) == 2          # index + deferred-CoW pin
+    assert eng.free_pages() == 0
+    # an admission probe under page pressure must NOT reclaim the pinned
+    # source (pre-fix it was evicted here, then recycled by this very
+    # admission and overwritten before the hit's copy ran)
+    assert not eng.can_admit(tokens_for(cfg, 1, 4, seed=22), 4)
+    assert eng.stats["cache_evictions"] == 0
+    assert h2 in eng._prefix.pages()
+    _check_invariants(eng)
+    eng.drain(p)
+    assert hit.tokens == ref                     # bitwise = cold stream
+    assert eng._pages.refcount(h2) == 1          # pin dropped at the copy
+    _check_invariants(eng)
+
+
 # ---------------------------------------------------------------------------
 # randomized fuzz: refcount conservation + deterministic replay
 # ---------------------------------------------------------------------------
@@ -294,16 +334,23 @@ def _check_invariants(eng):
         == allocatable,
 
     and each allocated page's refcount equals the number of tables
-    mapping it plus the index's pin — so a page can only appear in two
-    tables if its refcount is > 1."""
+    mapping it, plus the index's pin, plus one per pending admission
+    still holding it as an un-executed CoW source (the pin that keeps
+    ``_reclaim`` off the page until the deferred copy runs) — so a page
+    can only appear in two tables if its refcount is > 1."""
     held = [g.pages for g in eng.slots if g is not None and g.pages]
     table_pages = [p for pages in held for p in pages]
     index_pages = eng._prefix.pages()
+    cow_pins = [ps.cow[0] for ps in eng._pending if ps.cow is not None]
     reachable = set(table_pages) | index_pages
     assert eng.free_pages() + len(reachable) == eng._pages.allocatable, (
         "page leak/double-free", eng.free_pages(), sorted(reachable))
+    # an un-executed CoW source is always still indexed (its pin keeps
+    # its refcount >= 2, so LRU eviction cannot drop it mid-pending)
+    assert set(cow_pins) <= index_pages, (cow_pins, sorted(index_pages))
     for pg in reachable:
-        want = table_pages.count(pg) + (1 if pg in index_pages else 0)
+        want = (table_pages.count(pg) + (1 if pg in index_pages else 0)
+                + cow_pins.count(pg))
         assert eng._pages.refcount(pg) == want, (pg, want)
     for pg in range(1, eng._pages.total_pages):
         if pg not in reachable:
