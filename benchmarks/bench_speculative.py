@@ -93,7 +93,9 @@ def _run_mode(mode, n_requests, seq, seed):
     for k, v in server.engine.stats.items():
         server.engine.stats[k] = 0 if isinstance(v, int) else 0.0
     for eng in server._spec_engines.values():
-        eng.stats = {k: 0 for k in eng.stats}
+        # in place: eng.stats is a registry-backed view, not a plain dict
+        for k in list(eng.stats):
+            eng.stats[k] = 0
     with make() as sched:
         wall = _drive(sched, reqs)
         snap = sched.snapshot()
@@ -118,6 +120,9 @@ def run(n_requests: int = 12, seq: int = 16, seed: int = 0) -> list[tuple]:
             results[mode]["accepted_tokens_per_step"] = snap[
                 "accepted_tokens_per_round"]
             results[mode]["verify_passes"] = snap["spec_rounds"]
+            # fraction of drafted tokens the target accepted (1.0 for the
+            # same-weights draft used here — the mechanism's ceiling)
+            results[mode]["acceptance_rate"] = snap["spec_acceptance_rate"]
         for k, v in results[mode].items():
             note = (f"{n_requests} mixed-length greedy reqs, pool {POOL}, "
                     f"K={SPEC_K}" if k == "wall_s" else "")

@@ -31,6 +31,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.core.policy import ReconfigPolicy
+from repro.core.telemetry import Telemetry, safe_ratio
 
 
 class ContextState(enum.Enum):
@@ -96,7 +97,8 @@ class ContextSwitchEngine:
 
     def __init__(self, num_slots: int = 2, mesh=None,
                  store: "ContextStore | None" = None,
-                 policy: ReconfigPolicy | None = None):
+                 policy: ReconfigPolicy | None = None,
+                 telemetry: Telemetry | None = None):
         assert num_slots >= 2, "dynamic reconfiguration needs >= 2 slots"
         if policy is None:
             policy = ReconfigPolicy(num_slots=num_slots)
@@ -114,11 +116,19 @@ class ContextSwitchEngine:
         # one configuration port, like the FPGA's single config interface:
         self._loader = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="ctx-loader")
-        self.stats = {
+        # Shared measurement layer: stats live in the server-wide registry
+        # under ``ctx.`` (dict call-sites unchanged — MetricView), spans go
+        # to the shared tracer on one track per slot (``ctxslot<i>``), and
+        # the clock is injected so simulated engines tick virtual time.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._clock = self.telemetry.clock
+        self._trace = self.telemetry.tracer
+        self.stats = self.telemetry.view("ctx.")
+        self.stats.update({
             "loads": 0, "load_seconds": 0.0, "bytes_loaded": 0,
             "switches": 0, "switch_seconds": 0.0, "evictions": 0,
             "hidden_load_seconds": 0.0, "context_changes": 0,
-        }
+        })
         # overlap accounting (all guarded by self._lock).  One loader
         # thread => at most one load window open at a time.
         self._exec_busy_until = 0.0
@@ -176,6 +186,9 @@ class ContextSwitchEngine:
                     raise RuntimeError(
                         f"policy evicted ACTIVE context {name!r} "
                         "without allow_evict_active")
+                if self._trace.enabled:
+                    self._trace.instant(f"evict:{name}", f"ctxslot{s.idx}",
+                                        ts=self._clock())
                 s.state = ContextState.EMPTY
                 s.name, s.buffers, s.bytes_resident = None, None, 0
                 self.stats["evictions"] += 1
@@ -291,7 +304,7 @@ class ContextSwitchEngine:
 
     def _do_load(self, desc: ContextDescriptor):
         slot = self._claim_slot(desc.name)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         with self._lock:
             self._load_started_at = t0
             self._load_hidden_accum = 0.0
@@ -324,9 +337,12 @@ class ContextSwitchEngine:
                 self.policy.abort(desc.name)
                 self._load_started_at = None
                 self._kick_deferred_unlocked()
+            if self._trace.enabled:
+                self._trace.instant(f"load-failed:{desc.name}",
+                                    f"ctxslot{slot.idx}", ts=self._clock())
             raise
-        dt = time.perf_counter() - t0
-        now = time.perf_counter()
+        now = self._clock()
+        dt = now - t0
         with self._lock:
             slot.buffers = bufs
             slot.bytes_resident = _nbytes(bufs)
@@ -344,9 +360,17 @@ class ContextSwitchEngine:
             hidden = self._load_hidden_accum
             if self._run_started_at is not None:
                 hidden += now - max(self._run_started_at, t0)
-            self.stats["hidden_load_seconds"] += max(0.0, min(dt, hidden))
+            hidden = max(0.0, min(dt, hidden))
+            self.stats["hidden_load_seconds"] += hidden
             self._load_started_at = None
             self._kick_deferred_unlocked()
+        if self._trace.enabled:
+            # the span carries the SAME t0/now the accounting above used,
+            # so a hidden-load fraction recomputed from exported spans
+            # reproduces the engine's number (tested to < 1%).
+            self._trace.span(f"load:{desc.name}", f"ctxslot{slot.idx}",
+                             t0, now, args={"bytes": wire_bytes,
+                                            "hidden_s": round(hidden, 6)})
         return slot
 
     # ------------------------------------------------------------ switching
@@ -358,7 +382,7 @@ class ContextSwitchEngine:
         ``wait``, blocks until READY (the paper's case where t_load >
         t_exec and reconfiguration is only partially hidden).
         """
-        t0 = time.perf_counter()
+        t0 = self._clock()
         deadline = t0 + timeout
         checked_done: Optional[Future] = None
         while True:
@@ -375,10 +399,15 @@ class ContextSwitchEngine:
                             prev = s.name
                     slot.state = ContextState.ACTIVE
                     self.policy.activate(name)
-                    dt = time.perf_counter() - t0
+                    now = self._clock()
+                    dt = now - t0
                     self.stats["switches"] += 1
                     if prev != name:     # an actual select-signal flip
                         self.stats["context_changes"] += 1
+                        if self._trace.enabled:
+                            self._trace.instant(
+                                f"switch:{name}", f"ctxslot{slot.idx}",
+                                ts=now, args={"from": prev})
                     self.stats["switch_seconds"] += dt
                     self._kick_deferred_unlocked()  # prev became evictable
                     return dt
@@ -399,7 +428,7 @@ class ContextSwitchEngine:
                 continue
             if not wait:
                 raise RuntimeError(f"context {name!r} still loading")
-            remaining = deadline - time.perf_counter()
+            remaining = deadline - self._clock()
             if remaining <= 0:
                 raise TimeoutError(f"context {name!r} did not become READY")
             pending.result(remaining)
@@ -448,7 +477,7 @@ class ContextSwitchEngine:
             slot = self.active
         if slot is None:
             raise RuntimeError("no ACTIVE context; call switch() first")
-        t0 = time.perf_counter()
+        t0 = self._clock()
         with self._lock:
             self._runs_in_flight += 1
             if self._run_started_at is None:
@@ -458,7 +487,7 @@ class ContextSwitchEngine:
             if block:
                 out = jax.block_until_ready(out)
         finally:
-            now = time.perf_counter()
+            now = self._clock()
             with self._lock:
                 self._runs_in_flight -= 1
                 self._exec_busy_until = now
@@ -468,6 +497,10 @@ class ContextSwitchEngine:
                         0.0, now - max(t0, self._load_started_at))
                 if self._runs_in_flight == 0:
                     self._run_started_at = None
+            if self._trace.enabled:
+                # same t0/now as the overlap accounting — see _do_load.
+                self._trace.span(f"run:{slot.name}", f"ctxslot{slot.idx}",
+                                 t0, now)
         return out
 
     def run_async(self, *inputs):
@@ -484,8 +517,8 @@ class ContextSwitchEngine:
         """Share of reconfiguration time hidden behind execution (the
         paper's headline metric) — single source for every report."""
         with self._lock:
-            total = self.stats["load_seconds"]
-            return self.stats["hidden_load_seconds"] / total if total else 0.0
+            return safe_ratio(self.stats["hidden_load_seconds"],
+                              self.stats["load_seconds"])
 
     def resident(self) -> list[str]:
         return [s.name for s in self.slots

@@ -66,7 +66,8 @@ def simulate_dynamic(schedule: Sequence[Run],
                      load_time: dict[str, float],
                      num_slots: int = 2,
                      switch_time: float = 0.0,
-                     policy: Optional[ReconfigPolicy] = None) -> float:
+                     policy: Optional[ReconfigPolicy] = None,
+                     telemetry=None) -> float:
     """Dynamic reconfiguration with `num_slots` resident slots.
 
     Event simulation: while run i executes in its slot, the loader (one
@@ -81,12 +82,31 @@ def simulate_dynamic(schedule: Sequence[Run],
     the shared ``ReconfigPolicy``, the exact object that drives the live
     ``ContextSwitchEngine``; this function only advances the clock.  Pass
     ``policy`` to inspect its decision trace afterwards.
+
+    ``telemetry`` (a ``repro.core.telemetry.Telemetry``) makes the
+    simulator emit the SAME metric keys the live engine writes —
+    ``ctx.loads`` / ``ctx.load_seconds`` / ``ctx.hidden_load_seconds`` /
+    ``ctx.switches`` / ``ctx.context_changes`` — plus ``load:``/``run:``
+    spans on virtual-time tracks, so a simulated timeline opens in
+    Perfetto exactly like a measured one.
     """
     pol = policy if policy is not None else ReconfigPolicy(num_slots)
     assert pol.num_slots == num_slots, (pol.num_slots, num_slots)
     t = 0.0
     loader_free_at = 0.0
     load_done_at: dict[str, float] = {}
+    load_spans: list[tuple[str, float, float]] = []   # (net, start, done)
+    exec_spans: list[tuple[str, float, float]] = []
+    stats = trace = None
+    if telemetry is not None:
+        stats = telemetry.view("ctx.")
+        for k in ("loads", "switches", "context_changes"):
+            stats.setdefault(k, 0)
+        for k in ("load_seconds", "hidden_load_seconds", "switch_seconds",
+                  "visible_stall_seconds"):
+            stats.setdefault(k, 0.0)
+        trace = telemetry.tracer
+    current = None
 
     def fire_completions(now: float):
         """Report finished loads to the policy, in completion order."""
@@ -100,6 +120,10 @@ def simulate_dynamic(schedule: Sequence[Run],
         start = max(now, loader_free_at)
         loader_free_at = start + load_time[net]
         load_done_at[net] = loader_free_at
+        load_spans.append((net, start, loader_free_at))
+        if stats is not None:
+            stats["loads"] += 1
+            stats["load_seconds"] += load_time[net]
 
     for i, r in enumerate(schedule):
         fire_completions(t)
@@ -107,9 +131,18 @@ def simulate_dynamic(schedule: Sequence[Run],
         if decision is not None and decision.load:
             queue_load(r.net, t)
         if not pol.is_resident(r.net):       # visible stall: remaining load
-            t = max(t, load_done_at.pop(r.net))
+            done = load_done_at.pop(r.net)
+            if stats is not None and done > t:
+                stats["visible_stall_seconds"] += done - t
+            t = max(t, done)
             pol.complete(r.net)
         pol.activate(r.net)
+        if stats is not None:
+            stats["switches"] += 1
+            stats["switch_seconds"] += switch_time
+            if r.net != current:
+                stats["context_changes"] += 1
+        current = r.net
         t += switch_time
         fire_completions(t)
         # prefetch upcoming nets while this one executes (hidden loads)
@@ -117,7 +150,21 @@ def simulate_dynamic(schedule: Sequence[Run],
         for dec in pol.prefetch(upcoming, active=r.net):
             queue_load(dec.net, t)
         fire_completions(t)                  # zero-cost loads land instantly
+        exec_spans.append((r.net, t, t + r.exec_time * r.repeat))
         t += r.exec_time * r.repeat
+
+    if stats is not None:
+        # hidden = load time overlapped by execution, clamped per load —
+        # the same definition the live engine accumulates online
+        for _, l0, l1 in load_spans:
+            ov = sum(max(0.0, min(l1, e1) - max(l0, e0))
+                     for _, e0, e1 in exec_spans)
+            stats["hidden_load_seconds"] += min(ov, l1 - l0)
+        if trace is not None and trace.enabled:
+            for net, l0, l1 in load_spans:
+                trace.span(f"load:{net}", "sim-loader", l0, l1)
+            for net, e0, e1 in exec_spans:
+                trace.span(f"run:{net}", "sim-exec", e0, e1)
     return t
 
 

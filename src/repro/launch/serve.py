@@ -50,12 +50,14 @@ from repro.configs import get_arch, reduced as make_reduced
 from repro.models.model import build_model
 from repro.serve.scheduler import ContinuousScheduler, SwitchScheduler
 from repro.serve.switching import ServedModel, SwitchableServer
+from repro.serve.telemetry import Telemetry
 
 
 def build_server(names: list[str], slots: int, max_len: int,
                  temperature: float = 0.0,
                  load_delay_s: float = 0.0,
-                 arch_overrides: dict | None = None
+                 arch_overrides: dict | None = None,
+                 telemetry: Telemetry | None = None
                  ) -> tuple[SwitchableServer, dict]:
     """Register reduced versions of `names` behind one SwitchableServer.
 
@@ -66,7 +68,7 @@ def build_server(names: list[str], slots: int, max_len: int,
     dtypes for tests that compare two numerically different execution
     paths bitwise)."""
     import jax.numpy as jnp
-    server = SwitchableServer(num_slots=slots)
+    server = SwitchableServer(num_slots=slots, telemetry=telemetry)
     cfgs = {}
     over = arch_overrides or {}
     for i, name in enumerate(names):
@@ -153,6 +155,17 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=1)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request lifecycle spans and export "
+                         "Chrome trace-event JSON here on exit (open at "
+                         "https://ui.perfetto.dev; one track per context "
+                         "slot / pool slot, so hidden context loads show "
+                         "as load: spans under run:/tick spans)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="while requests are in flight, print a metric "
+                         "registry snapshot (one JSON line to stderr) "
+                         "every SECONDS; 0 disables")
     args = ap.parse_args(argv)
     if args.quantize_kv != "none" and not args.paged:
         ap.error("--quantize-kv targets the shared page bank: it "
@@ -170,7 +183,20 @@ def main(argv=None) -> int:
         # a paged pool's row space is a whole number of pages
         ps = min(args.page_size, max_len)
         max_len = -(-max_len // ps) * ps
-    server, cfgs = build_server(names, args.slots, max_len)
+    telemetry = Telemetry(trace=args.trace_out is not None)
+    server, cfgs = build_server(names, args.slots, max_len,
+                                telemetry=telemetry)
+    stats_stop = None
+    if args.stats_interval > 0:
+        import threading
+        stats_stop = threading.Event()
+
+        def _stats_loop():
+            while not stats_stop.wait(args.stats_interval):
+                print(json.dumps(telemetry.registry.snapshot(),
+                                 default=str), file=sys.stderr)
+        threading.Thread(target=_stats_loop, daemon=True,
+                         name="stats-reporter").start()
     draft_map = {}
     if args.mode == "speculative":
         if args.draft not in names:
@@ -234,6 +260,11 @@ def main(argv=None) -> int:
         **extra,
         "log_tail": server.log[-3:],
     }
+    if stats_stop is not None:
+        stats_stop.set()
+    if args.trace_out:
+        report["trace_out"] = telemetry.tracer.export(args.trace_out)
+        report["trace_events"] = len(telemetry.tracer)
     print(json.dumps(report, indent=1, default=str))
     server.shutdown()
     return 0

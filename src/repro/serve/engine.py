@@ -27,7 +27,6 @@ including single-row admissions (the per-row gumbel trick below).
 """
 from __future__ import annotations
 
-import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional
@@ -38,6 +37,7 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serve.pool import Generation, PagePool, PrefixIndex, SlotPool
+from repro.serve.telemetry import Telemetry, safe_ratio
 
 __all__ = ["DecodeState", "EngineKey", "Generation", "PagePool",
            "PrefixIndex", "ServeStats", "ServingEngine", "SlotPool",
@@ -64,15 +64,35 @@ class EngineKey(NamedTuple):
     prefix_cache: bool = False
 
 
-@dataclass
 class ServeStats:
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    tokens: int = 0
+    """Run-to-completion loop accounting.  Same attribute API as the old
+    dataclass (``stats.tokens += ...``), but the values live in the shared
+    ``MetricRegistry`` (``serve.*`` under a server) so one snapshot sees
+    the batch loops next to the step engines and the context engine."""
+
+    __slots__ = ("_v",)
+    _FLOATS = ("prefill_s", "decode_s")
+
+    def __init__(self, view=None):
+        if view is None:
+            view = Telemetry().view()
+        object.__setattr__(self, "_v", view)
+        for k in self._FLOATS:
+            view.setdefault(k, 0.0)
+        view.setdefault("tokens", 0)
+
+    def __getattr__(self, k):
+        try:
+            return self._v[k]
+        except KeyError:
+            raise AttributeError(k) from None
+
+    def __setattr__(self, k, v):
+        self._v[k] = v
 
     @property
     def tok_per_s(self) -> float:
-        return self.tokens / self.decode_s if self.decode_s else 0.0
+        return safe_ratio(self._v["tokens"], self._v["decode_s"])
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +145,8 @@ class _PendingPrefill:
     hit: bool = False                     # admitted through a prefix hit
     mapped: int = 0                       # shared pages mapped read-only
     had_cow: bool = False                 # plan included a boundary copy
+    started: bool = False                 # first chunk has executed
+    #                                       (admit-to-first-chunk latency)
 
 
 class StepEngine(SlotPool):
@@ -229,8 +251,10 @@ class StepEngine(SlotPool):
                  admit_jump_limit: int = 4,
                  multi_step: int = 1,
                  quantize_kv: Optional[str] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.model = model
+        telemetry = telemetry if telemetry is not None else Telemetry()
         self.max_len = max_len
         self.temperature = temperature
         self.seed = seed
@@ -288,7 +312,7 @@ class StepEngine(SlotPool):
                     f"row ({self.pages_per_row} pages) plus the park "
                     "page")
             self.num_pages = num_pages
-            self._pages = PagePool(num_pages)
+            self._pages = PagePool(num_pages, telemetry=telemetry)
         else:
             self.page_size = None
             self.pages_per_row = 0
@@ -540,7 +564,7 @@ class StepEngine(SlotPool):
         self.runner = None
 
         self.state: Optional[DecodeState] = None
-        self._pool_init(B)
+        self._pool_init(B, telemetry=telemetry)
         if paged:
             # prefix-cache counters (stay 0 with the cache off): benches
             # and the scheduler snapshot surface them engine-lifetime
@@ -644,6 +668,10 @@ class StepEngine(SlotPool):
         if evicted:
             self._pages.release(evicted)
             self.stats["cache_evictions"] += len(evicted)
+            if self._trace.enabled:
+                self._trace.instant(
+                    "page-reclaim", f"{self.telemetry.prefix}eng",
+                    args={"evicted": len(evicted)})
         return len(evicted)
 
     def _prefix_plan(self, tokens, max_new: int, peek: bool = False):
@@ -741,7 +769,8 @@ class StepEngine(SlotPool):
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,
               metas: Optional[list] = None,
-              seeds: Optional[list] = None) -> list[Generation]:
+              seeds: Optional[list] = None,
+              submitted_at: Optional[float] = None) -> list[Generation]:
         """Admit (b, S) prompt rows into b free slots.  Raises if the pool
         lacks room or the request would run past the cache; callers gate
         on ``free_slots()``.
@@ -767,10 +796,12 @@ class StepEngine(SlotPool):
                 and self.prefix_cache else None)
         if self.prefill_chunk is not None:
             return self._admit_chunked(tokens, max_new, metas, rkeys,
-                                       seeded, plan=plan)
+                                       seeded, plan=plan,
+                                       submitted_at=submitted_at)
         if plan is not None:
             return self._admit_prefix_hit(params, tokens, max_new, metas,
-                                          rkeys, seeded, plan)
+                                          rkeys, seeded, plan,
+                                          submitted_at=submitted_at)
         slots = self._take_slots(b)
         tables = np.zeros((b, self.pages_per_row), np.int32)
         pages = []
@@ -791,7 +822,8 @@ class StepEngine(SlotPool):
                 self._pages.restore(pages)
             raise
         gens = self._register(slots, S, max_new, metas,
-                              first=np.asarray(first))
+                              first=np.asarray(first),
+                              submitted_at=submitted_at)
         if self.paged:
             npages = self.pages_needed(S, max_new)
             for i, g in enumerate(gens):
@@ -805,7 +837,8 @@ class StepEngine(SlotPool):
         return gens
 
     def _admit_prefix_hit(self, params, tokens, max_new: int, metas,
-                          rkeys, seeded, plan) -> list[Generation]:
+                          rkeys, seeded, plan,
+                          submitted_at=None) -> list[Generation]:
         """One-shot admission on a prefix hit: the matched pages map
         read-only into the new row's table, the boundary page is
         copied-on-write when the divergence lands inside one (BEFORE any
@@ -847,7 +880,8 @@ class StepEngine(SlotPool):
         if cow_src is not None:
             self._pages.release([cow_src])       # copy done: pin drops
         gens = self._register(slots, S, max_new, metas,
-                              first=np.asarray(first))
+                              first=np.asarray(first),
+                              submitted_at=submitted_at)
         gens[0].pages = pages
         self._index_prompt(tokens[0], pages)
         # counters only once the admission committed — a failed program
@@ -855,6 +889,10 @@ class StepEngine(SlotPool):
         # BENCH gates reading them) untouched
         self.stats["prefix_hits"] += 1
         self.stats["prefix_pages_mapped"] += len(retained)
+        if self._trace.enabled:
+            self._trace.instant(
+                f"prefix-hit:{gens[0].rid}", f"{self.telemetry.prefix}eng",
+                args={"mapped": len(retained), "cow": cow_src is not None})
         if cow_src is not None:
             self.stats["cow_copies"] += 1
         if self._retire_done(gens):
@@ -862,7 +900,7 @@ class StepEngine(SlotPool):
         return gens
 
     def _admit_chunked(self, tokens, max_new, metas, rkeys, seeded,
-                       plan=None):
+                       plan=None, submitted_at=None):
         """Reserve slots and queue the prompt for chunked prefill.  The
         reserved rows' parked position moves to the LAST cache slot:
         every decode step still writes a (garbage) k/v for every row, and
@@ -905,7 +943,8 @@ class StepEngine(SlotPool):
             st = st._replace(table=st.table.at[jslots].set(
                 jnp.asarray(tables)))
         self.state = st
-        gens = self._register(slots, S, max_new, metas)
+        gens = self._register(slots, S, max_new, metas,
+                              submitted_at=submitted_at)
         if self.paged:
             npages = self.pages_needed(S, max_new)
             for i, g in enumerate(gens):
@@ -942,6 +981,22 @@ class StepEngine(SlotPool):
         if self._pending[0] is head:
             self._jumps = 0              # the head made progress
 
+    def _note_chunk(self, ps: _PendingPrefill, t0: float, start: int,
+                    end: int, final: bool):
+        """Chunk-program telemetry: the admit-to-first-chunk latency
+        sample (admission until its first chunk starts) and the chunk
+        span on this engine's track."""
+        now = self.telemetry.clock()
+        if not ps.started:
+            ps.started = True
+            self.telemetry.observe("admit_to_first_chunk_s",
+                                   t0 - ps.gens[0].admitted_at)
+        if self._trace.enabled:
+            self._trace.span(
+                "prefill-chunk", f"{self.telemetry.prefix}eng", t0, now,
+                args={"rid": ps.gens[0].rid, "start": start, "end": end,
+                      "final": final})
+
     def prefill_tick(self, params) -> list[Generation]:
         """Run at most ONE chunk program — the admission budget.  A live
         decode row therefore waits for one (b, C) chunk per step, never a
@@ -964,6 +1019,7 @@ class StepEngine(SlotPool):
         tables = (ps.tables if ps.tables is not None
                   else np.zeros((b, self.pages_per_row), np.int32))
         pos = np.full((b,), start, np.int32)
+        t0 = self.telemetry.clock()
         try:
             if ps.cow is not None:
                 # copy-on-write the shared boundary page BEFORE this
@@ -984,6 +1040,7 @@ class StepEngine(SlotPool):
                     jnp.asarray(chunk), jnp.asarray(pos),
                     jnp.asarray(slots), jnp.asarray(tables))
                 ps.done = end
+                self._note_chunk(ps, t0, start, end, final=False)
                 return []
             first, self.state = self._call(
                 self._chunk_final_fn, params, self.state,
@@ -1011,18 +1068,27 @@ class StepEngine(SlotPool):
             self._restore_slots([g.slot for g in ps.gens])
             raise
         self._pending.popleft()
+        self._note_chunk(ps, t0, start, end, final=True)
         if ps.hit:
             # counters only once the prefix-hit admission committed (its
             # final chunk sampled): an abandoned pending rolled its pages
             # back and must not inflate the stats
             self.stats["prefix_hits"] += 1
             self.stats["prefix_pages_mapped"] += ps.mapped
+            if self._trace.enabled:
+                self._trace.instant(
+                    f"prefix-hit:{ps.gens[0].rid}",
+                    f"{self.telemetry.prefix}eng",
+                    args={"mapped": ps.mapped, "cow": ps.had_cow})
             if ps.had_cow:
                 self.stats["cow_copies"] += 1
         first = np.asarray(first)
+        tok_now = self.telemetry.clock()
         for i, g in enumerate(ps.gens):
             g.tokens.append(int(first[i]))
             self._live[g.slot] = True
+            self.stats["tokens_out"] += 1
+            self._note_first_token(g, tok_now)
         if self.paged:
             # the prompt is now fully written: its whole pages become
             # indexable (BEFORE retirement, so an instant retire still
@@ -1068,9 +1134,11 @@ class StepEngine(SlotPool):
             return finished
         if self.multi_step > 1 and not self._pending:
             return finished + self._step_multi(params)
+        t0 = self.telemetry.clock()
         nxt, self.state = self._call(self._step_fn, params, self.state,
                                      jnp.asarray(self._live))
         nxt = np.asarray(nxt)
+        now = self.telemetry.clock()
         self.stats["host_ticks"] += 1
         self.stats["device_steps"] += 1
         stepped = []
@@ -1080,6 +1148,8 @@ class StepEngine(SlotPool):
                 continue                  # empty, or reserved mid-prefill
             g.tokens.append(int(nxt[s]))
             stepped.append(g)
+        self.stats["tokens_out"] += len(stepped)
+        self._note_tick(t0, now, 1, len(stepped))
         return finished + self._retire_done(stepped)
 
     def _step_multi(self, params) -> list[Generation]:
@@ -1097,11 +1167,13 @@ class StepEngine(SlotPool):
             rem[s] = g.remaining
             budget[s] = (len(g.pages) * self.page_size
                          if self.paged and g.pages else self.max_len)
+        t0 = self.telemetry.clock()
         toks, n, self.state = self._call(
             self._mstep_fn, params, self.state, jnp.asarray(self._live),
             jnp.asarray(rem), jnp.asarray(budget))
         toks = np.asarray(toks)
         n = int(n)
+        now = self.telemetry.clock()
         self.stats["host_ticks"] += 1
         self.stats["device_steps"] += n
         stepped = []
@@ -1111,6 +1183,8 @@ class StepEngine(SlotPool):
                 continue
             g.tokens.extend(int(t) for t in toks[s, :n])
             stepped.append(g)
+        self.stats["tokens_out"] += n * len(stepped)
+        self._note_tick(t0, now, n, len(stepped))
         return self._retire_done(stepped)
 
 
@@ -1120,13 +1194,16 @@ class StepEngine(SlotPool):
 
 class ServingEngine:
     def __init__(self, model: LM, params, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 telemetry: Optional[Telemetry] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.temperature = temperature
         self.seed = seed
-        self.stats = ServeStats()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.stats = ServeStats(self.telemetry.view())
+        self._eng_seq = 0            # per-engine metric namespace counter
         # Per-batch-size engine cache, LRU-bounded: each entry pins a full
         # (layers, B, max_len) KV pool, so traffic with many distinct
         # batch shapes must not accumulate pools without limit — evicting
@@ -1170,7 +1247,10 @@ class ServingEngine:
         if eng is None:
             eng = StepEngine(self.model, batch_size, self.max_len,
                              temperature=self.temperature, seed=self.seed,
-                             paged=paged, page_size=page_size)
+                             paged=paged, page_size=page_size,
+                             telemetry=self.telemetry.scoped(
+                                 f"eng.{self._eng_seq}."))
+            self._eng_seq += 1
             self._step_engines[key] = eng
         self._step_engines.move_to_end(key)
         if len(self._step_engines) > self.max_cached_pools:
@@ -1197,17 +1277,17 @@ class ServingEngine:
         B, S = tokens.shape
         eng = self.step_engine(B)
 
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         eng.reset(seed=self.seed if seed is None else seed)
         gens = eng.admit(self.params, tokens, max_new=steps)
         jax.block_until_ready(eng.state.tok)
-        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_s += self.telemetry.clock() - t0
 
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         while eng.live_slots():
             eng.step(self.params)
         jax.block_until_ready(eng.state.tok)
-        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_s += self.telemetry.clock() - t0
         self.stats.tokens += B * steps
         return np.stack([np.asarray(g.tokens, np.int32) for g in gens])
 
@@ -1216,16 +1296,16 @@ class ServingEngine:
         """Vision-frontend path: patch embeds prefill with the prompt and
         shift every position by n_patch; decode runs the legacy loop."""
         B, S = tokens.shape
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         logits, caches = self._prefill(self.params, tokens, patch_embeds)
         n_patch = patch_embeds.shape[1]
         key = self._key(seed)
         tok = _sample(logits[:, -1], key, self.temperature)[:, None]
         jax.block_until_ready(tok)
-        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_s += self.telemetry.clock() - t0
 
         out = [np.asarray(tok)]
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         pos = S + n_patch
         for i in range(steps - 1):
             key = jax.random.fold_in(key, i)
@@ -1234,7 +1314,7 @@ class ServingEngine:
             out.append(np.asarray(tok))
             pos += 1
         jax.block_until_ready(tok)
-        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_s += self.telemetry.clock() - t0
         self.stats.tokens += B * steps
         return np.concatenate(out, axis=1)
 
@@ -1265,17 +1345,17 @@ class ServingEngine:
             return self.generate(tokens, steps, seed=seed)
         eng = self.step_engine(B, paged=True, page_size=page)
 
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         eng.reset(seed=self.seed if seed is None else seed)
         gens = eng.admit(self.params, tokens, max_new=steps)
         jax.block_until_ready(eng.state.tok)
-        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_s += self.telemetry.clock() - t0
 
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         while eng.live_slots():
             eng.step(self.params)
         jax.block_until_ready(eng.state.tok)
-        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_s += self.telemetry.clock() - t0
         self.stats.tokens += B * steps
         return np.stack([np.asarray(g.tokens, np.int32) for g in gens])
 

@@ -36,6 +36,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.serve.telemetry import Telemetry
+
 
 @dataclass
 class Generation:
@@ -49,6 +51,11 @@ class Generation:
     meta: Any = None                      # scheduler payload (futures etc.)
     pages: Optional[list] = None          # pool pages owned (paged engines);
     #                                       None once released at retirement
+    # lifecycle stamps (engine clock), for TTFT / queue-wait / latency
+    # histograms and the per-request trace span:
+    submitted_at: Optional[float] = None  # scheduler enqueue (if known)
+    admitted_at: Optional[float] = None   # slot granted
+    first_token_at: Optional[float] = None
 
     @property
     def remaining(self) -> int:
@@ -89,13 +96,19 @@ class PagePool:
 
     PARK = 0
 
-    def __init__(self, total_pages: int):
+    def __init__(self, total_pages: int, telemetry: Telemetry | None = None):
         if total_pages < 2:
             raise ValueError(f"need >= 2 pages (1 park + 1 allocatable), "
                              f"got {total_pages}")
         self.total_pages = total_pages
         self._free: deque[int] = deque(range(1, total_pages))
         self._ref: dict[int, int] = {}   # page id -> refcount (allocated)
+        self._tm = telemetry             # optional: free_pages gauge
+
+    def _note_free(self):
+        if self._tm is not None:
+            self._tm.registry.gauge(
+                self._tm.prefix + "free_pages", len(self._free))
 
     @property
     def allocatable(self) -> int:
@@ -115,6 +128,7 @@ class PagePool:
         pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
             self._ref[p] = 1
+        self._note_free()
         return pages
 
     def acquire(self, pages: list[int]):
@@ -145,15 +159,18 @@ class PagePool:
         """Failed admission: drop one reference; pages reaching refcount
         0 go back to the FRONT in original order."""
         self._free.extendleft(reversed(self._decref(pages)))
+        self._note_free()
 
     def release(self, pages: list[int]):
         """Retirement: drop one reference; pages reaching refcount 0 go
         to the BACK (FIFO recycling)."""
         self._free.extend(self._decref(pages))
+        self._note_free()
 
     def reset(self):
         self._free = deque(range(1, self.total_pages))
         self._ref = {}
+        self._note_free()
 
 
 @dataclass
@@ -297,18 +314,31 @@ class SlotPool:
 
     eos_id: Optional[int] = None
 
-    def _pool_init(self, batch_size: int):
+    def _pool_init(self, batch_size: int, telemetry: Telemetry | None = None):
         self.batch_size = batch_size
         self.slots: list[Optional[Generation]] = [None] * batch_size
         self._free: deque[int] = deque(range(batch_size))
         self._live = np.zeros(batch_size, dtype=bool)
         self._rid = 0
+        # Shared measurement layer: ``self.stats`` is a dict-shaped view
+        # over the server-wide MetricRegistry (standalone engines get a
+        # private one), keeping every existing ``stats["key"]`` call-site
+        # while snapshots/benches read one store.  A server hands each
+        # engine a scoped ``eng.<i>.`` namespace.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._trace = self.telemetry.tracer
         # Engine-lifetime tick counters (NOT cleared by ``reset``;
         # benches take deltas): ``host_ticks`` counts decode round-trips
         # to the device, ``device_steps`` the decode steps those trips
         # retired — their ratio is the multi-step amortization.
-        # Engines with richer accounting (SpecEngine) overwrite this.
-        self.stats = {"host_ticks": 0, "device_steps": 0}
+        # Engines with richer accounting (SpecEngine) extend this.
+        self.stats = self.telemetry.view()
+        self.stats.update({"host_ticks": 0, "device_steps": 0,
+                           "admitted_rows": 0, "retired_rows": 0,
+                           "tokens_out": 0})
+        # inter-commit gap tracking for the decode-stall histogram
+        # (engine-lifetime, like the tick counters above)
+        self._last_commit_at: Optional[float] = None
 
     def _pool_reset(self):
         self.slots = [None] * self.batch_size
@@ -381,26 +411,67 @@ class SlotPool:
         self._free.extendleft(reversed(slots))
 
     def _register(self, slots: list[int], prompt_len: int, max_new: int,
-                  metas, first=None) -> list[Generation]:
+                  metas, first=None, submitted_at=None) -> list[Generation]:
         """Create one ``Generation`` per slot.  With ``first`` (the
         sampled first tokens) the rows go live; without it they are
-        reserved-but-pending (chunked admission fills them later)."""
+        reserved-but-pending (chunked admission fills them later).
+        ``submitted_at`` (scheduler enqueue time, engine clock) feeds the
+        queue-wait and TTFT histograms."""
+        now = self.telemetry.clock()
         gens = []
         for i, s in enumerate(slots):
             g = Generation(rid=self._rid, prompt_len=prompt_len,
                            max_new=max_new, slot=s,
-                           meta=metas[i] if metas else None)
+                           meta=metas[i] if metas else None,
+                           submitted_at=submitted_at, admitted_at=now)
             self._rid += 1
+            self.stats["admitted_rows"] += 1
+            if submitted_at is not None:
+                self.telemetry.observe("queue_wait_s", now - submitted_at)
             if first is not None:
                 g.tokens.append(int(first[i]))
                 self._live[s] = True
+                self.stats["tokens_out"] += 1
+                self._note_first_token(g, now)
             self.slots[s] = g
             gens.append(g)
         return gens
 
+    def _note_first_token(self, g: Generation, now: Optional[float] = None):
+        """Stamp a row's first emitted token; observes TTFT (relative to
+        scheduler submit when known, else to admission)."""
+        if g.first_token_at is not None:
+            return
+        if now is None:
+            now = self.telemetry.clock()
+        g.first_token_at = now
+        ref = g.submitted_at if g.submitted_at is not None else g.admitted_at
+        self.telemetry.observe("ttft_s", now - ref)
+        if self._trace.enabled:
+            self._trace.instant(
+                f"first-token:{g.rid}",
+                f"{self.telemetry.prefix}pool{g.slot}", ts=now)
+
+    def _note_tick(self, t0: float, now: float, nsteps: int, nrows: int):
+        """Per-tick telemetry: the per-token latency sample (tick
+        duration amortized over the decode steps it committed), the
+        host-side inter-commit stall (gap between the previous tick's
+        commit and this tick's start — scheduler/bookkeeping overhead),
+        and the tick span."""
+        if nrows and nsteps:
+            self.telemetry.observe("token_latency_s", (now - t0) / nsteps)
+        last = self._last_commit_at
+        if last is not None and t0 > last:
+            self.telemetry.observe("decode_stall_s", t0 - last)
+        self._last_commit_at = now
+        if self._trace.enabled:
+            self._trace.span("tick", f"{self.telemetry.prefix}eng",
+                             t0, now, args={"steps": nsteps, "rows": nrows})
+
     # ----------------------------------------------------------- retirement
     def _retire_done(self, gens: list[Generation]) -> list[Generation]:
         finished = []
+        now = None
         for g in gens:
             eos = (self.eos_id is not None and g.tokens
                    and g.tokens[-1] == self.eos_id)
@@ -410,6 +481,19 @@ class SlotPool:
                 self._live[g.slot] = False
                 self._free.append(g.slot)
                 finished.append(g)
+                if now is None:
+                    now = self.telemetry.clock()
+                self.stats["retired_rows"] += 1
+                self.telemetry.observe("gen_latency_s", now - g.admitted_at)
+                if self._trace.enabled:
+                    # one span per request on its slot's track:
+                    # admitted -> retired (Perfetto: slot occupancy).
+                    self._trace.span(
+                        f"req:{g.rid}",
+                        f"{self.telemetry.prefix}pool{g.slot}",
+                        g.admitted_at, now,
+                        args={"tokens": len(g.tokens),
+                              "prompt_len": g.prompt_len, "eos": bool(eos)})
         return finished
 
     def _salt_admit_key(self):

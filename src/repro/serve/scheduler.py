@@ -48,6 +48,12 @@ import jax
 import numpy as np
 
 from repro.serve.engine import EngineKey
+from repro.serve.telemetry import Telemetry, safe_ratio
+
+# request-level histograms surfaced by every scheduler snapshot
+_LATENCY_HISTS = ("ttft_s", "queue_wait_s", "token_latency_s",
+                  "decode_stall_s", "admit_to_first_chunk_s",
+                  "gen_latency_s", "request_latency_s")
 
 
 @dataclass
@@ -86,10 +92,19 @@ class SwitchScheduler:
         self._stopping = False
         self._thread: Optional[threading.Thread] = None
         self._load_cost: dict[str, float] = {}   # measured seconds, EMA
-        self.stats = {
+        # scheduler stats live in the server's shared MetricRegistry under
+        # ``sched.`` (dict-compatible view); a fresh scheduler zeroes its
+        # own keys, matching the old fresh-dict semantics
+        self.telemetry = getattr(server, "telemetry", None) or Telemetry()
+        self._clock = self.telemetry.clock
+        self._trace = self.telemetry.tracer
+        self.stats = self.telemetry.view("sched.")
+        self.stats.update({
             "requests": 0, "batches": 0, "streaks": 0,
             "stacked_requests": 0, "busy_seconds": 0.0,
-        }
+            "admitted_requests": 0, "rejected_requests": 0,
+            "queued_requests": 0,
+        })
 
     # ------------------------------------------------------------- client
     def submit(self, name: str, tokens, steps: int = 1,
@@ -100,14 +115,23 @@ class SwitchScheduler:
         fut: Future = Future()
         req = _Request(name=name, tokens=np.asarray(tokens), steps=steps,
                        seed=self.server.next_seed() if seed is None else seed,
-                       future=fut, submitted_at=time.perf_counter())
+                       future=fut, submitted_at=self._clock())
         with self._cv:
             if self._stopping:
                 raise RuntimeError("scheduler is stopped")
             self._queues[name].append(req)
             self.stats["requests"] += 1
+            self._note_queued_locked()
             self._cv.notify()
+        if self._trace.enabled:
+            self._trace.instant(f"submit:{name}", "sched",
+                                ts=req.submitted_at)
         return fut
+
+    def _note_queued_locked(self):
+        """Refresh the queued-requests gauge; caller holds ``_cv``."""
+        self.stats["queued_requests"] = sum(
+            len(q) for q in self._queues.values())
 
     # ---------------------------------------------------------- lifecycle
     def start(self) -> "SwitchScheduler":
@@ -134,6 +158,9 @@ class SwitchScheduler:
                 q.popleft().future.set_exception(
                     RuntimeError("scheduler stopped before serving this "
                                  "request"))
+                self.stats["rejected_requests"] += 1
+        with self._cv:
+            self._note_queued_locked()
 
     def __enter__(self):
         return self.start()
@@ -173,13 +200,19 @@ class SwitchScheduler:
                 if self._stopping and (not getattr(self, "_drain", True)
                                        or not any(self._queues.values())):
                     return
-                now = time.perf_counter()
+                now = self._clock()
                 ranked = self._ranked(now)
                 name = ranked[0]
                 streak: list[_Request] = []
                 q = self._queues[name]
                 while q and len(streak) < self.max_streak:
                     streak.append(q.popleft())
+                self.stats["admitted_requests"] += len(streak)
+                self._note_queued_locked()
+                for r in streak:
+                    self.telemetry.observe(
+                        "queue_wait_s", now - r.submitted_at,
+                        doc="seconds between submit and admission")
                 # next context with pending work (after this streak drains)
                 upcoming = [n for n in ranked[1:] if self._queues[n]]
                 if not upcoming and q:
@@ -194,7 +227,7 @@ class SwitchScheduler:
     def _serve_streak(self, name: str, streak: list[_Request],
                       upcoming: list[str]):
         engine = self.server.engine
-        t0 = time.perf_counter()
+        t0 = self._clock()
         try:
             was_resident = engine.policy.holds(name)
             engine.preload(name)
@@ -205,7 +238,7 @@ class SwitchScheduler:
                     r.future.set_exception(e)
             return
         if not was_resident:
-            self._note_load_cost(name, time.perf_counter() - t0)
+            self._note_load_cost(name, self._clock() - t0)
         # the paper's dynamic reconfiguration: next context streams into
         # the shadow slot while this streak executes (policy picks victims).
         # Prefetch is advisory: a failure must not take the streak down
@@ -223,13 +256,21 @@ class SwitchScheduler:
                         r.future.set_exception(e)
                 continue
             off = 0
+            done = self._clock()
             for r in group:
                 n = r.tokens.shape[0]
                 r.future.set_result(out[off:off + n])
                 off += n
+                self.telemetry.observe(
+                    "request_latency_s", done - r.submitted_at,
+                    doc="seconds between submit and future resolution")
             self.stats["batches"] += 1
+        now = self._clock()
         self.stats["streaks"] += 1
-        self.stats["busy_seconds"] += time.perf_counter() - t0
+        self.stats["busy_seconds"] += now - t0
+        if self._trace.enabled:
+            self._trace.span(f"streak:{name}", "sched", t0, now,
+                             args={"requests": len(streak)})
 
     # ------------------------------------------------------------ batching
     def _stack(self, streak: list[_Request]) -> list[list[_Request]]:
@@ -263,17 +304,27 @@ class SwitchScheduler:
 
     # ------------------------------------------------------------- report
     def snapshot(self) -> dict:
-        return _snapshot(self.stats, self.server.engine)
+        return _snapshot(self.stats, self.server.engine, self.telemetry)
 
 
-def _snapshot(stats: dict, engine) -> dict:
+def _snapshot(stats: dict, engine, telemetry=None) -> dict:
     """Scheduler stats merged with the context engine's switching stats —
-    one shape for every scheduler's report."""
+    one shape for every scheduler's report.  With a telemetry handle,
+    request-level latency histograms (summaries) ride along too."""
     eng = engine.stats
-    return {**stats, "switches": eng["switches"],
-            "context_changes": eng["context_changes"],
-            "loads": eng["loads"], "evictions": eng["evictions"],
-            "hidden_load_fraction": engine.hidden_load_fraction()}
+    out = {**stats, "switches": eng["switches"],
+           "context_changes": eng["context_changes"],
+           "loads": eng["loads"], "evictions": eng["evictions"],
+           "hidden_load_fraction": engine.hidden_load_fraction()}
+    if telemetry is not None:
+        hists = {}
+        for name in _LATENCY_HISTS:
+            h = telemetry.registry.histogram(name)
+            if h is not None and h.count:
+                hists[name] = h.summary()
+        if hists:
+            out["latency_hists"] = hists
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -386,11 +437,18 @@ class ContinuousScheduler:
         self._stranded_since: dict[str, float] = {}
         self._tick_ctx: Optional[str] = None   # context the current tick
         #                                        acts on (failure target)
-        self.stats = {
+        # shared-registry stats view (see SwitchScheduler.__init__)
+        self.telemetry = getattr(server, "telemetry", None) or Telemetry()
+        self._clock = self.telemetry.clock
+        self._trace = self.telemetry.tracer
+        self.stats = self.telemetry.view("sched.")
+        self.stats.update({
             "requests": 0, "steps": 0, "admitted_rows": 0,
             "drain_switches": 0, "preempt_switches": 0,
             "busy_seconds": 0.0,
-        }
+            "admitted_requests": 0, "rejected_requests": 0,
+            "queued_requests": 0,
+        })
 
     # ------------------------------------------------------------- client
     def submit(self, name: str, tokens, steps: int = 1,
@@ -425,15 +483,24 @@ class ContinuousScheduler:
         req = _Request(name=name, tokens=tokens, steps=steps,
                        seed=self.server.next_seed() if seed is None
                        else seed,
-                       future=fut, submitted_at=time.perf_counter(),
+                       future=fut, submitted_at=self._clock(),
                        explicit_seed=seed is not None)
         with self._cv:
             if self._stopping:
                 raise RuntimeError("scheduler is stopped")
             self._queues[name].append(req)
             self.stats["requests"] += 1
+            self._note_queued_locked()
             self._cv.notify()
+        if self._trace.enabled:
+            self._trace.instant(f"submit:{name}", "sched",
+                                ts=req.submitted_at)
         return fut
+
+    def _note_queued_locked(self):
+        """Refresh the queued-requests gauge; caller holds ``_cv``."""
+        self.stats["queued_requests"] = sum(
+            len(q) for q in self._queues.values())
 
     # ---------------------------------------------------------- lifecycle
     def start(self) -> "ContinuousScheduler":
@@ -455,10 +522,13 @@ class ContinuousScheduler:
         for q in self._queues.values():
             while q:
                 q.popleft().future.set_exception(err)
+                self.stats["rejected_requests"] += 1
         for inf in list(self._inflight.values()):   # admitted, unfinished
             if not inf.req.future.done():
                 inf.req.future.set_exception(err)
         self._inflight.clear()
+        with self._cv:
+            self._note_queued_locked()
 
     def __enter__(self):
         return self.start()
@@ -588,7 +658,7 @@ class ContinuousScheduler:
     def _tick(self, cur: Optional[str]) -> Optional[str]:
         """One step boundary: rank, maybe switch, admit, step, retire."""
         self._tick_ctx = cur                  # who a mid-tick failure hits
-        now = time.perf_counter()
+        now = self._clock()
         pressures = self._pressures(now)
         if not pressures:
             return cur
@@ -610,6 +680,8 @@ class ContinuousScheduler:
                 nxt = self._try_activate(cand, cur)   # free flip: nothing
                 if nxt == cand:                       # to drain
                     self.stats["drain_switches"] += 1
+                    if self._trace.enabled:
+                        self._trace.instant(f"drain-switch:{cand}", "sched")
                 cur = nxt
                 self._tick_ctx = cur
             elif cand_p > self.switch_margin * max(cur_p, 1e-9):
@@ -626,24 +698,29 @@ class ContinuousScheduler:
                 if drained or (preempt and policy.is_resident(cand)):
                     nxt = self._try_activate(cand, cur)
                     if nxt == cand:
-                        self.stats["drain_switches" if drained
-                                   else "preempt_switches"] += 1
+                        kind = ("drain_switches" if drained
+                                else "preempt_switches")
+                        self.stats[kind] += 1
+                        if self._trace.enabled:
+                            self._trace.instant(
+                                f"{kind[:-len('_switches')]}-switch:{cand}",
+                                "sched")
                     cur = nxt
                     self._tick_ctx = cur
         eng = self._engine(cur)
         if stack:
             self._admit(cur, eng)
         if eng.live_slots():
-            t0 = time.perf_counter()
+            t0 = self._clock()
             finished = eng.step(None)         # params come from run_step
             self.stats["steps"] += 1
-            self.stats["busy_seconds"] += time.perf_counter() - t0
+            self.stats["busy_seconds"] += self._clock() - t0
             self._resolve(finished)
         else:
             time.sleep(0.0005)                # waiting on a load/queue
         # starvation-guard bookkeeping: stamp contexts left holding frozen
         # rows; the stamp ages their pressure until they are resumed
-        mark = time.perf_counter()
+        mark = self._clock()
         live = self._live_engines()
         for name in live:
             self._stranded_since.setdefault(name, mark)
@@ -654,12 +731,12 @@ class ContinuousScheduler:
         return cur
 
     def _activate(self, name: str) -> str:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         was_resident = self.server.engine.policy.holds(name)
         self.server.engine.preload(name)
         self.server.engine.switch(name, wait=True)
         if not was_resident:
-            self._note_load_cost(name, time.perf_counter() - t0)
+            self._note_load_cost(name, self._clock() - t0)
         return name
 
     def _try_activate(self, name: str, cur: Optional[str]) -> Optional[str]:
@@ -684,6 +761,7 @@ class ContinuousScheduler:
                 if not q or not eng.can_admit(q[0].tokens, q[0].steps):
                     return                 # no slot — or, paged, no pages
                 req = q.popleft()
+                self._note_queued_locked()
             b = req.tokens.shape[0]
             inf = _Inflight(req=req, need=b)
             key = self._inflight_seq
@@ -699,12 +777,15 @@ class ContinuousScheduler:
             try:
                 gens = eng.admit(None, req.tokens, max_new=req.steps,
                                  metas=[(key, i) for i in range(b)],
-                                 seeds=seeds)
+                                 seeds=seeds,
+                                 submitted_at=req.submitted_at)
             except BaseException as e:
                 del self._inflight[key]
+                self.stats["rejected_requests"] += 1
                 req.future.set_exception(e)
                 continue
             self.stats["admitted_rows"] += b
+            self.stats["admitted_requests"] += 1
             self._resolve([g for g in gens if g.done])
 
     def _resolve(self, finished):
@@ -720,6 +801,10 @@ class ContinuousScheduler:
                                 for i in range(inf.need)])
                 if not inf.req.future.done():
                     inf.req.future.set_result(out)
+                    self.telemetry.observe(
+                        "request_latency_s",
+                        self._clock() - inf.req.submitted_at,
+                        doc="seconds between submit and future resolution")
 
     def _fail_context(self, cur: Optional[str], exc: BaseException):
         """Fail everything belonging to `cur` (all contexts when None):
@@ -732,6 +817,8 @@ class ContinuousScheduler:
                 q = self._queues[cur]
                 while q:
                     reqs.append(q.popleft())
+                self._note_queued_locked()
+            self.stats["rejected_requests"] += len(reqs)
         for key, inf in list(self._inflight.items()):
             if cur is None or inf.req.name == cur:
                 self._inflight.pop(key, None)
@@ -753,7 +840,7 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------- report
     def snapshot(self) -> dict:
-        out = _snapshot(self.stats, self.server.engine)
+        out = _snapshot(self.stats, self.server.engine, self.telemetry)
         ticks = dsteps = 0
         prefix = {"prefix_hits": 0, "prefix_pages_mapped": 0,
                   "cow_copies": 0, "cache_evictions": 0}
@@ -764,12 +851,13 @@ class ContinuousScheduler:
                 dsteps += eng.stats["device_steps"]
                 for k in prefix:
                     prefix[k] += eng.stats.get(k, 0)
-        if ticks:
-            out["host_ticks"] = ticks
-            out["device_steps"] = dsteps
-            # the multi-step amortization actually realized: decode steps
-            # committed per host round-trip (1.0 when multi_step == 1)
-            out["steps_per_tick"] = round(dsteps / ticks, 3)
+        # always present (0 / 0.0 before the first tick) so report
+        # consumers never need an existence check
+        out["host_ticks"] = ticks
+        out["device_steps"] = dsteps
+        # the multi-step amortization actually realized: decode steps
+        # committed per host round-trip (1.0 when multi_step == 1)
+        out["steps_per_tick"] = round(safe_ratio(dsteps, ticks), 3)
         if self.prefix_cache:
             # prefix-cache effectiveness across this config's engines
             out.update(prefix)
@@ -782,9 +870,14 @@ class ContinuousScheduler:
                 rounds += eng.stats["rounds"]
                 row_rounds += eng.stats["row_rounds"]
                 committed += eng.stats["committed_tokens"]
-        if rounds:
+        if rounds or self.draft:
             out["spec_rounds"] = rounds
             out["spec_committed_tokens"] = committed
             out["accepted_tokens_per_round"] = round(
-                committed / max(row_rounds, 1), 3)
+                safe_ratio(committed, row_rounds), 3)
+            # fraction of *drafted* tokens the target accepted: each row
+            # round drafts spec_k and commits accepted+1 (the bonus token)
+            out["spec_acceptance_rate"] = round(
+                safe_ratio(committed - row_rounds,
+                           row_rounds * self.spec_k), 3)
         return out

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serve.pool import Generation, SlotPool
+from repro.serve.telemetry import Telemetry, safe_ratio
 
 
 def speculative_accept(key, proposals, draft_logits, target_logits,
@@ -139,7 +140,8 @@ class SpecEngine(SlotPool):
 
     def __init__(self, draft: LM, target: LM, batch_size: int, max_len: int,
                  k: int = 4, temperature: float = 0.0, seed: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None):
         for m, role in ((draft, "draft"), (target, "target")):
             if any(mix != "attn" for mix, _ in m.pattern):
                 raise ValueError(
@@ -262,9 +264,12 @@ class SpecEngine(SlotPool):
         self.runner = None
 
         self.state: Optional[SpecState] = None
-        self._pool_init(B)
-        self.stats = {"rounds": 0, "row_rounds": 0, "draft_steps": 0,
-                      "committed_tokens": 0, "admitted_tokens": 0}
+        self._pool_init(B, telemetry=telemetry)
+        # speculative accounting rides the shared pool counters; the tick
+        # counters stay 0 — a round is not a decode round-trip and must
+        # not skew the steps-per-tick aggregate.
+        self.stats.update({"rounds": 0, "row_rounds": 0, "draft_steps": 0,
+                           "committed_tokens": 0, "admitted_tokens": 0})
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
@@ -299,13 +304,14 @@ class SpecEngine(SlotPool):
         """Mean committed tokens per row per verify pass, in [1, K+1]
         (> 1 means speculation is paying: extra tokens rode each target
         pass)."""
-        r = self.stats["row_rounds"]
-        return self.stats["committed_tokens"] / r if r else 0.0
+        return safe_ratio(self.stats["committed_tokens"],
+                          self.stats["row_rounds"])
 
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,
               metas: Optional[list] = None,
-              seeds: Optional[list] = None) -> list[Generation]:
+              seeds: Optional[list] = None,
+              submitted_at: Optional[float] = None) -> list[Generation]:
         """Admit (b, S) prompt rows into b free slots (both caches).
 
         Needs ``k`` extra cache slack beyond ``max_new``: a round's block
@@ -331,7 +337,8 @@ class SpecEngine(SlotPool):
             self._restore_slots(slots)
             raise
         gens = self._register(slots, S, max_new, metas,
-                              first=np.asarray(first))
+                              first=np.asarray(first),
+                              submitted_at=submitted_at)
         self.stats["admitted_tokens"] += b
         if self._retire_done(gens):
             # same-boundary re-admission of an instantly retired slot must
@@ -351,12 +358,14 @@ class SpecEngine(SlotPool):
             if g is not None:
                 remaining[s] = g.remaining
         live = jnp.asarray(self._live)
+        t0 = self.telemetry.clock()
         props, dlogits, self.state = self._call(
             "draft", self._roll_fn, params, self.state)
         toks, m, self.state = self._call(
             "target", self._verify_fn, params, self.state, props, dlogits,
             live, jnp.asarray(remaining))
         toks, m = np.asarray(toks), np.asarray(m)
+        now = self.telemetry.clock()
         stepped = []
         committed = 0
         for s in range(self.batch_size):
@@ -373,4 +382,15 @@ class SpecEngine(SlotPool):
         self.stats["row_rounds"] += len(stepped)
         self.stats["draft_steps"] += self.k + 1
         self.stats["committed_tokens"] += committed
+        self.stats["tokens_out"] += committed
+        # per-token latency: the round amortizes over the tokens each row
+        # committed (1..K+1); the round itself is not a decode tick.
+        self._note_tick(t0, now, safe_ratio(committed, len(stepped)),
+                        len(stepped))
+        if self._trace.enabled:
+            self._trace.instant(
+                "spec-round", f"{self.telemetry.prefix}eng", ts=now,
+                args={"committed": committed, "rows": len(stepped),
+                      "k": self.k,
+                      "accepted": [int(x) for x in m if x]})
         return self._retire_done(stepped)

@@ -19,7 +19,6 @@ under mixed traffic) see ``repro.serve.scheduler.SwitchScheduler``.
 from __future__ import annotations
 
 import itertools
-import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -33,6 +32,7 @@ from repro.models.model import LM
 from repro.serve.engine import (EngineKey, ServingEngine, StepEngine,
                                 _sample)
 from repro.serve.speculative import SpecEngine
+from repro.serve.telemetry import Telemetry
 
 
 @dataclass
@@ -46,14 +46,22 @@ class ServedModel:
 
 class SwitchableServer:
     def __init__(self, num_slots: int = 2, mesh=None,
-                 policy: Optional[ReconfigPolicy] = None):
+                 policy: Optional[ReconfigPolicy] = None,
+                 telemetry: Optional[Telemetry] = None):
+        # one shared registry/tracer/clock for the whole serving stack:
+        # the context engine writes ``ctx.*``, each pooled engine gets
+        # ``eng.<i>.*``, schedulers write ``sched.*``, and request-level
+        # histograms land unprefixed — one snapshot sees every layer
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.engine = ContextSwitchEngine(num_slots=num_slots, mesh=mesh,
-                                          policy=policy)
+                                          policy=policy,
+                                          telemetry=self.telemetry)
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
         self._step_engines: dict[EngineKey, StepEngine] = {}
         self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
         #                                                     pool B, K)
+        self._eng_seq = itertools.count()   # telemetry namespace ids
         self._state_snapshots: dict[str, Any] = {}
         self._req_seq = itertools.count()
         self.log: list[dict] = []
@@ -88,7 +96,9 @@ class SwitchableServer:
         eng = self._engines.get(name)
         if eng is None:
             sm = self._served[name]
-            eng = ServingEngine(sm.model, params, sm.max_len, sm.temperature)
+            eng = ServingEngine(sm.model, params, sm.max_len, sm.temperature,
+                                telemetry=self.telemetry.scoped(
+                                    f"eng.{next(self._eng_seq)}."))
             self._engines[name] = eng
         else:
             eng.params = params
@@ -125,7 +135,9 @@ class SwitchableServer:
                              paged=paged, page_size=page_size,
                              multi_step=multi_step,
                              quantize_kv=quantize_kv,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache,
+                             telemetry=self.telemetry.scoped(
+                                 f"eng.{next(self._eng_seq)}."))
             self._step_engines[key] = eng
         return eng
 
@@ -141,7 +153,9 @@ class SwitchableServer:
         if eng is None:
             sm, dm = self._served[name], self._served[draft]
             eng = SpecEngine(dm.model, sm.model, batch_size, sm.max_len,
-                             k=k, temperature=sm.temperature)
+                             k=k, temperature=sm.temperature,
+                             telemetry=self.telemetry.scoped(
+                                 f"eng.{next(self._eng_seq)}."))
             self._spec_engines[key] = eng
         return eng
 
@@ -154,7 +168,7 @@ class SwitchableServer:
         still loading, the visible stall is only the *remaining* load time
         (paper case 3 — reconfiguration partially hidden).
         """
-        t0 = time.perf_counter()
+        t0 = self.telemetry.clock()
         if seed is None:
             seed = self.next_seed()
         active = self.engine.active
@@ -171,7 +185,7 @@ class SwitchableServer:
             eng = self._serving_engine(name, slot.buffers)
             out = eng.generate(jnp.asarray(tokens), steps, seed=seed)
         self.log.append({"name": name, "switch_s": sw,
-                         "total_s": time.perf_counter() - t0,
+                         "total_s": self.telemetry.clock() - t0,
                          "batch": int(np.asarray(tokens).shape[0]),
                          "steps": steps, "seed": seed})
         return out

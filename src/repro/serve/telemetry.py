@@ -1,0 +1,17 @@
+"""Unified serving telemetry — public import surface.
+
+The implementation lives in ``repro.core.telemetry`` so that
+``repro.core.context`` (which the serving engines import) can use the
+same registry/tracer without a package-import cycle through
+``repro.serve.__init__``.  Import from here in serving code::
+
+    from repro.serve.telemetry import Telemetry, Tracer, safe_ratio
+
+See docs/observability.md for the metric glossary and span taxonomy.
+"""
+from repro.core.telemetry import (LATENCY_BUCKETS_S, Histogram, ManualClock,
+                                  MetricRegistry, MetricView, Telemetry,
+                                  Tracer, safe_ratio)
+
+__all__ = ["LATENCY_BUCKETS_S", "Histogram", "ManualClock", "MetricRegistry",
+           "MetricView", "Telemetry", "Tracer", "safe_ratio"]

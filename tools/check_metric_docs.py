@@ -1,0 +1,112 @@
+"""Glossary check: every metric key the serving stack emits must be
+documented in docs/observability.md.
+
+Runs a mini traced serve exercising every emitting layer — context
+switching, plain + chunked + paged/prefix step engines, a speculative
+engine, both schedulers, the run-to-completion wrapper, and the
+discrete-event simulator — then asserts every `registry.keys()` entry
+matches a backticked name or glob pattern in the glossary.  CI runs
+this so a new counter cannot ship undocumented.
+
+Usage: PYTHONPATH=src python tools/check_metric_docs.py
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tests"))
+
+DOC = ROOT / "docs" / "observability.md"
+
+
+def emitted_keys() -> list[str]:
+    import jax
+    import numpy as np
+    from conftest import reduced_arch, tokens_for
+    from repro.core.scheduler import Run, simulate_dynamic
+    from repro.core.telemetry import ManualClock, Telemetry
+    from repro.models.model import build_model
+    from repro.serve.scheduler import ContinuousScheduler, SwitchScheduler
+    from repro.serve.switching import ServedModel, SwitchableServer
+
+    tm = Telemetry(trace=True)
+    server = SwitchableServer(num_slots=2, telemetry=tm)
+    cfgs = {}
+    for i, name in enumerate(["supersub-super", "supersub-sub"]):
+        cfg = reduced_arch(name)
+        cfgs[name] = cfg
+        m = build_model(cfg)
+        p = m.init(jax.random.key(i))
+        server.register(ServedModel(name=name, model=m,
+                                    weights_fn=lambda p=p: p, max_len=64))
+    names = list(cfgs)
+
+    def toks(nm, seed, seq=8):
+        return np.asarray(tokens_for(cfgs[nm], batch=1, seq=seq, seed=seed))
+
+    # streak scheduler (sched.batches/streaks/stacked_requests)
+    with SwitchScheduler(server) as sched:
+        for f in [sched.submit(names[i % 2], toks(names[i % 2], i),
+                               steps=2) for i in range(4)]:
+            f.result(timeout=300)
+    # continuous: paged + prefix-cache + chunked + multi-step covers the
+    # page/prefix/chunk counters in one pass
+    with ContinuousScheduler(server, batch_size=4, paged=True,
+                             page_size=16, prefix_cache=True,
+                             prefill_chunk=8, multi_step=2) as sched:
+        shared = toks(names[0], 99, seq=32)
+        futs = [sched.submit(names[0], shared, steps=3) for _ in range(3)]
+        for f in futs:
+            f.result(timeout=300)
+    sched.snapshot()
+    # speculative engine (rounds / committed_tokens / ...)
+    with ContinuousScheduler(server, batch_size=4,
+                             draft={names[0]: names[1]}) as sched:
+        sched.submit(names[0], toks(names[0], 7), steps=3).result(
+            timeout=300)
+    sched.snapshot()
+    # run-to-completion wrapper (prefill_s / decode_s / tokens)
+    server.serve_batch(names[0], toks(names[0], 3), steps=2)
+    # simulator writes the live ctx.* keys + visible_stall_seconds
+    simulate_dynamic([Run("a", 1.0), Run("b", 1.0)], {"a": 0.5, "b": 0.5},
+                     telemetry=Telemetry(clock=ManualClock()))
+    sim_tm = Telemetry(clock=ManualClock())
+    simulate_dynamic([Run("a", 1.0), Run("b", 1.0)], {"a": 0.5, "b": 0.5},
+                     telemetry=sim_tm)
+    server.shutdown()
+    return sorted(set(tm.registry.keys()) | set(sim_tm.registry.keys()))
+
+
+def glossary_patterns() -> list[str]:
+    """Backticked tokens in the doc that look like metric keys/patterns."""
+    text = DOC.read_text()
+    out = []
+    for tok in re.findall(r"`([^`\s]+)`", text):
+        if re.fullmatch(r"[A-Za-z0-9_.*<>-]+", tok):
+            # normalize doc placeholders like eng.<i>. to globs
+            out.append(re.sub(r"<[^>]+>", "*", tok))
+    return out
+
+
+def main() -> int:
+    pats = glossary_patterns()
+    keys = emitted_keys()
+    undocumented = [k for k in keys
+                    if not any(fnmatch.fnmatchcase(k, p) for p in pats)]
+    print(f"{len(keys)} emitted keys, {len(pats)} glossary patterns")
+    if undocumented:
+        print("UNDOCUMENTED metric keys (add to docs/observability.md):")
+        for k in undocumented:
+            print(f"  {k}")
+        return 1
+    print("all emitted metric keys are documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
