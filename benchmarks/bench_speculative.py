@@ -20,7 +20,10 @@ only, never correctness.
 Reported per mode: throughput, accepted-tokens/step, verify passes,
 hidden-load fraction.  Gates: speculative must report accepted-tokens/
 step > 1 and a positive hidden-load fraction (the draft/target loads
-overlap execution).
+overlap execution); the paged engine must accept at least what the
+retired dense-row engine did on this same harness; an equal-memory page
+bank must serve at least 2x the dense-row concurrency; and adaptive K
+must rise under an aligned draft and collapse under a mismatched one.
 """
 from __future__ import annotations
 
@@ -34,9 +37,13 @@ LOAD_EMU_S = 0.03     # emulated weight-streaming time per context load
 POOL = 4
 MAX_LEN = 64
 SPEC_K = 4
+# accepted-tokens/verify-step the DENSE-ROW engine reported on this exact
+# harness before its deletion (BENCH_bench_speculative.json @ PR 8): the
+# paged engine must not accept less — same key schedule, same accepts
+DENSE_ACCEPTED_BASELINE = 4.111
 
 
-def _build(slots: int = 2):
+def _build(slots: int = 2, aligned_draft: bool = True):
     import jax
     from repro.configs import get_arch, reduced
     from repro.models.model import build_model
@@ -46,15 +53,23 @@ def _build(slots: int = 2):
     cfg = reduced(get_arch(TARGET))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    # a mismatched draft (fresh init) proposes near-random tokens: the
+    # acceptance floor the adaptive-K controller must react to
+    d_params = params if aligned_draft else model.init(jax.random.key(7))
 
     def weights_fn():
         time.sleep(LOAD_EMU_S)
         return params
 
-    for name in (TARGET, DRAFT):
-        server.register(ServedModel(name=name, model=model,
-                                    weights_fn=weights_fn,
-                                    max_len=MAX_LEN))
+    def draft_weights_fn():
+        time.sleep(LOAD_EMU_S)
+        return d_params
+
+    server.register(ServedModel(name=TARGET, model=model,
+                                weights_fn=weights_fn, max_len=MAX_LEN))
+    server.register(ServedModel(name=DRAFT, model=model,
+                                weights_fn=draft_weights_fn,
+                                max_len=MAX_LEN))
     return server, cfg
 
 
@@ -79,9 +94,10 @@ def _run_mode(mode, n_requests, seq, seed):
     reqs = list(_stream(cfg, n_requests, seq, seed))
 
     def make():
-        draft = {TARGET: DRAFT} if mode == "speculative" else None
+        draft = {TARGET: DRAFT} if mode != "continuous" else None
         return ContinuousScheduler(server, batch_size=POOL, draft=draft,
-                                   spec_k=SPEC_K)
+                                   spec_k=SPEC_K,
+                                   spec_tree=2 if mode == "tree" else 1)
 
     with make() as sched:                    # warm pass: jit + first loads
         _drive(sched, reqs)
@@ -103,11 +119,63 @@ def _run_mode(mode, n_requests, seq, seed):
     return wall, snap
 
 
+def _run_concurrency():
+    """Equal-memory concurrency: a page bank whose two columns hold the
+    bytes of 4 dense max_len rows each (16 usable pages x 16 tokens =
+    256 = 4 x 64) serving short requests (2 pages/row incl. speculative
+    slack) — peak concurrent rows vs the 4 the dense-row engine could
+    ever hold in that memory."""
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models.model import build_model
+    from repro.serve.speculative import SpecEngine
+
+    page_size, num_pages = 16, 17
+    cfg = reduced(get_arch(TARGET))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = SpecEngine(model, model, batch_size=8, max_len=MAX_LEN,
+                     k=SPEC_K, page_size=page_size, num_pages=num_pages)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (1, 6)) for _ in range(8)]
+    peak = 0
+    for p in prompts:
+        assert eng.can_admit(p, 8)
+        eng.admit((params, params), p, max_new=8)
+        peak = max(peak, eng.live_slots())
+    while eng.live_slots() or eng.pending_slots():
+        eng.step((params, params))
+        peak = max(peak, eng.live_slots())
+    equiv_rows = (num_pages - 1) * page_size // MAX_LEN
+    return peak, equiv_rows
+
+
+def _run_adaptive(aligned: bool, n_requests: int, seq: int, seed: int):
+    """Drive the adaptive-K scheduler and report the K trajectory: an
+    aligned draft (start K=1) must climb, a mismatched draft (start
+    K=K_MAX) must collapse toward flat decode."""
+    from repro.serve.scheduler import ContinuousScheduler
+    server, cfg = _build(aligned_draft=aligned)
+    reqs = list(_stream(cfg, n_requests, seq, seed))
+    sched = ContinuousScheduler(server, batch_size=POOL,
+                                draft={TARGET: DRAFT}, spec_k=SPEC_K,
+                                spec_adaptive=True)
+    eng = sched._spec_engine(TARGET)
+    if aligned:
+        eng.set_k(1)
+    k_start = eng.k
+    with sched:
+        _drive(sched, reqs)
+    k_end = eng.k
+    server.shutdown()
+    return k_start, k_end
+
+
 def run(n_requests: int = 12, seq: int = 16, seed: int = 0) -> list[tuple]:
     rows = []
     n_tokens = sum([8, 20, 12][r % 3] for r in range(n_requests))
     results = {}
-    for mode in ("continuous", "speculative"):
+    for mode in ("continuous", "speculative", "tree"):
         wall, snap = _run_mode(mode, n_requests, seq, seed)
         results[mode] = {
             "wall_s": round(wall, 3),
@@ -116,7 +184,7 @@ def run(n_requests: int = 12, seq: int = 16, seed: int = 0) -> list[tuple]:
             "loads": snap["loads"],
             "context_changes": snap["context_changes"],
         }
-        if mode == "speculative":
+        if mode != "continuous":
             results[mode]["accepted_tokens_per_step"] = snap[
                 "accepted_tokens_per_round"]
             results[mode]["verify_passes"] = snap["spec_rounds"]
@@ -126,6 +194,8 @@ def run(n_requests: int = 12, seq: int = 16, seed: int = 0) -> list[tuple]:
         for k, v in results[mode].items():
             note = (f"{n_requests} mixed-length greedy reqs, pool {POOL}, "
                     f"K={SPEC_K}" if k == "wall_s" else "")
+            if k == "wall_s" and mode == "tree":
+                note += ", tree W=2"
             rows.append((f"spec_{mode}_{k}", v, note))
 
     s = results["speculative"]
@@ -141,6 +211,24 @@ def run(n_requests: int = 12, seq: int = 16, seed: int = 0) -> list[tuple]:
                        / max(results["continuous"]["tok_per_s"], 1e-9), 2),
                  "speculative speedup over plain continuous (same-size "
                  "draft: measures engine overhead ceiling)"))
+    rows.append(("spec_paged_accepted_ge_dense",
+                 int(s["accepted_tokens_per_step"]
+                     >= DENSE_ACCEPTED_BASELINE),
+                 f"paged {s['accepted_tokens_per_step']} vs dense-row "
+                 f"baseline {DENSE_ACCEPTED_BASELINE} tokens/verify-step"))
+    peak, equiv = _run_concurrency()
+    rows.append(("spec_equal_mem_concurrency", round(peak / equiv, 2),
+                 f"{peak} concurrent rows on a bank sized for {equiv} "
+                 "dense max_len rows"))
+    rows.append(("spec_equal_mem_concurrency_2x", int(peak >= 2 * equiv),
+                 "paged columns serve >= 2x dense-row concurrency at "
+                 "equal memory"))
+    ks, ke = _run_adaptive(True, n_requests, seq, seed)
+    rows.append(("spec_adaptive_k_rises", int(ke > ks),
+                 f"aligned draft: K {ks} -> {ke} (ceiling {SPEC_K})"))
+    ks2, ke2 = _run_adaptive(False, n_requests, seq, seed)
+    rows.append(("spec_adaptive_k_falls", int(ke2 <= 2),
+                 f"mismatched draft: K {ks2} -> {ke2}"))
     return rows
 
 

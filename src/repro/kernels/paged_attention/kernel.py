@@ -186,10 +186,10 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, pos, *,
       jnp.asarray(page_table, jnp.int32), *operands)
 
 
-def _paged_verify_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kb_ref,
-                         vb_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                         scale: float, page: int, np_row: int, K: int,
-                         G: int):
+def _paged_verify_kernel(pos_ref, pt_ref, anc_ref, q_ref, k_ref, v_ref,
+                         kb_ref, vb_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, tree: bool, page: int, np_row: int,
+                         K: int, G: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
     pos = pos_ref[b]
@@ -233,16 +233,26 @@ def _paged_verify_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kb_ref,
                                 preferred_element_type=jnp.float32)
         qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
         jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        _fold(jnp.where(jj <= qi, s, NEG_INF),
-              vb_ref[0, 0].astype(jnp.float32))
+        if tree:
+            # tree verify: per-row ancestor bitmask from SMEM replaces
+            # the intra-block causal mask (see verify_attention/kernel.py)
+            anc_q = jnp.zeros_like(jj)
+            for i in range(K):
+                anc_q = jnp.where(qi == i, anc_ref[b, i], anc_q)
+            keep = jax.lax.shift_right_logical(anc_q, jj) & 1
+            _fold(jnp.where(keep == 1, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
+        else:
+            _fold(jnp.where(jj <= qi, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-def _paged_verify_kernel_q(pos_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref,
-                           vs_ref, kb_ref, vb_ref, o_ref, m_scr, l_scr,
-                           acc_scr, *, scale: float, page: int,
-                           np_row: int, K: int, G: int):
+def _paged_verify_kernel_q(pos_ref, pt_ref, anc_ref, q_ref, k_ref, v_ref,
+                           ks_ref, vs_ref, kb_ref, vb_ref, o_ref, m_scr,
+                           l_scr, acc_scr, *, scale: float, tree: bool,
+                           page: int, np_row: int, K: int, G: int):
     """int8-bank verify: cache pages dequantize in VMEM via the
     co-travelling (1, 1, page) scale tiles; the block's own K keys/values
     stay full precision (they have not been written to the pool yet)."""
@@ -288,21 +298,32 @@ def _paged_verify_kernel_q(pos_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref,
                                 preferred_element_type=jnp.float32)
         qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
         jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        _fold(jnp.where(jj <= qi, s, NEG_INF),
-              vb_ref[0, 0].astype(jnp.float32))
+        if tree:
+            anc_q = jnp.zeros_like(jj)
+            for i in range(K):
+                anc_q = jnp.where(qi == i, anc_ref[b, i], anc_q)
+            keep = jax.lax.shift_right_logical(anc_q, jj) & 1
+            _fold(jnp.where(keep == 1, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
+        else:
+            _fold(jnp.where(jj <= qi, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
 def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
                                   pos, *, scale: float | None = None,
-                                  k_scale=None, v_scale=None,
+                                  k_scale=None, v_scale=None, tree=None,
                                   interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, K*G, hd) — row r is query r//G of kv head h;
     k_pages/v_pages: (NP, Hkv, page, hd) shared pool BEFORE the block's
     writes; kb/vb: (B, Hkv, K, hd) block keys/values; page_table: (B, P)
     int32; pos: (B,) int32 base positions.  ``k_scale``/``v_scale``
-    ((NP, Hkv, page) f32) select the int8 bank path."""
+    ((NP, Hkv, page) f32) select the int8 bank path.  ``tree``
+    ((B, K) int32 ancestor bitmasks) replaces the intra-block causal
+    mask with per-row tree visibility (bit j of ``tree[b, i]`` = block
+    token j visible to block query i)."""
     B, Hkv, KG, hd = q.shape
     K = kb.shape[2]
     assert KG % K == 0, (KG, K)
@@ -312,36 +333,47 @@ def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
     quantized = k_scale is not None
+    if tree is None:
+        anc = jnp.zeros((B, 1), jnp.int32)
+        is_tree = False
+    else:
+        assert K <= 31, K  # bitmask lives in a non-negative int32
+        anc = jnp.asarray(tree, jnp.int32)
+        assert anc.shape == (B, K), (anc.shape, B, K)
+        is_tree = True
 
-    page_spec = pl.BlockSpec((1, 1, page, hd),
-                             lambda b, h, j, pos, pt: (pt[b, j], h, 0, 0))
+    page_spec = pl.BlockSpec(
+        (1, 1, page, hd),
+        lambda b, h, j, pos, pt, anc: (pt[b, j], h, 0, 0))
     blk_spec = pl.BlockSpec((1, 1, K, hd),
-                            lambda b, h, j, pos, pt: (b, h, 0, 0))
+                            lambda b, h, j, pos, pt, anc: (b, h, 0, 0))
     in_specs = [
         pl.BlockSpec((1, 1, KG, hd),
-                     lambda b, h, j, pos, pt: (b, h, 0, 0)),
+                     lambda b, h, j, pos, pt, anc: (b, h, 0, 0)),
         page_spec,
         page_spec,
     ]
     operands = [q, k_pages, v_pages]
     if quantized:
         kernel = functools.partial(_paged_verify_kernel_q, scale=scale,
-                                   page=page, np_row=P, K=K, G=G)
+                                   tree=is_tree, page=page, np_row=P,
+                                   K=K, G=G)
         scale_spec = pl.BlockSpec(
-            (1, 1, page), lambda b, h, j, pos, pt: (pt[b, j], h, 0))
+            (1, 1, page), lambda b, h, j, pos, pt, anc: (pt[b, j], h, 0))
         in_specs += [scale_spec, scale_spec]
         operands += [k_scale, v_scale]
     else:
         kernel = functools.partial(_paged_verify_kernel, scale=scale,
-                                   page=page, np_row=P, K=K, G=G)
+                                   tree=is_tree, page=page, np_row=P,
+                                   K=K, G=G)
     in_specs += [blk_spec, blk_spec]
     operands += [kb, vb]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, P),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, KG, hd),
-                               lambda b, h, j, pos, pt: (b, h, 0, 0)),
+                               lambda b, h, j, pos, pt, anc: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KG, 1), jnp.float32),
             pltpu.VMEM((KG, 1), jnp.float32),
@@ -357,4 +389,4 @@ def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
         interpret=interpret,
         name="paged_verify_attention",
     )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
-      jnp.asarray(page_table, jnp.int32), *operands)
+      jnp.asarray(page_table, jnp.int32), anc, *operands)

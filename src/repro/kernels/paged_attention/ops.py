@@ -48,7 +48,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
                            pos, *, scale: float | None = None,
-                           k_scale=None, v_scale=None,
+                           k_scale=None, v_scale=None, tree=None,
                            interpret: bool | None = None) -> jax.Array:
     """q: (B, K, H, hd); pool holds the cache BEFORE the block's writes;
     blk_k/blk_v: (B, K, Hkv, hd); page_table: (B, P); pos: () or (B,)
@@ -58,7 +58,10 @@ def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
     paged cache (positions <= pos[b]-1, resolved through the page table)
     plus block tokens j <= i — the same cache-plus-block split as
     ``verify_attention``, which keeps the pass loop-exact.  Full
-    attention only (the paged engine gates ring caches out)."""
+    attention only (the paged engine gates ring caches out).  ``tree``
+    ((B, K) int32 ancestor bitmasks) swaps the intra-block causal mask
+    for per-row tree visibility so several candidate branches verify in
+    one pass."""
     if interpret is None:
         interpret = not _on_tpu()
     B, K, H, hd = q.shape
@@ -71,7 +74,7 @@ def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
     out = paged_verify_attention_kernel(qg, k_pages, v_pages, kb, vb,
                                         page_table, pos, scale=scale,
                                         k_scale=k_scale, v_scale=v_scale,
-                                        interpret=interpret)
+                                        tree=tree, interpret=interpret)
     return (out.reshape(B, Hkv, K, G, hd).transpose(0, 2, 1, 3, 4)
             .reshape(B, K, H, hd))
 

@@ -67,11 +67,13 @@ def paged_decode_reference(q, k_pages, v_pages, page_table, pos, *,
 
 def paged_verify_reference(q, k_pages, v_pages, blk_k, blk_v, page_table,
                            pos, *, scale: float | None = None,
-                           k_scale=None, v_scale=None):
+                           k_scale=None, v_scale=None, tree=None):
     """q: (B, K, H, hd); blk_k/blk_v: (B, K, Hkv, hd) block keys/values;
     the pool holds the cache BEFORE the block's writes -> (B, K, H, hd).
     ``k_scale``/``v_scale`` dequantize an int8 bank (the block k/v stay
-    full precision — they have not been written yet)."""
+    full precision — they have not been written yet).  ``tree``
+    ((B, K) int32 ancestor bitmasks) selects per-row tree visibility in
+    place of the intra-block causal mask."""
     if k_scale is not None:
         k = _dequant(k_pages, k_scale, page_table)
         v = _dequant(v_pages, v_scale, page_table)
@@ -79,4 +81,4 @@ def paged_verify_reference(q, k_pages, v_pages, blk_k, blk_v, page_table,
         k = gather_pages(k_pages, page_table)
         v = gather_pages(v_pages, page_table)
     return verify_reference(q, k, v, blk_k, blk_v, pos, ring=False,
-                            scale=scale)
+                            scale=scale, tree=tree)

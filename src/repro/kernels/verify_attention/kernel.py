@@ -36,9 +36,10 @@ NEG_INF = -1e30
 DEFAULT_BK = 512
 
 
-def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kb_ref, vb_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float, ring: bool,
-                   bk: int, nk: int, S: int, K: int, G: int):
+def _verify_kernel(pos_ref, anc_ref, q_ref, k_ref, v_ref, kb_ref, vb_ref,
+                   o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                   ring: bool, tree: bool, bk: int, nk: int, S: int,
+                   K: int, G: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
     pos = pos_ref[b]
@@ -90,8 +91,21 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kb_ref, vb_ref, o_ref,
                                 preferred_element_type=jnp.float32)
         qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
         jj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        _fold(jnp.where(jj <= qi, s, NEG_INF),
-              vb_ref[0, 0].astype(jnp.float32))
+        if tree:
+            # per-row ancestor bitmask: block column j is visible to block
+            # query qi iff bit j of anc[b, qi] is set.  The bitmask rides
+            # scalar prefetch (SMEM) like pos; the unroll over the K block
+            # queries turns it into a per-score-row int32 whose bits the
+            # iota extracts — no extra VMEM operand, no layout change.
+            anc_q = jnp.zeros_like(jj)
+            for i in range(K):
+                anc_q = jnp.where(qi == i, anc_ref[b, i], anc_q)
+            keep = jax.lax.shift_right_logical(anc_q, jj) & 1
+            _fold(jnp.where(keep == 1, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
+        else:
+            _fold(jnp.where(jj <= qi, s, NEG_INF),
+                  vb_ref[0, 0].astype(jnp.float32))
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
@@ -99,10 +113,15 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kb_ref, vb_ref, o_ref,
 def verify_attention_kernel(q, k, v, kb, vb, pos, *, ring: bool = False,
                             scale: float | None = None,
                             block_k: int = DEFAULT_BK,
+                            tree=None,
                             interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, K*G, hd) — row r is query r//G of kv head h; k/v:
     (B, Hkv, S, hd) cache BEFORE the block's writes; kb/vb:
-    (B, Hkv, K, hd) block keys/values; pos: (B,) int32 base positions."""
+    (B, Hkv, K, hd) block keys/values; pos: (B,) int32 base positions.
+    ``tree`` ((B, K) int32 ancestor bitmasks, bit j of row i = block
+    token j visible to block query i) replaces the intra-block causal
+    mask so several candidate branches verify in one pass; the cache
+    side is unchanged (every tree node descends from position pos-1)."""
     B, Hkv, KG, hd = q.shape
     S = k.shape[2]
     K = kb.shape[2]
@@ -113,21 +132,35 @@ def verify_attention_kernel(q, k, v, kb, vb, pos, *, ring: bool = False,
     nk = S // bk
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
+    if tree is None:
+        anc = jnp.zeros((B, 1), jnp.int32)
+        is_tree = False
+    else:
+        assert not ring, "tree verify is full-attention only"
+        assert K <= 31, K  # bitmask lives in a non-negative int32
+        anc = jnp.asarray(tree, jnp.int32)
+        assert anc.shape == (B, K), (anc.shape, B, K)
+        is_tree = True
 
     kernel = functools.partial(_verify_kernel, scale=scale, ring=ring,
-                               bk=bk, nk=nk, S=S, K=K, G=G)
+                               tree=is_tree, bk=bk, nk=nk, S=S, K=K, G=G)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, Hkv, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, KG, hd), lambda b, h, j, pos: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, K, hd), lambda b, h, j, pos: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, K, hd), lambda b, h, j, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, KG, hd),
+                         lambda b, h, j, pos, anc: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, pos, anc: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, pos, anc: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, K, hd),
+                         lambda b, h, j, pos, anc: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, K, hd),
+                         lambda b, h, j, pos, anc: (b, h, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, KG, hd),
-                               lambda b, h, j, pos: (b, h, 0, 0)),
+                               lambda b, h, j, pos, anc: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KG, 1), jnp.float32),
             pltpu.VMEM((KG, 1), jnp.float32),
@@ -142,4 +175,5 @@ def verify_attention_kernel(q, k, v, kb, vb, pos, *, ring: bool = False,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="verify_attention",
-    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)), q, k, v, kb, vb)
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)), anc,
+      q, k, v, kb, vb)

@@ -18,6 +18,7 @@ def _on_tpu() -> bool:
                                              "interpret"))
 def verify_attention(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
                      scale: float | None = None, block_k: int = DEFAULT_BK,
+                     tree=None,
                      interpret: bool | None = None) -> jax.Array:
     """q: (B, K, H, hd); k/v: (B, Hkv, S, hd) cache BEFORE the block's
     writes; blk_k/blk_v: (B, K, Hkv, hd) block keys/values; pos: () or
@@ -31,6 +32,11 @@ def verify_attention(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
 
     Like ``decode_attention``, the cache length is kept block-aligned by
     shrinking the block rather than padding (ring caches must not pad).
+
+    ``tree`` ((B, K) int32 ancestor bitmasks) swaps the intra-block
+    causal mask for per-row tree visibility: bit j of ``tree[b, i]``
+    makes block token j visible to block query i, so several candidate
+    branches verify in one pass (full attention only).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -47,7 +53,7 @@ def verify_attention(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
     kb = blk_k.swapaxes(1, 2)                       # (B, Hkv, K, hd)
     vb = blk_v.swapaxes(1, 2)
     out = verify_attention_kernel(qg, k, v, kb, vb, pos, ring=ring,
-                                  scale=scale, block_k=bk,
+                                  scale=scale, block_k=bk, tree=tree,
                                   interpret=interpret)
     return (out.reshape(B, Hkv, K, G, hd).transpose(0, 2, 1, 3, 4)
             .reshape(B, K, H, hd))

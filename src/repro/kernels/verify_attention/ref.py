@@ -31,13 +31,19 @@ NEG_INF = -1e30
 
 
 def verify_reference(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
-                     scale: float | None = None) -> jax.Array:
+                     scale: float | None = None, tree=None) -> jax.Array:
+    """``tree`` ((B, K) int32, optional): per-row ancestor bitmasks for
+    tree verification — bit j of ``tree[b, i]`` makes block token j
+    visible to block query i, replacing the intra-block causal mask.
+    The cache side is unchanged (every tree node descends from position
+    pos-1, so all of them see the full cache < pos)."""
     B, K, H, hd = q.shape
     Hkv, S = k.shape[1], k.shape[2]
     assert H % Hkv == 0
     assert blk_k.shape == (B, K, Hkv, hd), blk_k.shape
     if ring:
         assert K <= S, (K, S)
+        assert tree is None, "tree verify is full-attention only"
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
     G = H // Hkv
@@ -61,8 +67,13 @@ def verify_reference(q, k, v, blk_k, blk_v, pos, *, ring: bool = False,
     kb = blk_k.transpose(0, 2, 1, 3).astype(jnp.float32)    # (B, Hkv, K, hd)
     vb = blk_v.transpose(0, 2, 1, 3).astype(jnp.float32)
     s_b = jnp.einsum("bnigd,bnjd->bnigj", qh, kb) * scale
-    causal = jnp.arange(K)[None, :] <= jnp.arange(K)[:, None]   # (K, K) j<=i
-    s_b = jnp.where(causal[None, None, :, None, :], s_b, NEG_INF)
+    if tree is None:
+        causal = jnp.arange(K)[None, :] <= jnp.arange(K)[:, None]  # j <= i
+        s_b = jnp.where(causal[None, None, :, None, :], s_b, NEG_INF)
+    else:
+        t = jnp.broadcast_to(jnp.asarray(tree, jnp.int32), (B, K))
+        vis = ((t[:, :, None] >> jnp.arange(K)[None, None, :]) & 1) == 1
+        s_b = jnp.where(vis[:, None, :, None, :], s_b, NEG_INF)
 
     # joint softmax across cache + block (flash-decode combine)
     s = jnp.concatenate([s_c, s_b], axis=-1)                # (B,Hkv,K,G,S+K)

@@ -112,7 +112,18 @@ def main(argv=None) -> int:
                          "one of --archs; the remaining archs become "
                          "verify targets)")
     ap.add_argument("--spec-k", type=int, default=4,
-                    help="speculative mode: draft tokens per round")
+                    help="speculative mode: draft tokens per round (the "
+                         "adaptive ceiling when --spec-adaptive is set)")
+    ap.add_argument("--spec-tree", type=int, default=1,
+                    help="speculative mode: sibling candidates per draft "
+                         "depth — 1 is the flat chain; W>1 verifies a "
+                         "token tree so a rejected chain can still "
+                         "commit an accepted sibling (needs "
+                         "1 + K*W <= 31 tree nodes)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="speculative mode: let the scheduler walk each "
+                         "engine's K inside [1, --spec-k] from the "
+                         "measured acceptance rate (EWMA, hysteresis)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="continuous mode: admit prompts in fixed-size "
                          "chunks of this many tokens, one chunk per step "
@@ -167,14 +178,40 @@ def main(argv=None) -> int:
                          "registry snapshot (one JSON line to stderr) "
                          "every SECONDS; 0 disables")
     args = ap.parse_args(argv)
-    if args.quantize_kv != "none" and not args.paged:
+    if args.quantize_kv != "none" and not args.paged \
+            and args.mode != "speculative":
         ap.error("--quantize-kv targets the shared page bank: it "
-                 "requires --paged")
-    if args.prefix_cache and not args.paged:
+                 "requires --paged (or --mode speculative, whose cache "
+                 "columns are always paged)")
+    if args.prefix_cache and not args.paged \
+            and args.mode != "speculative":
         ap.error("--prefix-cache shares pages of the pooled bank: it "
-                 "requires --paged")
+                 "requires --paged (or --mode speculative, whose target "
+                 "column is always paged)")
     if args.multi_step < 1:
         ap.error("--multi-step must be >= 1")
+    if args.spec_k < 1:
+        ap.error("--spec-k must be >= 1 (one drafted token per round is "
+                 "the minimum speculative step)")
+    if args.spec_tree < 1:
+        ap.error("--spec-tree must be >= 1 (1 is the flat chain)")
+    if args.mode == "speculative":
+        if args.draft is None:
+            ap.error("--mode speculative requires --draft: name the "
+                     "context that proposes tokens (the remaining "
+                     "--archs become verify targets)")
+        if 1 + args.spec_k * args.spec_tree > 31:
+            ap.error(f"--spec-k {args.spec_k} with --spec-tree "
+                     f"{args.spec_tree} needs 1 + K*W <= 31 tree nodes "
+                     "(ancestor masks live in an int32 bitmask); lower "
+                     "one of them")
+    else:
+        if args.draft is not None:
+            ap.error("--draft only applies to --mode speculative")
+        if args.spec_tree != 1:
+            ap.error("--spec-tree only applies to --mode speculative")
+        if args.spec_adaptive:
+            ap.error("--spec-adaptive only applies to --mode speculative")
 
     names = args.archs.split(",")
     slack = args.spec_k if args.mode == "speculative" else 0
@@ -200,8 +237,8 @@ def main(argv=None) -> int:
     draft_map = {}
     if args.mode == "speculative":
         if args.draft not in names:
-            raise SystemExit(f"--draft {args.draft!r} must be one of "
-                             f"--archs {names}")
+            ap.error(f"--draft {args.draft!r} must be one of "
+                     f"--archs {names}")
         targets = [n for n in names if n != args.draft]
         draft_map = {t: args.draft for t in targets}
         reqs = list(request_stream(targets, cfgs, args.requests,
@@ -215,7 +252,8 @@ def main(argv=None) -> int:
         sched_cls = (SwitchScheduler if args.mode == "queue" else
                      lambda s: ContinuousScheduler(
                          s, batch_size=args.pool, draft=draft_map,
-                         spec_k=args.spec_k,
+                         spec_k=args.spec_k, spec_tree=args.spec_tree,
+                         spec_adaptive=args.spec_adaptive,
                          prefill_chunk=args.prefill_chunk,
                          paged=args.paged, page_size=args.page_size,
                          multi_step=args.multi_step,

@@ -534,7 +534,8 @@ def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
 
 
 def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
-                           cfg: ArchConfig, wmask=None):
+                           cfg: ArchConfig, wmask=None, offsets=None,
+                           tree=None):
     """Multi-token verify/chunk decode against the shared page pool.
 
     x: (B, K, D) block tokens at positions ``pos[b] .. pos[b]+K-1``;
@@ -545,10 +546,21 @@ def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
     route to the park page).  No fresh-row zeroing is needed: a page is
     written by its owner before any of its positions become readable
     (reads mask ``cols < pos``), so a recycled page's stale content can
-    never leak into a new request."""
+    never leak into a new request.
+
+    Tree verification: ``offsets`` ((K,) int32, optional) replaces the
+    default ``arange(K)`` position offsets with per-node tree depths
+    (RoPE and write slots), and ``tree`` ((B, K) int32 ancestor
+    bitmasks) replaces the intra-block causal mask — bit j of
+    ``tree[b, i]`` makes block token j visible to block query i.
+    Sibling branches share a depth, so the caller MUST park all but one
+    writer per depth through ``wmask`` (the scatter has one slot per
+    position)."""
     B, K, _ = x.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-    positions = pos[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    if offsets is None:
+        offsets = jnp.arange(K, dtype=jnp.int32)
+    positions = pos[:, None] + jnp.asarray(offsets, jnp.int32)[None]
     q, k, v = _qkv(params, x, positions, cfg)     # q: (B,K,H,hd)
 
     import repro.kernels as kernels
@@ -557,16 +569,17 @@ def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
         interp = None if kernels.get_mode() == "auto" else True
         out = paged_verify_attention(q, cache.k, cache.v, k, v, tables,
                                      pos, k_scale=cache.ks,
-                                     v_scale=cache.vs, interpret=interp)
+                                     v_scale=cache.vs, tree=tree,
+                                     interpret=interp)
     elif cache.ks is not None:
         from repro.kernels.verify_attention.ref import verify_reference
         kg, vg = _gather_dequant(cache, tables, x.dtype)
-        out = verify_reference(q, kg, vg, k, v, pos, ring=False)
+        out = verify_reference(q, kg, vg, k, v, pos, ring=False, tree=tree)
     else:
         from repro.kernels.verify_attention.ref import verify_reference
         kg = _gather_pages(cache.k, tables)
         vg = _gather_pages(cache.v, tables)
-        out = verify_reference(q, kg, vg, k, v, pos, ring=False)
+        out = verify_reference(q, kg, vg, k, v, pos, ring=False, tree=tree)
 
     cache = _page_write(cache, k, v, tables, positions, wmask=wmask)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

@@ -172,7 +172,8 @@ class LM:
         return "chunkwise" if (L % c == 0 and L > c) else "parallel"
 
     def _apply_block(self, typ, p, x, positions, mode, pos, cache,
-                     big=None, max_len=None, wmask=None, tables=None):
+                     big=None, max_len=None, wmask=None, tables=None,
+                     offsets=None, tree=None):
         """One block.  Returns (x, new_cache, aux).
 
         ``max_len`` (prefill mode) and ``wmask`` (verify mode; see
@@ -186,7 +187,9 @@ class LM:
         attention cache to the shared page pool: ``cache`` is then a
         ``layers.PagedKV`` bank addressed through the per-row page
         tables, and ``wmask`` gates writes for decode too (non-live rows
-        park).
+        park).  ``offsets``/``tree`` (paged verify only) select tree
+        verification — per-node depth offsets and per-row ancestor
+        bitmasks; see ``layers.attention_verify_pages``.
         """
         cfg = self.cfg
         mixer, ffn = typ
@@ -203,7 +206,9 @@ class LM:
             if mode == "verify":
                 a, nc = layers.attention_verify_pages(p["attn"], h, pos,
                                                       cache, tables, cfg,
-                                                      wmask=wmask)
+                                                      wmask=wmask,
+                                                      offsets=offsets,
+                                                      tree=tree)
             else:
                 assert mode == "decode", mode
                 a, nc = layers.attention_decode_pages(p["attn"], h, pos,
@@ -263,7 +268,7 @@ class LM:
 
     def _run_blocks(self, params, x, positions, mode, pos, caches,
                     remat: bool = False, max_len: int | None = None,
-                    wmask=None, tables=None):
+                    wmask=None, tables=None, offsets=None, tree=None):
         """Scan over repeats; python-unrolled period inside the body."""
         pattern = self.pattern
 
@@ -277,7 +282,8 @@ class LM:
                 x, nc, a = self._apply_block(typ, params_r[key], x,
                                              positions, mode, pos, c,
                                              max_len=max_len, wmask=wmask,
-                                             tables=tables)
+                                             tables=tables, offsets=offsets,
+                                             tree=tree)
                 new_caches[key] = nc
                 aux = aux + a
             if mode == "train":
@@ -492,7 +498,8 @@ class LM:
         return self._head(params, x), caches
 
     def verify_step_pages(self, params, caches, tokens, pos, tables,
-                          wmask=None, need_logits: bool = True):
+                          wmask=None, need_logits: bool = True,
+                          offsets=None, tree=None):
         """Multi-token verify against the shared page pool — one (b, K)
         block scored at per-row offsets ``pos .. pos+K-1`` through the
         rows' page tables, k/v written into the rows' own pages.  Serves
@@ -503,14 +510,20 @@ class LM:
         whole cache rows and no fresh-row zeroing: writes touch exactly
         the block's positions (O(K), not O(max_len)), and a recycled
         page is always rewritten before any of its positions become
-        readable (reads mask ``cols < pos``)."""
+        readable (reads mask ``cols < pos``).
+
+        Tree verification (``SpecEngine(tree_width > 1)``): ``offsets``
+        ((K,) int32 per-node depths) and ``tree`` ((B, K) int32 ancestor
+        bitmasks) verify several candidate branches in one pass — the
+        caller parks all but one writer per depth via ``wmask``."""
         cfg = self.cfg
         tables = jnp.asarray(tables, jnp.int32)
         pos = jnp.asarray(pos, jnp.int32)
         x = self._embed_in(params, tokens)
         x, aux, caches = self._run_blocks(params, x, None, "verify", pos,
                                           caches, wmask=wmask,
-                                          tables=tables)
+                                          tables=tables, offsets=offsets,
+                                          tree=tree)
         logits = None
         if need_logits:
             x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),

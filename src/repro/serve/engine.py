@@ -36,12 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
-from repro.serve.pool import Generation, PagePool, PrefixIndex, SlotPool
+from repro.serve.pool import (Generation, PagePool, PrefixIndex, SharedBank,
+                              SlotPool)
 from repro.serve.telemetry import Telemetry, safe_ratio
 
 __all__ = ["DecodeState", "EngineKey", "Generation", "PagePool",
-           "PrefixIndex", "ServeStats", "ServingEngine", "SlotPool",
-           "StepEngine"]
+           "PrefixIndex", "ServeStats", "ServingEngine", "SharedBank",
+           "SlotPool", "StepEngine"]
 
 
 class EngineKey(NamedTuple):
@@ -62,6 +63,7 @@ class EngineKey(NamedTuple):
     multi_step: int = 1
     quantize_kv: Optional[str] = None
     prefix_cache: bool = False
+    shared_bank: bool = False           # pages/prefixes from a SharedBank
 
 
 class ServeStats:
@@ -252,6 +254,7 @@ class StepEngine(SlotPool):
                  multi_step: int = 1,
                  quantize_kv: Optional[str] = None,
                  prefix_cache: bool = False,
+                 bank: Optional[SharedBank] = None,
                  telemetry: Optional[Telemetry] = None):
         self.model = model
         telemetry = telemetry if telemetry is not None else Telemetry()
@@ -291,6 +294,10 @@ class StepEngine(SlotPool):
 
         # ---- paged slot pool: per-slot page tables over one shared bank
         self.paged = paged
+        if bank is not None and not paged:
+            raise ValueError(
+                "a shared bank IS a page pool: it needs paged=True")
+        self._bank = bank
         if paged:
             model._require_paged_support()   # all-attention, non-ring
             page_size = min(page_size, max_len)
@@ -302,17 +309,28 @@ class StepEngine(SlotPool):
                     "cache elementwise for the identity guarantees)")
             self.page_size = page_size
             self.pages_per_row = max_len // page_size
-            if num_pages is None:
-                # capacity parity with the row layout: every slot can
-                # always hold a worst-case row (+1 park page)
-                num_pages = batch_size * self.pages_per_row + 1
-            if num_pages < self.pages_per_row + 1:
-                raise ValueError(
-                    f"num_pages {num_pages} cannot hold one worst-case "
-                    f"row ({self.pages_per_row} pages) plus the park "
-                    "page")
-            self.num_pages = num_pages
-            self._pages = PagePool(num_pages, telemetry=telemetry)
+            if bank is not None:
+                # the bank's creator sized the pool; this engine just
+                # allocates from it alongside its sibling engines
+                if bank.pool.total_pages < self.pages_per_row + 1:
+                    raise ValueError(
+                        f"shared bank of {bank.pool.total_pages} pages "
+                        f"cannot hold one worst-case row "
+                        f"({self.pages_per_row} pages) plus the park page")
+                self.num_pages = bank.pool.total_pages
+                self._pages = bank.pool
+            else:
+                if num_pages is None:
+                    # capacity parity with the row layout: every slot can
+                    # always hold a worst-case row (+1 park page)
+                    num_pages = batch_size * self.pages_per_row + 1
+                if num_pages < self.pages_per_row + 1:
+                    raise ValueError(
+                        f"num_pages {num_pages} cannot hold one worst-case "
+                        f"row ({self.pages_per_row} pages) plus the park "
+                        "page")
+                self.num_pages = num_pages
+                self._pages = PagePool(num_pages, telemetry=telemetry)
         else:
             self.page_size = None
             self.pages_per_row = 0
@@ -325,9 +343,18 @@ class StepEngine(SlotPool):
         self.prefix_cache = prefix_cache
         # int8 codes are a lossy function of the same source tokens:
         # namespacing keeps fp16/int8 entries from ever cross-matching
-        self._prefix = (PrefixIndex(self.page_size,
-                                    namespace=quantize_kv or "fp16")
-                        if prefix_cache else None)
+        if not prefix_cache:
+            self._prefix = None
+        elif bank is not None:
+            # one index per bank: prefixes another engine of this bank
+            # indexed are hits here — the pages are the same pool
+            if bank.index is None:
+                bank.index = PrefixIndex(self.page_size,
+                                         namespace=quantize_kv or "fp16")
+            self._prefix = bank.index
+        else:
+            self._prefix = PrefixIndex(self.page_size,
+                                       namespace=quantize_kv or "fp16")
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
 
@@ -579,17 +606,40 @@ class StepEngine(SlotPool):
         next admission overwrites in full, so only the first reset pays
         the allocation (generate() resets per call — keep it cheap)."""
         B = self.batch_size
+        # a private page pool just resets; a shared bank keeps serving
+        # the OTHER engines, so only this engine's own rows release
+        if self._bank is not None:
+            own = []
+            for g in self.slots:
+                if g is not None and g.pages:
+                    own += g.pages
+                    g.pages = None
+            for ps in self._pending:
+                for g in ps.gens:
+                    if g.pages:
+                        own += g.pages
+                        g.pages = None
+            if own:
+                self._pages.release(own)
+        elif self._pages is not None:
+            self._pages.reset()
+        if self._bank is None and self._prefix is not None:
+            self._prefix.clear()     # its pages just left the allocator
         caches = None
         if self.state is not None and not any(
                 getattr(x, "is_deleted", lambda: False)()
                 for x in jax.tree.leaves(self.state.caches)):
             caches = self.state.caches   # reuse, unless a failed step
+        if self._bank is not None and self._bank.caches is not None:
+            caches = self._bank.caches   # the bank copy is authoritative
         if caches is None:               # donated them out from under us
             caches = (self.model.init_page_pool(
                           self.num_pages, self.page_size,
                           quantized=self.quantize_kv is not None)
                       if self.paged else
                       self.model.init_cache(B, self.max_len))
+        if self._bank is not None:
+            self._bank.caches = caches
         self.state = DecodeState(
             caches=caches,
             tok=jnp.zeros((B, 1), jnp.int32),
@@ -602,10 +652,6 @@ class StepEngine(SlotPool):
             # the safe default — empty slots read/write garbage space
             table=jnp.zeros((B, self.pages_per_row), jnp.int32))
         self._pool_reset()
-        if self._pages is not None:
-            self._pages.reset()
-        if self._prefix is not None:
-            self._prefix.clear()     # its pages just left the allocator
         self._pending.clear()
         self._jumps = 0
 
@@ -613,6 +659,20 @@ class StepEngine(SlotPool):
         if self.runner is None:
             return fn(params, *args)
         return self.runner(fn, params, *args)
+
+    def _bank_pull(self):
+        """Adopt the bank's current pages: another engine's jitted call
+        may have donated the buffers this state still references."""
+        if (self._bank is not None and self._bank.caches is not None
+                and self.state is not None
+                and self._bank.caches is not self.state.caches):
+            self.state = self.state._replace(caches=self._bank.caches)
+
+    def _bank_push(self):
+        """Publish the (possibly donated-and-replaced) pages back to the
+        bank for the next engine."""
+        if self._bank is not None and self.state is not None:
+            self._bank.caches = self.state.caches
 
     # -------------------------------------------------------------- queries
     def pending_slots(self) -> int:
@@ -787,6 +847,15 @@ class StepEngine(SlotPool):
         pins that row to its own key column, making its draws reproducible
         independent of slot, admission boundary, and surrounding traffic.
         """
+        self._bank_pull()
+        try:
+            return self._admit_dispatch(params, tokens, max_new, metas,
+                                        seeds, submitted_at)
+        finally:
+            self._bank_push()
+
+    def _admit_dispatch(self, params, tokens, max_new, metas, seeds,
+                        submitted_at) -> list[Generation]:
         tokens, rkeys, seeded = self._admit_args(tokens, metas, seeds)
         b, S = tokens.shape
         if S + max_new > self.max_len:
@@ -1005,6 +1074,13 @@ class StepEngine(SlotPool):
         token)."""
         if not self._pending:
             return []
+        self._bank_pull()
+        try:
+            return self._prefill_tick_impl(params)
+        finally:
+            self._bank_push()
+
+    def _prefill_tick_impl(self, params) -> list[Generation]:
         C = self.prefill_chunk
         if self.admit_jump_limit:
             self._promote_pending()
@@ -1132,8 +1208,15 @@ class StepEngine(SlotPool):
         finished = self.prefill_tick(params) if self._pending else []
         if not self._live.any():
             return finished
+        self._bank_pull()
+        try:
+            return finished + self._step_live(params)
+        finally:
+            self._bank_push()
+
+    def _step_live(self, params) -> list[Generation]:
         if self.multi_step > 1 and not self._pending:
-            return finished + self._step_multi(params)
+            return self._step_multi(params)
         t0 = self.telemetry.clock()
         nxt, self.state = self._call(self._step_fn, params, self.state,
                                      jnp.asarray(self._live))
@@ -1150,7 +1233,7 @@ class StepEngine(SlotPool):
             stepped.append(g)
         self.stats["tokens_out"] += len(stepped)
         self._note_tick(t0, now, 1, len(stepped))
-        return finished + self._retire_done(stepped)
+        return self._retire_done(stepped)
 
     def _step_multi(self, params) -> list[Generation]:
         """The fused tick: ship every live row's remaining-token budget

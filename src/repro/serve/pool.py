@@ -305,6 +305,26 @@ class PrefixIndex:
         self._root = {}
 
 
+@dataclass
+class SharedBank:
+    """One shared paged-KV bank: the allocator, the prefix index, and the
+    device cache pytree, shared by every engine serving the same context
+    content.
+
+    Keyed by *bank content* — (context name, page size, kv format) — not
+    by pool shape: a batch-8 plain engine, a batch-2 engine, and a
+    speculative target column over the same weights all read/write the
+    same pages, so a prompt one of them indexed is a prefix hit for all
+    of them.  ``caches`` starts ``None``; the first engine to reset
+    populates it.  Engines must re-read ``caches`` at every public entry
+    point and write it back after device calls: jitted programs donate
+    the buffers, so any reference held across another engine's call is
+    stale."""
+    pool: PagePool
+    index: Optional[PrefixIndex] = None
+    caches: Any = None
+
+
 class SlotPool:
     """Mixin: host-side slot pool for a fixed-shape device batch.
 

@@ -37,6 +37,7 @@ forward pass; everything else is served back-to-back after a single switch.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import defaultdict, deque
@@ -48,6 +49,7 @@ import jax
 import numpy as np
 
 from repro.serve.engine import EngineKey
+from repro.serve.speculative import SpecKey
 from repro.serve.telemetry import Telemetry, safe_ratio
 
 # request-level histograms surfaced by every scheduler snapshot
@@ -386,11 +388,13 @@ class ContinuousScheduler:
                  age_weight: float = 10.0, cost_weight: float = 1.0,
                  switch_margin: float = 1.5, preempt_margin: float = 6.0,
                  draft: Optional[dict] = None, spec_k: int = 4,
+                 spec_tree: int = 1, spec_adaptive: bool = False,
                  prefill_chunk: Optional[int] = None,
                  paged: bool = False, page_size: int = 256,
                  multi_step: int = 1,
                  quantize_kv: Optional[str] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 share_bank: bool = False):
         self.server = server
         self.batch_size = batch_size
         # device-resident multi-step decode: each engine tick runs up to
@@ -407,10 +411,10 @@ class ContinuousScheduler:
         self.prefix_cache = prefix_cache
         if prefix_cache and not paged:
             raise ValueError("prefix_cache needs paged=True")
-        # chunked admission: plain contexts' engines split prefill into
-        # (b, C) chunks, one per tick, so a long prompt's admission hides
-        # behind decode steps instead of stalling them (speculative
-        # contexts keep one-shot admission)
+        # chunked admission: engines split prefill into (b, C) chunks,
+        # one per tick, so a long prompt's admission hides behind decode
+        # steps instead of stalling them (speculative engines chunk BOTH
+        # cache columns)
         self.prefill_chunk = prefill_chunk
         # paged slot pool: plain contexts' engines pool KV pages across
         # slots (per-request memory ∝ its own length, not max_len), so
@@ -424,6 +428,23 @@ class ContinuousScheduler:
         self.preempt_margin = preempt_margin
         self.draft = dict(draft or {})
         self.spec_k = spec_k
+        # speculative tree width (siblings per depth; 1 == flat chain)
+        if spec_tree < 1:
+            raise ValueError(f"spec_tree must be >= 1, got {spec_tree}")
+        self.spec_tree = spec_tree
+        # acceptance-driven adaptive K: EWMA the measured per-tick
+        # acceptance fraction and walk each spec engine's K inside
+        # [1, spec_k] (spec_k is the ceiling — admission slack, program
+        # cache, and submit validation all use it)
+        self.spec_adaptive = spec_adaptive
+        self._accept_ewma: dict[str, float] = {}
+        self._spec_prev: dict[str, tuple[int, int]] = {}
+        # shared page banks: engines of the same context content (plain
+        # paged pools and spec target columns) allocate from one pool and
+        # share one prefix index
+        if share_bank and not paged:
+            raise ValueError("share_bank needs paged=True")
+        self.share_bank = share_bank
         self._queues: dict[str, deque[_Request]] = defaultdict(deque)
         self._inflight: dict[int, _Inflight] = {}
         self._inflight_seq = 0          # monotonic key: ids recycle, this
@@ -546,7 +567,8 @@ class ContinuousScheduler:
                                       page_size=self.page_size,
                                       multi_step=self.multi_step,
                                       quantize_kv=self.quantize_kv,
-                                      prefix_cache=self.prefix_cache)
+                                      prefix_cache=self.prefix_cache,
+                                      share_bank=self.share_bank)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -558,8 +580,14 @@ class ContinuousScheduler:
 
     def _spec_engine(self, name: str):
         dname = self.draft[name]
-        eng = self.server.spec_engine(name, dname, self.batch_size,
-                                      k=self.spec_k)
+        eng = self.server.spec_engine(
+            name, dname, self.batch_size, k=self.spec_k,
+            tree_width=self.spec_tree,
+            page_size=self.page_size if self.paged else None,
+            prefill_chunk=self.prefill_chunk,
+            prefix_cache=self.prefix_cache,
+            quantize_kv=self.quantize_kv,
+            share_bank=self.share_bank)
         if eng.runner is None:
             cse = self.server.engine
 
@@ -591,14 +619,30 @@ class ContinuousScheduler:
                          page_size=self.page_size if self.paged else None,
                          multi_step=self.multi_step,
                          quantize_kv=self.quantize_kv,
-                         prefix_cache=self.prefix_cache)
+                         prefix_cache=self.prefix_cache,
+                         shared_bank=self.share_bank)
+
+    def _spec_key(self, name: str) -> SpecKey:
+        """The server-side ``_spec_engines`` cache key this scheduler's
+        configuration resolves to — the resolved page size mirrors
+        ``SwitchableServer.spec_engine`` (scheduler page size when paged,
+        the SpecEngine default otherwise)."""
+        sm = self.server._served[name]
+        ps = (min(self.page_size, sm.max_len) if self.paged
+              else math.gcd(sm.max_len, 256))
+        return SpecKey(name=name, draft=self.draft[name],
+                       batch_size=self.batch_size, k=self.spec_k,
+                       tree_width=self.spec_tree, page_size=ps,
+                       quantize_kv=self.quantize_kv,
+                       prefix_cache=self.prefix_cache,
+                       prefill_chunk=self.prefill_chunk,
+                       shared_bank=self.share_bank)
 
     def _live_engines(self):
         out = {}
         for name in self.server.served():
             if name in self.draft:
-                eng = self.server._spec_engines.get(
-                    (name, self.draft[name], self.batch_size, self.spec_k))
+                eng = self.server._spec_engines.get(self._spec_key(name))
             else:
                 eng = self.server._step_engines.get(self._step_key(name))
             if eng is not None and eng.live_slots():
@@ -716,6 +760,8 @@ class ContinuousScheduler:
             self.stats["steps"] += 1
             self.stats["busy_seconds"] += self._clock() - t0
             self._resolve(finished)
+            if self.spec_adaptive and cur in self.draft:
+                self._adapt_k(cur, eng)
         else:
             time.sleep(0.0005)                # waiting on a load/queue
         # starvation-guard bookkeeping: stamp contexts left holding frozen
@@ -729,6 +775,32 @@ class ContinuousScheduler:
             if name not in live:
                 del self._stranded_since[name]
         return cur
+
+    def _adapt_k(self, name: str, eng):
+        """Acceptance-driven K: EWMA (alpha=0.2) the fraction of DRAFTED
+        tokens the target accepted since the last look (stats deltas, so
+        resets and other schedulers' traffic don't pollute it), then walk
+        K one step inside [1, spec_k] with hysteresis — above 0.8 the
+        draft is tracking the target and a longer chain amortizes more
+        target calls per round; below 0.4 most drafted tokens are wasted
+        draft steps, so shrink.  The dead band between keeps K stable
+        under ordinary acceptance noise."""
+        committed = eng.stats["committed_tokens"]
+        rows = eng.stats["row_rounds"]
+        pc, pr = self._spec_prev.get(name, (0, 0))
+        dc, dr = committed - pc, rows - pr
+        if dr <= 0:
+            return                      # no row finished a round this tick
+        self._spec_prev[name] = (committed, rows)
+        # each row-round commits accepted+1 (the bonus/correction token)
+        acc = (dc / dr - 1.0) / max(eng.k, 1)
+        ew = self._accept_ewma.get(name)
+        ew = acc if ew is None else 0.8 * ew + 0.2 * acc
+        self._accept_ewma[name] = ew
+        if ew > 0.8 and eng.k < eng.k_max:
+            eng.set_k(eng.k + 1)
+        elif ew < 0.4 and eng.k > 1:
+            eng.set_k(eng.k - 1)
 
     def _activate(self, name: str) -> str:
         t0 = self._clock()
@@ -832,9 +904,9 @@ class ContinuousScheduler:
             if bsz == self.batch_size and (cur is None or name == cur) \
                     and eng.live_slots():
                 eng.reset()
-        for (name, _d, bsz, _k), eng in list(
-                self.server._spec_engines.items()):
-            if bsz == self.batch_size and (cur is None or name == cur) \
+        for skey, eng in list(self.server._spec_engines.items()):
+            if skey.batch_size == self.batch_size \
+                    and (cur is None or skey.name == cur) \
                     and eng.live_slots():
                 eng.reset()
 
@@ -862,11 +934,11 @@ class ContinuousScheduler:
             # prefix-cache effectiveness across this config's engines
             out.update(prefix)
         rounds = row_rounds = committed = 0
-        for (name, dname, bsz, k), eng in self.server._spec_engines.items():
+        for skey, eng in self.server._spec_engines.items():
             # full-key match: the server outlives schedulers, so engines
-            # from a prior draft/spec_k configuration may coexist
-            if (bsz == self.batch_size and k == self.spec_k
-                    and self.draft.get(name) == dname):
+            # from a prior draft/spec configuration may coexist
+            if (self.draft.get(skey.name) == skey.draft
+                    and skey == self._spec_key(skey.name)):
                 rounds += eng.stats["rounds"]
                 row_rounds += eng.stats["row_rounds"]
                 committed += eng.stats["committed_tokens"]

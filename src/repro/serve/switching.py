@@ -19,6 +19,7 @@ under mixed traffic) see ``repro.serve.scheduler.SwitchScheduler``.
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -31,7 +32,8 @@ from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
 from repro.serve.engine import (EngineKey, ServingEngine, StepEngine,
                                 _sample)
-from repro.serve.speculative import SpecEngine
+from repro.serve.pool import PagePool, SharedBank
+from repro.serve.speculative import SpecEngine, SpecKey
 from repro.serve.telemetry import Telemetry
 
 
@@ -59,8 +61,13 @@ class SwitchableServer:
         self._served: dict[str, ServedModel] = {}
         self._engines: dict[str, ServingEngine] = {}   # jit cache per context
         self._step_engines: dict[EngineKey, StepEngine] = {}
-        self._spec_engines: dict[tuple, SpecEngine] = {}   # (target, draft,
-        #                                                     pool B, K)
+        self._spec_engines: dict[SpecKey, SpecEngine] = {}
+        # shared page banks, keyed by BANK CONTENT — (context name,
+        # page_size, quantize_kv) — never by pool shape: any engine whose
+        # pages would hold the same bytes (a plain paged pool, a spec
+        # target column, any batch size) resolves to the same bank, so a
+        # prefix one engine indexed is a hit for all of them
+        self._banks: dict[tuple, SharedBank] = {}
         self._eng_seq = itertools.count()   # telemetry namespace ids
         self._state_snapshots: dict[str, Any] = {}
         self._req_seq = itertools.count()
@@ -104,13 +111,36 @@ class SwitchableServer:
             eng.params = params
         return eng
 
+    def shared_bank(self, name: str, page_size: int,
+                    quantize_kv: Optional[str] = None,
+                    num_pages: Optional[int] = None) -> SharedBank:
+        """Get-or-create the shared page bank for one cache content —
+        ``(context name, page_size, quantize_kv)``.  The first caller
+        sizes the pool (``num_pages``); later callers allocate from it
+        whatever their batch size or engine kind, and all of them see one
+        ``PrefixIndex`` over those pages."""
+        key = (name, int(page_size), quantize_kv)
+        bank = self._banks.get(key)
+        if bank is None:
+            if num_pages is None:
+                raise ValueError(
+                    f"shared bank {key} does not exist yet: the first "
+                    "caller must size it (num_pages)")
+            bank = SharedBank(PagePool(num_pages,
+                                       telemetry=self.telemetry.scoped(
+                                           f"eng.{next(self._eng_seq)}.")))
+            self._banks[key] = bank
+        return bank
+
     def step_engine(self, name: str, batch_size: int,
                     prefill_chunk: Optional[int] = None,
                     paged: bool = False,
                     page_size: int = 256,
                     multi_step: int = 1,
                     quantize_kv: Optional[str] = None,
-                    prefix_cache: bool = False) -> StepEngine:
+                    prefix_cache: bool = False,
+                    num_pages: Optional[int] = None,
+                    share_bank: bool = False) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
@@ -121,14 +151,25 @@ class SwitchableServer:
         combination builds different jitted programs (and for int8 or a
         prefix cache, different bank bookkeeping) over the same pool
         shape, and a knob that isn't in the key cannot exist."""
+        sm = self._served[name]
+        eff_ps = min(page_size, sm.max_len) if paged else None
         key = EngineKey(name=name, batch_size=batch_size,
                         prefill_chunk=prefill_chunk,
-                        page_size=page_size if paged else None,
+                        page_size=eff_ps,
                         multi_step=multi_step, quantize_kv=quantize_kv,
-                        prefix_cache=prefix_cache)
+                        prefix_cache=prefix_cache,
+                        shared_bank=share_bank)
         eng = self._step_engines.get(key)
         if eng is None:
-            sm = self._served[name]
+            bank = None
+            if share_bank:
+                if not paged:
+                    raise ValueError("share_bank needs paged=True")
+                ppr = sm.max_len // eff_ps
+                bank = self.shared_bank(
+                    name, eff_ps, quantize_kv,
+                    num_pages=(num_pages if num_pages is not None
+                               else batch_size * ppr + 1))
             eng = StepEngine(sm.model, batch_size, sm.max_len,
                              temperature=sm.temperature,
                              prefill_chunk=prefill_chunk,
@@ -136,24 +177,54 @@ class SwitchableServer:
                              multi_step=multi_step,
                              quantize_kv=quantize_kv,
                              prefix_cache=prefix_cache,
+                             num_pages=num_pages, bank=bank,
                              telemetry=self.telemetry.scoped(
                                  f"eng.{next(self._eng_seq)}."))
             self._step_engines[key] = eng
         return eng
 
     def spec_engine(self, name: str, draft: str, batch_size: int,
-                    k: int = 4) -> SpecEngine:
+                    k: int = 4, tree_width: int = 1,
+                    page_size: Optional[int] = None,
+                    num_pages: Optional[int] = None,
+                    prefill_chunk: Optional[int] = None,
+                    prefix_cache: bool = False,
+                    quantize_kv: Optional[str] = None,
+                    share_bank: bool = False) -> SpecEngine:
         """Per-(target, draft) speculative engine (jitted once per pool
         shape).  Like ``step_engine``, decode state persists across
         context switches and weights are never captured — every draft /
         target program runs against the matching context slot via the
-        scheduler's runner hook."""
-        key = (name, draft, batch_size, k)
+        scheduler's runner hook.  ``k`` is the engine's K_MAX: adaptive
+        schedulers move ``eng.set_k`` under it without changing which
+        engine serves the pair.  With ``share_bank`` the TARGET column
+        allocates from (and indexes prefixes into) the context's shared
+        bank, so prompts cached by a plain paged engine of ``name`` are
+        prefix hits here and vice versa; the draft column always stays
+        private (different bytes)."""
+        sm, dm = self._served[name], self._served[draft]
+        eff_ps = (min(page_size, sm.max_len) if page_size is not None
+                  else math.gcd(sm.max_len, 256))
+        key = SpecKey(name=name, draft=draft, batch_size=batch_size,
+                      k=k, tree_width=tree_width, page_size=eff_ps,
+                      quantize_kv=quantize_kv, prefix_cache=prefix_cache,
+                      prefill_chunk=prefill_chunk, shared_bank=share_bank)
         eng = self._spec_engines.get(key)
         if eng is None:
-            sm, dm = self._served[name], self._served[draft]
+            bank = None
+            if share_bank:
+                ppr = sm.max_len // eff_ps
+                bank = self.shared_bank(
+                    name, eff_ps, quantize_kv,
+                    num_pages=(num_pages if num_pages is not None
+                               else batch_size * ppr + 1))
             eng = SpecEngine(dm.model, sm.model, batch_size, sm.max_len,
                              k=k, temperature=sm.temperature,
+                             tree_width=tree_width, page_size=eff_ps,
+                             num_pages=num_pages,
+                             prefill_chunk=prefill_chunk,
+                             prefix_cache=prefix_cache,
+                             quantize_kv=quantize_kv, bank=bank,
                              telemetry=self.telemetry.scoped(
                                  f"eng.{next(self._eng_seq)}."))
             self._spec_engines[key] = eng

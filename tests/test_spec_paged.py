@@ -1,0 +1,288 @@
+"""Paged SpecEngine vs the retired dense-row engine, the tree-verify
+path, adaptive K, and cross-engine bank sharing.
+
+The dense-row speculative engine was deleted once the paged engine
+reproduced its streams bitwise; ``_dense_oracle`` below reimplements its
+exact device schedule (same key folds, same admission draw, same
+accept/commit arithmetic, dense row caches) so the equivalence stays a
+*tested* property, not a remembered one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import reduced_arch, tokens_for
+
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.speculative import (SpecEngine, speculative_accept,
+                                     tree_speculative_accept)
+from repro.serve.switching import ServedModel, SwitchableServer
+
+
+def _f32_model(name="tinyllama-1.1b", pseed=0, **extra):
+    cfg = reduced_arch(name, dtype="float32", param_dtype="float32",
+                       **extra)
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(pseed))
+
+
+def _perturb(params, scale=0.02, seed=9):
+    """Slightly noised copy: argmax usually agrees with the original,
+    sometimes lands on its runner-up — exercises partial accepts and the
+    tree's alternative-sibling path."""
+    keys = iter(jax.random.split(jax.random.key(seed), 4096))
+    return jax.tree.map(
+        lambda x: x + scale * jax.random.normal(next(keys), x.shape,
+                                                x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+def _dense_oracle(model, dp, tp, tokens, steps, k, temperature, max_len,
+                  seed=0):
+    """The retired dense-row SpecEngine, run as a plain host loop: one
+    one-shot full-batch admission at t=0, then flat K-rounds to
+    completion.  Key schedule, admission draw, roll gumbels, verify key,
+    and commit clamping are verbatim from the deleted engine."""
+    tokens = np.asarray(tokens)
+    B, S = tokens.shape
+    V = model.cfg.vocab_size
+    T, K = temperature, k
+    key = jax.random.PRNGKey(seed)
+    t = jnp.zeros((), jnp.int32)
+
+    logits, rows = model.prefill(tp, jnp.asarray(tokens, jnp.int32),
+                                 max_len)
+    last = logits[:, -1]
+    if T > 0.0:
+        salted = jax.random.fold_in(key, (1 << 30) ^ t)
+        akey = jnp.where(t == 0, key, salted)
+        g = jax.random.gumbel(akey, (B, V), jnp.float32)
+        first = jnp.argmax(last / T + g[jnp.arange(B)], axis=-1)
+    else:
+        first = jnp.argmax(last, axis=-1)
+    first = first.astype(jnp.int32)
+    t_caches = model.insert_cache_rows(model.init_cache(B, max_len), rows,
+                                       jnp.arange(B))
+    _, drows = model.prefill(dp, jnp.asarray(tokens, jnp.int32), max_len)
+    d_caches = model.insert_cache_rows(model.init_cache(B, max_len),
+                                       drows, jnp.arange(B))
+    tok = first[:, None]
+    pos = jnp.full((B,), S, jnp.int32)
+    out = [[int(first[i])] for i in range(B)]
+    produced = np.ones(B, np.int64)
+    while (produced < steps).any():
+        live = jnp.asarray(produced < steps)
+        remaining = jnp.asarray(np.maximum(steps - produced, 0), jnp.int32)
+        base = jax.random.fold_in(key, t)
+        caches, tk = d_caches, tok
+        props, dlog = [], []
+        for i in range(K + 1):
+            lg, caches = model.decode_step(dp, caches, tk, pos + i)
+            lastd = lg[:, -1]
+            if T > 0.0:
+                g = jax.random.gumbel(jax.random.fold_in(base, i),
+                                      (B, V), jnp.float32)
+                nxt = jnp.argmax(lastd / T + g, axis=-1)
+            else:
+                nxt = jnp.argmax(lastd, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            if i < K:
+                props.append(nxt)
+                dlog.append(lastd)
+            tk = nxt[:, None]
+        d_caches = caches
+        props = jnp.stack(props, 1)
+        dlog = jnp.stack(dlog, 1)
+        block = jnp.concatenate([tok, props], axis=1)
+        lg, t_caches = model.verify_step(tp, t_caches, block, pos)
+        vkey = jax.random.fold_in(jax.random.fold_in(key, t), 1 << 20)
+        toks, n = speculative_accept(vkey, props, dlog, lg, T)
+        m = jnp.where(live, jnp.minimum(n + 1, remaining), 0)
+        tok_new = jnp.take_along_axis(toks,
+                                      jnp.clip(m - 1, 0, K)[:, None],
+                                      axis=1)
+        tok = jnp.where(m[:, None] > 0, tok_new, tok)
+        pos = jnp.minimum(pos + m, max_len - 1)
+        key = jax.random.fold_in(key, t)
+        t = t + 1
+        mn, tn = np.asarray(m), np.asarray(toks)
+        for b in range(B):
+            out[b].extend(int(x) for x in tn[b, :int(mn[b])])
+            produced[b] += int(mn[b])
+    return np.stack([np.asarray(o[:steps], np.int32) for o in out])
+
+
+# --------------------------------------------------------------- bitwise
+@pytest.mark.parametrize("temperature,chunk", [(0.0, None), (0.0, 3),
+                                               (1.3, None)],
+                         ids=["greedy", "greedy-chunked", "temp"])
+def test_paged_matches_dense_row_engine(temperature, chunk):
+    """The tentpole guarantee: the paged SpecEngine commits bitwise the
+    stream the dense-row engine did — same pool key schedule, same
+    accepts — for greedy (one-shot AND chunked admission) and for
+    pool-temperature sampling (one-shot; chunking legitimately shifts
+    which round an admission draw lands on, exactly as in StepEngine)."""
+    max_len, steps, k = 64, 12, 3
+    cfg, m, tp = _f32_model()
+    dp = _perturb(tp)
+    prompts = np.asarray(tokens_for(cfg, 3, 7, seed=5))
+    ref = _dense_oracle(m, dp, tp, prompts, steps, k, temperature,
+                        max_len)
+    eng = SpecEngine(m, m, batch_size=3, max_len=max_len, k=k,
+                     temperature=temperature, prefill_chunk=chunk)
+    gens = eng.admit((dp, tp), prompts, max_new=steps)
+    eng.drain((dp, tp))
+    out = np.stack([np.asarray(g.tokens, np.int32) for g in gens])
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_tree_greedy_matches_generate():
+    """W>1 greedy must still equal plain target greedy: the chain's
+    committed token is always the target argmax at its node, alternative
+    siblings only shortcut rounds, and both caches are repaired before
+    the next round reads them (a repair bug shows up as divergence a few
+    rounds after the first alternative accept)."""
+    max_len, steps = 64, 16
+    cfg, m, tp = _f32_model()
+    dp = _perturb(tp)
+    prompts = np.asarray(tokens_for(cfg, 3, 10, seed=5))
+    ref = ServingEngine(m, tp, max_len).generate(prompts, steps)
+    eng = SpecEngine(m, m, batch_size=3, max_len=max_len, k=4,
+                     tree_width=2)
+    gens = eng.admit((dp, tp), prompts, max_new=steps)
+    eng.drain((dp, tp))
+    out = np.stack([np.asarray(g.tokens) for g in gens])
+    np.testing.assert_array_equal(out, np.asarray(ref))
+
+
+def test_adaptive_k_commits_only_target_tokens():
+    """Moving K mid-stream must never commit a token a fixed-K engine
+    wouldn't: greedy committed streams are target-argmax streams for
+    EVERY K, so resizing between ticks cannot change the output."""
+    max_len, steps = 64, 16
+    cfg, m, tp = _f32_model()
+    dp = _perturb(tp)
+    prompts = np.asarray(tokens_for(cfg, 2, 8, seed=3))
+    ref = ServingEngine(m, tp, max_len).generate(prompts, steps)
+    eng = SpecEngine(m, m, batch_size=2, max_len=max_len, k=4)
+    gens = eng.admit((dp, tp), prompts, max_new=steps)
+    ks = [1, 2, 4, 3, 1, 2]
+    i = 0
+    while any(not g.done for g in gens):
+        eng.set_k(ks[i % len(ks)])
+        i += 1
+        eng.step((dp, tp))
+    assert eng.k_max == 4 and eng.k == ks[(i - 1) % len(ks)]
+    out = np.stack([np.asarray(g.tokens) for g in gens])
+    np.testing.assert_array_equal(out, np.asarray(ref))
+    eng.set_k(0)                 # out-of-range requests clamp, not raise
+    assert eng.k == 1
+    eng.set_k(99)
+    assert eng.k == eng.k_max
+
+
+def test_int8_columns_aligned_draft():
+    """int8 page banks on BOTH columns: a draft that IS the target reads
+    back the same quantized history, so nearly every chain accepts in
+    full (bitwise identity is not promised across different matmul
+    shapes, acceptance is the observable)."""
+    cfg, m, tp = _f32_model()
+    prompts = np.asarray(tokens_for(cfg, 2, 8, seed=4))
+    eng = SpecEngine(m, m, batch_size=2, max_len=64, k=4,
+                     quantize_kv="int8", page_size=16)
+    gens = eng.admit((tp, tp), prompts, max_new=16)
+    eng.drain((tp, tp))
+    assert all(len(g.tokens) == 16 for g in gens)
+    assert eng.accepted_per_round > 4.0
+
+
+# ------------------------------------------------------------- tree math
+def test_tree_accept_first_token_target_distributed():
+    """Exact tree speculative sampling: whatever the draft proposes (W
+    iid draws per depth here), the depth-1 committed token is distributed
+    exactly as target sampling at the root node."""
+    B, K, W, V, T = 40000, 2, 2, 16, 1.0
+    key = jax.random.key(0)
+    kq, kp, kc, kv = jax.random.split(key, 4)
+    q_logits = jax.random.normal(kq, (K, V)) * 1.5
+    t_logits = jax.random.normal(kp, (1 + K * W, V)) * 1.5
+    # iid proposals from each depth's draft distribution, per row/sibling
+    g = jax.random.gumbel(kc, (B, K, W, V))
+    cand = jnp.argmax(q_logits[None, :, None, :] / T + g,
+                      axis=-1).astype(jnp.int32)
+    dlog = jnp.broadcast_to(q_logits[None], (B, K, V))
+    tlog = jnp.broadcast_to(t_logits[None], (B, 1 + K * W, V))
+    toks, n, alt_depth, alt_tok = tree_speculative_accept(
+        kv, cand, dlog, tlog, T)
+    emp = np.bincount(np.asarray(toks[:, 0]), minlength=V) / B
+    want = np.asarray(jax.nn.softmax(t_logits[0] / T))
+    np.testing.assert_allclose(emp, want, atol=0.015)
+    assert (np.asarray(n) >= 0).all() and (np.asarray(n) <= K).all()
+    assert ((np.asarray(alt_depth) == 0)
+            | (np.asarray(alt_depth) <= K)).all()
+
+
+def test_tree_verify_kernel_matches_ref():
+    """The tree-verify kernel on a shuffled page table with per-row
+    ancestor bitmasks must match the gather-then-mask oracle."""
+    from repro.kernels.paged_attention.ops import paged_verify_attention
+    from repro.kernels.paged_attention.ref import paged_verify_reference
+    B, K, H, Hkv, hd, page, P = 3, 7, 4, 2, 64, 8, 4
+    NP = B * P + 1
+    key = jax.random.key(1)
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (B, K, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (NP, Hkv, page, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (NP, Hkv, page, hd), jnp.float32)
+    bk = jax.random.normal(ks[3], (B, K, Hkv, hd), jnp.float32)
+    bv = jax.random.normal(ks[4], (B, K, Hkv, hd), jnp.float32)
+    # shuffled non-contiguous tables (page 0 stays the park page)
+    perm = np.random.RandomState(0).permutation(NP - 1) + 1
+    table = jnp.asarray(perm[:B * P].reshape(B, P), jnp.int32)
+    pos = jnp.asarray([13, 5, 22], jnp.int32)
+    # random per-row visibility masks with the self-bit always set
+    masks = np.random.RandomState(1).randint(0, 1 << K, size=(B, K))
+    masks |= 1 << np.arange(K)[None, :]
+    tree = jnp.asarray(masks, jnp.int32)
+    out = paged_verify_attention(q, kp, vp, bk, bv, table, pos, tree=tree)
+    ref = paged_verify_reference(q, kp, vp, bk, bv, table, pos, tree=tree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ bank share
+def test_shared_bank_prefix_hits_across_engine_kinds():
+    """Satellite: one PrefixIndex per bank content.  A prompt served by
+    the plain paged engine leaves its pages in the shared bank; the SAME
+    prompt admitted to a spec engine of the same context is a prefix hit
+    on the target column (and the stream stays the target's greedy)."""
+    max_len, ps = 32, 8
+    cfg, m, tp = _f32_model()
+    dp = _perturb(tp)
+    srv = SwitchableServer()
+    srv.register(ServedModel(name="tgt", model=m, weights_fn=lambda: tp,
+                             max_len=max_len))
+    srv.register(ServedModel(name="drf", model=m, weights_fn=lambda: dp,
+                             max_len=max_len))
+    step = srv.step_engine("tgt", batch_size=2, paged=True, page_size=ps,
+                           prefix_cache=True, share_bank=True,
+                           num_pages=2 * (max_len // ps) + 6)
+    spec = srv.spec_engine("tgt", "drf", batch_size=2, k=3, page_size=ps,
+                           prefix_cache=True, share_bank=True)
+    assert step._prefix is spec._prefix      # literally one index
+    assert step._pages is spec._t_pages      # and one target pool
+    prompt = np.asarray(tokens_for(cfg, 1, 12, seed=7))
+    ref = np.asarray(ServingEngine(m, tp, max_len).generate(prompt, 8))
+    g1 = step.admit(tp, prompt, max_new=8)
+    step.drain(tp)
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(g1[0].tokens)]), ref)
+    assert spec.stats["prefix_hits"] == 0
+    g2 = spec.admit((dp, tp), prompt, max_new=8)
+    spec.drain((dp, tp))
+    assert spec.stats["prefix_hits"] == 1
+    assert spec.stats["prefix_pages_mapped"] >= 1
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(g2[0].tokens)]), ref)
+    srv.shutdown()
