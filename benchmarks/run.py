@@ -21,10 +21,10 @@ import traceback
 def modules():
     from benchmarks import (bench_continuous, bench_multistep, bench_paged,
                             bench_prefill_chunk, bench_prefix,
-                            bench_serve_queue, bench_speculative,
-                            bench_switch, fig5_critical_path,
-                            fig5_primitives, fig6_cases, fig6b_accuracy,
-                            figS1_pipeline, roofline_table)
+                            bench_serve_queue, bench_sharded,
+                            bench_speculative, bench_switch,
+                            fig5_critical_path, fig5_primitives, fig6_cases,
+                            fig6b_accuracy, figS1_pipeline, roofline_table)
     return [
         ("fig5_primitives", fig5_primitives.run),
         ("fig5_critical_path", fig5_critical_path.run),
@@ -38,6 +38,7 @@ def modules():
         ("bench_prefill_chunk", bench_prefill_chunk.run),
         ("bench_paged", bench_paged.run),
         ("bench_prefix", bench_prefix.run),
+        ("bench_sharded", bench_sharded.run),
         ("bench_multistep", bench_multistep.run),
         ("roofline_table", roofline_table.run),
     ]
@@ -58,10 +59,12 @@ def _metadata() -> dict:
     except Exception:
         sha = "unknown"
     dev = jax.devices()[0]
+    from repro.core import env
     return {"platform": platform.platform(),
             "device": f"{dev.platform}:{dev.device_kind}",
             "jax_version": jax.__version__,
-            "git_sha": sha}
+            "git_sha": sha,
+            **env.describe()}
 
 
 def _json_report(name: str, rows: list[tuple], wall_s: float) -> dict:

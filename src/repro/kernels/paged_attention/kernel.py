@@ -390,3 +390,179 @@ def paged_verify_attention_kernel(q, k_pages, v_pages, kb, vb, page_table,
         name="paged_verify_attention",
     )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
       jnp.asarray(page_table, jnp.int32), anc, *operands)
+
+
+def _paged_decode_partial_kernel(pos_ref, pt_ref, base_ref, q_ref, k_ref,
+                                 v_ref, acc_ref, m_ref, l_ref, m_scr,
+                                 l_scr, acc_scr, *, scale: float,
+                                 page: int, np_row: int, num_local: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+    pid = pt_ref[b, j]
+    base = base_ref[0]
+    owned = (pid >= base) & (pid < base + num_local)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * page
+
+    @pl.when(owned & (k_start <= pos))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                  # (page, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(j == np_row - 1)
+    def _finalize():
+        acc_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def _paged_decode_partial_kernel_q(pos_ref, pt_ref, base_ref, q_ref,
+                                   k_ref, v_ref, ks_ref, vs_ref, acc_ref,
+                                   m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                                   scale: float, page: int, np_row: int,
+                                   num_local: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+    pid = pt_ref[b, j]
+    base = base_ref[0]
+    owned = (pid >= base) & (pid < base + num_local)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * page
+
+    @pl.when(owned & (k_start <= pos))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = (k_ref[0, 0].astype(jnp.float32)
+             * ks_ref[0, 0][:, None])                     # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        v = (v_ref[0, 0].astype(jnp.float32)
+             * vs_ref[0, 0][:, None])                     # (page, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(j == np_row - 1)
+    def _finalize():
+        acc_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def paged_decode_partial_kernel(q, k_pages, v_pages, page_table, pos,
+                                base, *, scale: float | None = None,
+                                k_scale=None, v_scale=None,
+                                interpret: bool = False):
+    """Per-shard HALF of flash decode over a sharded page bank.
+
+    ``k_pages``/``v_pages`` here are one shard's (L, Hkv, page, hd)
+    LOCAL slice; ``page_table`` still holds GLOBAL page ids and ``base``
+    ((1,) int32, scalar-prefetched) is the shard's first global id, so
+    the index map clamps ``pt[b, j] - base`` into [0, L) and the body
+    additionally gates each fold on ownership — a foreign page's tile
+    may be DMA'd (clamped to local park page 0) but never folded.
+
+    Returns the UNNORMALIZED running-softmax state instead of an
+    output: (acc (B, Hkv, G, hd) f32, m (B, Hkv, G, 1) f32,
+    l (B, Hkv, G, 1) f32).  A row with no owned valid page yields
+    (0, NEG_INF, 0), which a cross-shard ``exp(m - pmax(m))`` rescale +
+    psum combine weighs to exactly zero."""
+    B, Hkv, G, hd = q.shape
+    L, _, page, _ = k_pages.shape
+    P = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
+
+    def _page_idx(b, h, j, pos, pt, base):
+        return (jnp.clip(pt[b, j] - base[0], 0, L - 1), h, 0, 0)
+
+    page_spec = pl.BlockSpec((1, 1, page, hd), _page_idx)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, h, j, pos, pt, base: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        kernel = functools.partial(_paged_decode_partial_kernel_q,
+                                   scale=scale, page=page, np_row=P,
+                                   num_local=L)
+        scale_spec = pl.BlockSpec(
+            (1, 1, page),
+            lambda b, h, j, pos, pt, base:
+                (jnp.clip(pt[b, j] - base[0], 0, L - 1), h, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    else:
+        kernel = functools.partial(_paged_decode_partial_kernel,
+                                   scale=scale, page=page, np_row=P,
+                                   num_local=L)
+    out_idx = lambda b, h, j, pos, pt, base: (b, h, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, P),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), out_idx),
+            pl.BlockSpec((1, 1, G, 1), out_idx),
+            pl.BlockSpec((1, 1, G, 1), out_idx),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_decode_partial",
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+      jnp.asarray(page_table, jnp.int32),
+      jnp.broadcast_to(jnp.asarray(base, jnp.int32), (1,)), *operands)

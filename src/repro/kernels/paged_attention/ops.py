@@ -6,10 +6,11 @@ import functools
 import jax
 
 from repro.kernels.paged_attention.kernel import (
-    paged_decode_attention_kernel, paged_verify_attention_kernel)
+    paged_decode_attention_kernel, paged_decode_partial_kernel,
+    paged_verify_attention_kernel)
 from repro.kernels.paged_attention.ref import (
-    gather_pages, gather_scales, paged_decode_reference,
-    paged_verify_reference)
+    gather_pages, gather_scales, paged_decode_partial_reference,
+    paged_decode_reference, paged_verify_reference)
 
 
 def _on_tpu() -> bool:
@@ -79,6 +80,32 @@ def paged_verify_attention(q, k_pages, v_pages, blk_k, blk_v, page_table,
             .reshape(B, K, H, hd))
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_partial(q, k_pages, v_pages, page_table, pos, base, *,
+                         scale: float | None = None,
+                         k_scale=None, v_scale=None,
+                         interpret: bool | None = None):
+    """One shard's unnormalized flash-decode state over its LOCAL bank
+    slice.  q: (B, H, hd); k_pages/v_pages: (L, Hkv, page, hd) local
+    slice; page_table: (B, P) GLOBAL page ids; base: scalar int32 first
+    global id of this shard -> (acc (B, Hkv, G, hd) f32, m (B, Hkv, G)
+    f32, l (B, Hkv, G) f32).  Pages outside [base, base+L) are skipped;
+    a row owning no valid page comes back as (0, -1e30, 0), which the
+    caller's pmax/psum combine weighs to zero.  Runs inside shard_map —
+    every shard's kernel instance reads only its own slice."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, hd = q.shape
+    Hkv = k_pages.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    acc, m, l = paged_decode_partial_kernel(
+        qg, k_pages, v_pages, page_table, pos, base, scale=scale,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
+    return acc, m[..., 0], l[..., 0]
+
+
 __all__ = ["gather_pages", "gather_scales", "paged_decode_attention",
+           "paged_decode_partial", "paged_decode_partial_reference",
            "paged_decode_reference", "paged_verify_attention",
            "paged_verify_reference"]

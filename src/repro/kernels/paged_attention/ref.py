@@ -82,3 +82,44 @@ def paged_verify_reference(q, k_pages, v_pages, blk_k, blk_v, page_table,
         v = gather_pages(v_pages, page_table)
     return verify_reference(q, k, v, blk_k, blk_v, pos, ring=False,
                             scale=scale, tree=tree)
+
+
+def paged_decode_partial_reference(q, k_pages, v_pages, page_table, pos,
+                                   base, *, scale: float | None = None,
+                                   k_scale=None, v_scale=None):
+    """Oracle for ``paged_decode_partial``: one shard's unnormalized
+    flash state.  ``k_pages``/``v_pages`` are the shard's LOCAL
+    (L, Hkv, page, hd) slice, ``page_table`` holds GLOBAL ids and
+    ``base`` is the shard's first global id.  q: (B, H, hd) ->
+    (acc (B, Hkv, G, hd) f32, m (B, Hkv, G) f32, l (B, Hkv, G) f32),
+    with rows that own no valid page at exactly (0, -1e30, 0)."""
+    NEG_INF = -1e30
+    B, H, hd = q.shape
+    L, Hkv, page, _ = k_pages.shape
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    table = jnp.asarray(page_table, jnp.int32)
+    lt = table - jnp.asarray(base, jnp.int32)
+    owned = (lt >= 0) & (lt < L)
+    lt = jnp.where(owned, lt, 0)
+    if k_scale is not None:
+        k = _dequant(k_pages, k_scale, lt)
+        v = _dequant(v_pages, v_scale, lt)
+    else:
+        k = gather_pages(k_pages, lt)
+        v = gather_pages(v_pages, lt)
+    S = k.shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    own_pos = jnp.repeat(owned, page, axis=1)            # (B, S)
+    valid = ((jnp.arange(S)[None, :] <= pos[:, None])
+             & own_pos)[:, None, None, :]                # (B, 1, 1, S)
+    qh = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,bnsd->bngs", qh,
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(valid, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bngs,bnsd->bngd", p, v.astype(jnp.float32))
+    return acc, m, l

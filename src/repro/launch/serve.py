@@ -151,6 +151,28 @@ def main(argv=None) -> int:
                          "half the bytes per page, ~2x admitted "
                          "concurrency per HBM budget (outputs are "
                          "tolerance-close, not bitwise)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="paged mode: partition each engine's KV page "
+                         "bank into this many shards with one free-list "
+                         "each; admission routes a request's pages to "
+                         "one shard (prefix hits to the shard holding "
+                         "the cached pages, cold admissions to the "
+                         "least-loaded shard).  When at least this many "
+                         "devices are visible the bank is also placed "
+                         "over a device mesh")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin jax to one platform (default: jax's own "
+                         "detection order)")
+    ap.add_argument("--x64", action="store_true",
+                    help="enable 64-bit mode (f64/i64 default types)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    metavar="N",
+                    help="force the host (CPU) platform to expose N "
+                         "devices — a fake multi-device topology for "
+                         "--shards mesh placement without hardware "
+                         "(must be set before jax initializes; the CI "
+                         "multi-device job exports XLA_FLAGS instead)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged mode: share already-written prompt pages "
                          "across admissions — a request whose prompt "
@@ -178,6 +200,13 @@ def main(argv=None) -> int:
                          "registry snapshot (one JSON line to stderr) "
                          "every SECONDS; 0 disables")
     args = ap.parse_args(argv)
+    if args.shards is not None and (args.shards < 1 or not args.paged):
+        ap.error("--shards needs --paged and a positive shard count")
+    from repro.core import env
+    env.set_platform(args.platform)
+    if args.x64:
+        env.enable_x64(True)
+    env.set_host_device_count(args.host_devices)
     if args.quantize_kv != "none" and not args.paged \
             and args.mode != "speculative":
         ap.error("--quantize-kv targets the shared page bank: it "
@@ -247,6 +276,14 @@ def main(argv=None) -> int:
         reqs = list(request_stream(names, cfgs, args.requests,
                                    args.batch, args.seq, args.seed))
 
+    mesh = None
+    if args.shards is not None and args.shards > 1 \
+            and jax.device_count() >= args.shards:
+        # enough devices: place the sharded bank over a real mesh (the
+        # host allocator shards regardless; this adds device placement)
+        from repro.distributed.mesh import make_mesh
+        mesh = make_mesh((args.shards,), ("model",))
+
     t0 = time.perf_counter()
     if args.mode in ("queue", "continuous", "speculative"):
         sched_cls = (SwitchScheduler if args.mode == "queue" else
@@ -259,7 +296,8 @@ def main(argv=None) -> int:
                          multi_step=args.multi_step,
                          quantize_kv=(None if args.quantize_kv == "none"
                                       else args.quantize_kv),
-                         prefix_cache=args.prefix_cache))
+                         prefix_cache=args.prefix_cache,
+                         shards=args.shards, mesh=mesh))
         with sched_cls(server) as sched:
             futs = [(sched.submit(n, t, steps=args.steps),
                      time.perf_counter()) for n, t in reqs]
@@ -296,6 +334,7 @@ def main(argv=None) -> int:
         "hidden_load_fraction": round(
             server.engine.hidden_load_fraction(), 3),
         **extra,
+        "env": env.describe(),
         "log_tail": server.log[-3:],
     }
     if stats_stop is not None:

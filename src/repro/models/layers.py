@@ -495,7 +495,7 @@ def _gather_dequant(cache: PagedKV, tables, dtype):
 
 
 def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
-                           cfg: ArchConfig, wmask=None):
+                           cfg: ArchConfig, wmask=None, shard=None):
     """One-step decode against the shared page pool.  x: (B, 1, D);
     pos: (B,) int32 (or scalar, broadcast); tables: (B, P) int32;
     ``wmask`` ((B,) bool, optional): False rows write to the park page
@@ -504,7 +504,14 @@ def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
     Write-then-read in the same order as ``attention_decode`` — the new
     token's k/v land in its page first, then attention reads the gathered
     pages under the same ``idx <= pos`` mask, so live rows' outputs are
-    bitwise the row engine's."""
+    bitwise the row engine's.
+
+    ``shard`` (``(mesh, axis)``, optional) switches to the shard_mapped
+    local-read path: see ``attention_decode_pages_sharded``."""
+    if shard is not None:
+        return attention_decode_pages_sharded(params, x, pos, cache,
+                                              tables, cfg, shard,
+                                              wmask=wmask)
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]
@@ -535,7 +542,7 @@ def attention_decode_pages(params, x, pos, cache: PagedKV, tables,
 
 def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
                            cfg: ArchConfig, wmask=None, offsets=None,
-                           tree=None):
+                           tree=None, shard=None):
     """Multi-token verify/chunk decode against the shared page pool.
 
     x: (B, K, D) block tokens at positions ``pos[b] .. pos[b]+K-1``;
@@ -555,7 +562,15 @@ def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
     ``tree[b, i]`` makes block token j visible to block query i.
     Sibling branches share a depth, so the caller MUST park all but one
     writer per depth through ``wmask`` (the scatter has one slot per
-    position)."""
+    position).
+
+    ``shard`` (``(mesh, axis)``, optional) switches to the shard_mapped
+    local-read path: see ``attention_verify_pages_sharded``."""
+    if shard is not None:
+        return attention_verify_pages_sharded(params, x, pos, cache,
+                                              tables, cfg, shard,
+                                              wmask=wmask, offsets=offsets,
+                                              tree=tree)
     B, K, _ = x.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if offsets is None:
@@ -583,6 +598,245 @@ def attention_verify_pages(params, x, pos, cache: PagedKV, tables,
 
     cache = _page_write(cache, k, v, tables, positions, wmask=wmask)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# sharded page bank: per-shard LOCAL reads under shard_map
+#
+# The functions above gather the WHOLE bank through the page table — under
+# a mesh that is an all-gather of every shard's slice per step.  The
+# sharded paths below shard_map attention instead: each mesh shard holds
+# local pages [s*L, (s+1)*L) of the bank (L = NP/num_shards), recovers its
+# local index as ``table - s*L``, reads/writes ONLY entries it owns, and
+# the per-shard unnormalized flash partials (acc, m, l) merge with one
+# pmax/psum.  The merged softmax is mathematically the global one, but the
+# reduction ORDER differs from the single-gather path, so local-read
+# outputs are allclose-, not bitwise-, equivalent (the engine keeps the
+# global-gather path as its bitwise default).  Out-of-slice writes land in
+# the shard's own reserved local page 0 (``ShardedPagePool`` never
+# allocates any shard's local page 0), so no write crosses shards either —
+# the paper's dual-port disturb-free argument at rack scale.
+# ---------------------------------------------------------------------------
+
+def _local_pages(tables, num_local: int, axis: str):
+    """This shard's view of the (B, P) page table, inside shard_map:
+    -> (local_table, owned) where ``owned`` marks entries whose page
+    lives on this shard and ``local_table`` holds their local indices
+    (everything else points at the shard's local park page 0)."""
+    base = jax.lax.axis_index(axis) * num_local
+    lt = tables - base
+    owned = (lt >= 0) & (lt < num_local)
+    return jnp.where(owned, lt, PARK_PAGE), owned
+
+
+def _paged_partial(q, kg, vg, valid, scale):
+    """Unnormalized flash partial over ONE gathered bank slice.
+
+    q: (B, K, H, hd); kg/vg: (B, Hkv, S, hd); valid: (B, K, S) bool (a
+    broadcastable (B, 1, S) is fine).  -> (acc (B, Hkv, K, G, hd) f32,
+    m, l (B, Hkv, K, G) f32).  ``NEG_INF`` is finite, so a fully-masked
+    row has ``m == NEG_INF`` and ``exp(s - m) == 1`` there — the
+    explicit re-mask of ``p`` (not just ``s``) is what keeps that row's
+    l/acc at exact 0.0 so the cross-shard combine ignores it."""
+    B, K, H, hd = q.shape
+    Hkv = kg.shape[1]
+    G = H // Hkv
+    qh = (q.reshape(B, K, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+          .astype(jnp.float32))
+    s = jnp.einsum("bnigd,bnsd->bnigs", qh, kg.astype(jnp.float32)) * scale
+    vmask = valid[:, None, :, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(vmask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bnigs,bnsd->bnigd", p, vg.astype(jnp.float32))
+    return acc, m, l
+
+
+def _psum_partials(acc, m, l, axis: str):
+    """Merge per-shard flash partials across mesh axis ``axis`` —
+    rescale every shard's (acc, l) to the global running max, then sum.
+    Returns the still-unnormalized (acc, m, l), replicated."""
+    mg = jax.lax.pmax(m, axis)
+    w = jnp.exp(m - mg)
+    return (jax.lax.psum(acc * w[..., None], axis), mg,
+            jax.lax.psum(l * w, axis))
+
+
+def _fold_block(acc, m, l, qh, kb, vb, scale, tree):
+    """Fold the verify block's own K keys/values — replicated, identical
+    on every shard — into a combined cache partial, then normalize.
+    qh: (B, Hkv, K, G, hd) f32; kb/vb: (B, K, Hkv, hd); ``tree``
+    ((B, K) int32 ancestor bitmasks) replaces the intra-block causal
+    mask.  Exact flash fold: together with ``_psum_partials`` this is
+    ``verify_reference``'s joint softmax in a different reduction
+    order."""
+    kbh = kb.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B, Hkv, K, hd)
+    vbh = vb.astype(jnp.float32).transpose(0, 2, 1, 3)
+    K = kbh.shape[2]
+    s = jnp.einsum("bnigd,bnjd->bnigj", qh, kbh) * scale
+    if tree is None:
+        ii = jnp.arange(K, dtype=jnp.int32)
+        keep = (ii[None, :] <= ii[:, None])[None, None, :, None, :]
+    else:
+        t = jnp.asarray(tree, jnp.int32)
+        keep = (((t[:, :, None] >> jnp.arange(K, dtype=jnp.int32)) & 1)
+                == 1)[:, None, :, None, :]
+    s = jnp.where(keep, s, NEG_INF)
+    m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+    pb = jnp.where(keep, jnp.exp(s - m2[..., None]), 0.0)
+    l2 = l * jnp.exp(m - m2) + jnp.sum(pb, axis=-1)
+    acc2 = (acc * jnp.exp(m - m2)[..., None]
+            + jnp.einsum("bnigj,bnjd->bnigd", pb, vbh))
+    return acc2 / jnp.maximum(l2, 1e-30)[..., None]
+
+
+def _heads_out(out, dt):
+    """(B, Hkv, K, G, hd) f32 merged partial -> (B, K, H, hd) in the
+    activation dtype."""
+    out = out.transpose(0, 2, 1, 3, 4)
+    return out.reshape(out.shape[0], out.shape[1], -1,
+                       out.shape[-1]).astype(dt)
+
+
+def attention_decode_pages_sharded(params, x, pos, cache: PagedKV, tables,
+                                   cfg: ArchConfig, shard, wmask=None):
+    """``attention_decode_pages`` with the bank sharded over mesh axis
+    ``shard = (mesh, axis)``: each shard writes/reads only its local
+    slice (local Pallas partial kernel when kernels are on, jnp partial
+    otherwise) and the per-shard flash partials merge with one
+    pmax/psum.  Allclose — not bitwise — to the global-gather path (the
+    merge changes the softmax reduction order)."""
+    mesh, axis = shard
+    from jax.sharding import PartitionSpec as Ps
+    from repro.distributed.compat import shard_map
+
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,1,H,hd)
+    quant = cache.ks is not None
+    bank = ((cache.k, cache.v, cache.ks, cache.vs) if quant
+            else (cache.k, cache.v))
+    tables = jnp.asarray(tables, jnp.int32)
+    P = tables.shape[1]
+    page = cache.k.shape[2]
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    dt = x.dtype
+    wm = (jnp.ones((B, 1), bool) if wmask is None
+          else jnp.asarray(wmask, bool)[:, None])
+
+    def local(bank, q, k, v, tables, pos, wm):
+        lc = PagedKV(*bank)
+        lt, owned = _local_pages(tables, lc.k.shape[0], axis)
+        positions = pos[:, None]
+        pidx = jnp.minimum(positions // page, P - 1)
+        own_tok = jnp.take_along_axis(owned, pidx, axis=1)   # (B, 1)
+        # write first (same order as the unsharded path); out-of-slice
+        # tokens park into THIS shard's reserved local page 0
+        lc = _page_write(lc, k, v, lt, positions, wmask=own_tok & wm)
+
+        import repro.kernels as kernels
+        if kernels.use_kernels():
+            from repro.kernels.paged_attention.ops import (
+                paged_decode_partial)
+            interp = None if kernels.get_mode() == "auto" else True
+            base = jax.lax.axis_index(axis) * lc.k.shape[0]
+            acc, m, l = paged_decode_partial(
+                q[:, 0], lc.k, lc.v, tables, pos, base,
+                k_scale=lc.ks, v_scale=lc.vs, interpret=interp)
+            acc, m, l = acc[:, :, None], m[:, :, None], l[:, :, None]
+        else:
+            if lc.ks is not None:
+                kg, vg = _gather_dequant(lc, lt, dt)
+            else:
+                kg = _gather_pages(lc.k, lt)
+                vg = _gather_pages(lc.v, lt)
+            own_pos = jnp.repeat(owned, page, axis=1)        # (B, S)
+            valid = ((jnp.arange(kg.shape[2])[None, :] <= pos[:, None])
+                     & own_pos)[:, None, :]                  # (B, 1, S)
+            acc, m, l = _paged_partial(q, kg, vg, valid, scale)
+        accg, mg, lg = _psum_partials(acc, m, l, axis)
+        out = accg / jnp.maximum(lg, 1e-30)[..., None]
+        return out, tuple(lc)[:len(bank)]
+
+    bank_specs = tuple(Ps(axis) for _ in bank)
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(bank_specs, Ps(), Ps(), Ps(), Ps(), Ps(),
+                            Ps()),
+                  out_specs=(Ps(), bank_specs), check_vma=False)
+    out, bank = f(bank, q, k, v, tables, pos, wm)
+    cache = PagedKV(*bank)
+    out = _heads_out(out, dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, cache
+
+
+def attention_verify_pages_sharded(params, x, pos, cache: PagedKV, tables,
+                                   cfg: ArchConfig, shard, wmask=None,
+                                   offsets=None, tree=None):
+    """``attention_verify_pages`` with per-shard local bank reads (see
+    ``attention_decode_pages_sharded``).  The cache side of the
+    cache-plus-block split runs as per-shard partials merged with
+    pmax/psum; the block's own K keys/values are replicated, so their
+    fold — and the intra-block causal/tree mask — happens once outside
+    the shard_map.  Allclose, not bitwise, to the global-gather path."""
+    mesh, axis = shard
+    from jax.sharding import PartitionSpec as Ps
+    from repro.distributed.compat import shard_map
+
+    B, K, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    if offsets is None:
+        offsets = jnp.arange(K, dtype=jnp.int32)
+    positions = pos[:, None] + jnp.asarray(offsets, jnp.int32)[None]
+    q, k, v = _qkv(params, x, positions, cfg)     # q: (B,K,H,hd)
+    quant = cache.ks is not None
+    bank = ((cache.k, cache.v, cache.ks, cache.vs) if quant
+            else (cache.k, cache.v))
+    tables = jnp.asarray(tables, jnp.int32)
+    P = tables.shape[1]
+    page = cache.k.shape[2]
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    dt = x.dtype
+    wm = (jnp.ones((B, K), bool) if wmask is None
+          else jnp.asarray(wmask, bool))
+
+    def local(bank, q, k, v, tables, positions, pos, wm):
+        lc = PagedKV(*bank)
+        lt, owned = _local_pages(tables, lc.k.shape[0], axis)
+        # cache side reads the pool as it stood BEFORE the block
+        if lc.ks is not None:
+            kg, vg = _gather_dequant(lc, lt, dt)
+        else:
+            kg = _gather_pages(lc.k, lt)
+            vg = _gather_pages(lc.v, lt)
+        own_pos = jnp.repeat(owned, page, axis=1)
+        valid = ((jnp.arange(kg.shape[2])[None, :] < pos[:, None])
+                 & own_pos)[:, None, :]                      # (B, 1, S)
+        acc, m, l = _paged_partial(q, kg, vg, valid, scale)
+        parts = _psum_partials(acc, m, l, axis)
+        pidx = jnp.minimum(positions // page, P - 1)
+        own_tok = jnp.take_along_axis(owned, pidx, axis=1)   # (B, K)
+        lc = _page_write(lc, k, v, lt, positions, wmask=own_tok & wm)
+        return parts, tuple(lc)[:len(bank)]
+
+    bank_specs = tuple(Ps(axis) for _ in bank)
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(bank_specs, Ps(), Ps(), Ps(), Ps(), Ps(),
+                            Ps(), Ps()),
+                  out_specs=((Ps(), Ps(), Ps()), bank_specs),
+                  check_vma=False)
+    (accg, mg, lg), bank = f(bank, q, k, v, tables, positions, pos, wm)
+    cache = PagedKV(*bank)
+    Hkv = cfg.num_kv_heads
+    hd = cfg.head_dim
+    qh = (q.reshape(B, K, Hkv, -1, hd).transpose(0, 2, 1, 3, 4)
+          .astype(jnp.float32)) * scale
+    out = _fold_block(accg, mg, lg, qh, k, v, 1.0, tree)
+    out = _heads_out(out, dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
     return out, cache
 
 

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import ShardingRules, DEFAULT_RULES, constrain
+from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
+                                        constrain, spec_for)
 from repro.models import layers, moe as moe_mod, ssm as ssm_mod, xlstm as xl
 from repro.models.common import (
     PSpec, stacked, init_params, abstract_params, logical_tree, count_params,
@@ -173,7 +174,7 @@ class LM:
 
     def _apply_block(self, typ, p, x, positions, mode, pos, cache,
                      big=None, max_len=None, wmask=None, tables=None,
-                     offsets=None, tree=None):
+                     offsets=None, tree=None, shard=None):
         """One block.  Returns (x, new_cache, aux).
 
         ``max_len`` (prefill mode) and ``wmask`` (verify mode; see
@@ -189,7 +190,10 @@ class LM:
         tables, and ``wmask`` gates writes for decode too (non-live rows
         park).  ``offsets``/``tree`` (paged verify only) select tree
         verification — per-node depth offsets and per-row ancestor
-        bitmasks; see ``layers.attention_verify_pages``.
+        bitmasks; see ``layers.attention_verify_pages``.  ``shard``
+        (``(mesh, axis)``, paged modes only) shard_maps the paged
+        attention so each mesh shard reads only its local slice of the
+        page bank (see ``layers.attention_decode_pages_sharded``).
         """
         cfg = self.cfg
         mixer, ffn = typ
@@ -208,12 +212,14 @@ class LM:
                                                       cache, tables, cfg,
                                                       wmask=wmask,
                                                       offsets=offsets,
-                                                      tree=tree)
+                                                      tree=tree,
+                                                      shard=shard)
             else:
                 assert mode == "decode", mode
                 a, nc = layers.attention_decode_pages(p["attn"], h, pos,
                                                       cache, tables, cfg,
-                                                      wmask=wmask)
+                                                      wmask=wmask,
+                                                      shard=shard)
         elif mixer == "attn":
             if mode == "train":
                 a = layers.attention(p["attn"], h, positions, cfg,
@@ -268,7 +274,8 @@ class LM:
 
     def _run_blocks(self, params, x, positions, mode, pos, caches,
                     remat: bool = False, max_len: int | None = None,
-                    wmask=None, tables=None, offsets=None, tree=None):
+                    wmask=None, tables=None, offsets=None, tree=None,
+                    shard=None):
         """Scan over repeats; python-unrolled period inside the body."""
         pattern = self.pattern
 
@@ -283,7 +290,7 @@ class LM:
                                              positions, mode, pos, c,
                                              max_len=max_len, wmask=wmask,
                                              tables=tables, offsets=offsets,
-                                             tree=tree)
+                                             tree=tree, shard=shard)
                 new_caches[key] = nc
                 aux = aux + a
             if mode == "train":
@@ -457,6 +464,29 @@ class LM:
             all(isinstance(e, str) or e is None for e in q))
             for i in range(len(self.pattern))}
 
+    def page_pool_shardings(self, caches, mesh, axis: str):
+        """``NamedSharding`` per page-pool leaf: the page (NP) axis of
+        every bank leaf splits over mesh axis ``axis`` (so shard s
+        physically holds the local slice its kernel instance reads under
+        local-read sharding), everything else replicated.  The returned
+        tree matches ``caches`` leaf-for-leaf — feed it to
+        ``jax.device_put``/``jax.tree.map``."""
+        rules = self.rules if self.rules is not None else DEFAULT_RULES
+        rules = rules.with_(kv_pages=axis)
+        kv = ("layers", "kv_pages", "kv_heads", None, "head_dim")
+        sc = ("layers", "kv_pages", "kv_heads", None)
+
+        def one(bank):
+            return layers.PagedKV(
+                k=spec_for(mesh, kv, bank.k.shape, rules),
+                v=spec_for(mesh, kv, bank.v.shape, rules),
+                ks=(None if bank.ks is None
+                    else spec_for(mesh, sc, bank.ks.shape, rules)),
+                vs=(None if bank.vs is None
+                    else spec_for(mesh, sc, bank.vs.shape, rules)))
+
+        return {key: one(bank) for key, bank in caches.items()}
+
     def insert_cache_pages(self, caches, rows, tables):
         """Admission into the page pool: scatter prefilled cache rows
         (a pytree with ``KVCache`` leaves (R, b, Hkv, S, hd)) into the
@@ -480,26 +510,28 @@ class LM:
         return {key: cp(c, src, dst) for key, c in caches.items()}
 
     def decode_step_pages(self, params, caches, tokens, pos, tables,
-                          live=None):
+                          live=None, shard=None):
         """One decode step against the shared page pool.  tokens: (B, 1)
         int32; pos: (B,) int32; tables: (B, P) int32 page tables;
         ``live`` ((B,) bool, optional) routes non-live rows' cache writes
         to the park page — a retired slot's per-step garbage write must
-        not land in pages already recycled to a neighbor.  Returns
-        (logits (B, 1, V), new caches)."""
+        not land in pages already recycled to a neighbor.  ``shard``
+        (``(mesh, axis)``) switches attention to per-shard local bank
+        reads; see ``_apply_block``.  Returns (logits (B, 1, V), new
+        caches)."""
         cfg = self.cfg
         tables = jnp.asarray(tables, jnp.int32)
         x = self._embed_in(params, tokens)
         x, aux, caches = self._run_blocks(params, x, None, "decode", pos,
                                           caches, wmask=live,
-                                          tables=tables)
+                                          tables=tables, shard=shard)
         x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
                            cfg.norm_eps)
         return self._head(params, x), caches
 
     def verify_step_pages(self, params, caches, tokens, pos, tables,
                           wmask=None, need_logits: bool = True,
-                          offsets=None, tree=None):
+                          offsets=None, tree=None, shard=None):
         """Multi-token verify against the shared page pool — one (b, K)
         block scored at per-row offsets ``pos .. pos+K-1`` through the
         rows' page tables, k/v written into the rows' own pages.  Serves
@@ -523,7 +555,7 @@ class LM:
         x, aux, caches = self._run_blocks(params, x, None, "verify", pos,
                                           caches, wmask=wmask,
                                           tables=tables, offsets=offsets,
-                                          tree=tree)
+                                          tree=tree, shard=shard)
         logits = None
         if need_logits:
             x = layers.rmsnorm(x, params["final_norm"].astype(x.dtype),
@@ -536,7 +568,8 @@ class LM:
 
     # ------------------------------------------------------ multi-step decode
     def _decode_multi(self, params, caches, tokens, pos, steps, sample_fn,
-                      stop_fn, carry, live=None, pos_cap=None, tables=None):
+                      stop_fn, carry, live=None, pos_cap=None, tables=None,
+                      shard=None):
         """Up to ``steps`` decode steps in ONE device loop (the host tick
         amortizes over every iteration; see ``StepEngine(multi_step=T)``).
 
@@ -570,7 +603,8 @@ class LM:
                 logits, caches = self.decode_step(params, caches, tok, pos)
             else:
                 logits, caches = self.decode_step_pages(
-                    params, caches, tok, pos, tables, live=live)
+                    params, caches, tok, pos, tables, live=live,
+                    shard=shard)
             nxt, carry = sample_fn(logits[:, -1], pos, carry)
             posr = pos + 1 if live is None else jnp.where(live, pos + 1, pos)
             stop = stop_fn(nxt, posr, i)
@@ -597,14 +631,15 @@ class LM:
 
     def decode_multi_step_pages(self, params, caches, tokens, pos, tables,
                                 steps, sample_fn, stop_fn, carry,
-                                live=None, pos_cap=None):
+                                live=None, pos_cap=None, shard=None):
         """Paged multi-step decode; see ``_decode_multi``.  ``tables``
         is loop-invariant by construction: the loop exits before any
         occupancy change, so no page moves while it runs."""
         return self._decode_multi(params, caches, tokens, pos, steps,
                                   sample_fn, stop_fn, carry, live=live,
                                   pos_cap=pos_cap,
-                                  tables=jnp.asarray(tables, jnp.int32))
+                                  tables=jnp.asarray(tables, jnp.int32),
+                                  shard=shard)
 
     def decode_step_paged(self, params, bigs, acts, tokens, pos):
         """One decode step against a paged cache (see layers: BigKV/ActKV).

@@ -37,12 +37,12 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serve.pool import (Generation, PagePool, PrefixIndex, SharedBank,
-                              SlotPool)
+                              ShardedPagePool, SlotPool)
 from repro.serve.telemetry import Telemetry, safe_ratio
 
 __all__ = ["DecodeState", "EngineKey", "Generation", "PagePool",
            "PrefixIndex", "ServeStats", "ServingEngine", "SharedBank",
-           "SlotPool", "StepEngine"]
+           "ShardedPagePool", "SlotPool", "StepEngine"]
 
 
 class EngineKey(NamedTuple):
@@ -64,6 +64,7 @@ class EngineKey(NamedTuple):
     quantize_kv: Optional[str] = None
     prefix_cache: bool = False
     shared_bank: bool = False           # pages/prefixes from a SharedBank
+    shards: int = 1                     # page-bank shards (1 == unsharded)
 
 
 class ServeStats:
@@ -242,6 +243,26 @@ class StepEngine(SlotPool):
     index).  int8 banks index under their own namespace — codes are a
     lossy function of the same tokens, so fp16 and int8 entries never
     cross-match.
+
+    ``shards=N`` / ``mesh=...`` (paged mode only) partition the page
+    bank into N equal slices with one host-side free-list each
+    (``ShardedPagePool``): a page id encodes (shard, local page) as
+    ``(id // pages_per_shard, id % pages_per_shard)``, admission routes
+    whole small requests to one shard (prefix hits to the shard holding
+    their cached pages, cold admissions to the least-loaded shard) and
+    spans big requests across shards.  ``shards`` alone is *logical*
+    sharding — allocator routing plus per-shard telemetry on a single
+    device.  ``mesh`` additionally lays the bank leaves out over the
+    mesh's ``shard_axis`` (``NamedSharding`` on the page axis) so shard
+    s's pages live on device s.  Allocation order is the only thing
+    that changes and the gathered attention math is permutation-
+    invariant in page ids, so sharded streams stay bitwise-identical to
+    the single-device paged engine (tested under forced host device
+    count).  ``local_read=True`` (needs ``mesh``) additionally
+    shard_maps decode/verify so each shard's kernel instance reads ONLY
+    its local bank slice and partial softmaxes merge with one
+    pmax/psum; the merge changes the reduction order, so that path is
+    allclose-, not bitwise-, equivalent.
     """
 
     def __init__(self, model: LM, batch_size: int, max_len: int,
@@ -255,6 +276,9 @@ class StepEngine(SlotPool):
                  quantize_kv: Optional[str] = None,
                  prefix_cache: bool = False,
                  bank: Optional[SharedBank] = None,
+                 shards: Optional[int] = None,
+                 mesh=None, shard_axis: Optional[str] = None,
+                 local_read: bool = False,
                  telemetry: Optional[Telemetry] = None):
         self.model = model
         telemetry = telemetry if telemetry is not None else Telemetry()
@@ -292,6 +316,36 @@ class StepEngine(SlotPool):
         self._jumps = 0              # consecutive short-prompt jump-aheads
         self._pending: deque[_PendingPrefill] = deque()
 
+        # ---- sharded page bank: resolve the mesh/shard knobs up front
+        # (the pool they configure is built in the paged branch below)
+        if mesh is not None:
+            if shard_axis is None:
+                shard_axis = mesh.axis_names[0]
+            if shard_axis not in mesh.axis_names:
+                raise ValueError(f"shard_axis {shard_axis!r} is not a mesh "
+                                 f"axis {tuple(mesh.axis_names)}")
+            mesh_n = mesh.shape[shard_axis]
+            if shards is None:
+                shards = mesh_n
+            elif shards != mesh_n:
+                raise ValueError(
+                    f"shards={shards} disagrees with mesh axis "
+                    f"{shard_axis!r} of size {mesh_n}")
+        if shards is not None and shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if (mesh is not None or (shards or 1) > 1) and not paged:
+            raise ValueError(
+                "sharding partitions the page bank: shards/mesh need "
+                "paged=True (the row cache has per-slot affinity)")
+        if local_read and mesh is None:
+            raise ValueError(
+                "local_read shard_maps the bank reads over mesh devices: "
+                "it needs mesh=")
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.local_read = bool(local_read)
+        self.num_shards = 1
+
         # ---- paged slot pool: per-slot page tables over one shared bank
         self.paged = paged
         if bank is not None and not paged:
@@ -310,27 +364,48 @@ class StepEngine(SlotPool):
             self.page_size = page_size
             self.pages_per_row = max_len // page_size
             if bank is not None:
-                # the bank's creator sized the pool; this engine just
-                # allocates from it alongside its sibling engines
-                if bank.pool.total_pages < self.pages_per_row + 1:
+                # the bank's creator sized AND sharded the pool; this
+                # engine just allocates from it alongside its siblings
+                bank_shards = getattr(bank.pool, "num_shards", 1)
+                if shards is not None and shards != bank_shards:
+                    raise ValueError(
+                        f"shards={shards} but the shared bank's pool has "
+                        f"{bank_shards} shard(s) — the bank's creator "
+                        "fixes the sharding")
+                self.num_shards = bank_shards
+                if bank.pool.total_pages - bank_shards < self.pages_per_row:
                     raise ValueError(
                         f"shared bank of {bank.pool.total_pages} pages "
                         f"cannot hold one worst-case row "
-                        f"({self.pages_per_row} pages) plus the park page")
+                        f"({self.pages_per_row} pages) plus the reserved "
+                        "park page(s)")
                 self.num_pages = bank.pool.total_pages
                 self._pages = bank.pool
             else:
+                self.num_shards = shards or 1
                 if num_pages is None:
                     # capacity parity with the row layout: every slot can
-                    # always hold a worst-case row (+1 park page)
-                    num_pages = batch_size * self.pages_per_row + 1
-                if num_pages < self.pages_per_row + 1:
+                    # always hold a worst-case row, split evenly across
+                    # shards (+1 reserved local park page per shard)
+                    need = batch_size * self.pages_per_row
+                    num_pages = self.num_shards * (
+                        -(-need // self.num_shards) + 1)
+                if self.num_shards > 1 and num_pages % self.num_shards:
+                    raise ValueError(
+                        f"num_pages {num_pages} must divide by shards "
+                        f"{self.num_shards}: the bank splits into equal "
+                        "per-shard slices")
+                if num_pages - self.num_shards < self.pages_per_row:
                     raise ValueError(
                         f"num_pages {num_pages} cannot hold one worst-case "
-                        f"row ({self.pages_per_row} pages) plus the park "
-                        "page")
+                        f"row ({self.pages_per_row} pages) plus the "
+                        "reserved park page(s)")
                 self.num_pages = num_pages
-                self._pages = PagePool(num_pages, telemetry=telemetry)
+                self._pages = (
+                    ShardedPagePool(num_pages, self.num_shards,
+                                    telemetry=telemetry)
+                    if self.num_shards > 1
+                    else PagePool(num_pages, telemetry=telemetry))
         else:
             self.page_size = None
             self.pages_per_row = 0
@@ -357,6 +432,9 @@ class StepEngine(SlotPool):
                                        namespace=quantize_kv or "fp16")
 
         B, T, V = batch_size, temperature, model.cfg.vocab_size
+        # local_read: the paged programs shard_map attention so each mesh
+        # shard reads only its local bank slice (None == global gather)
+        shard_arg = (mesh, shard_axis) if self.local_read else None
 
         def _row_gumbel(rkeys, produced_at):
             """Per-slot gumbel fields for seeded rows: each slot's key is
@@ -393,7 +471,7 @@ class StepEngine(SlotPool):
                 # (their pages may already be recycled to a neighbor)
                 logits, caches = model.decode_step_pages(
                     params, state.caches, state.tok, state.pos,
-                    state.table, live=live)
+                    state.table, live=live, shard=shard_arg)
             else:
                 logits, caches = model.decode_step(params, state.caches,
                                                    state.tok, state.pos)
@@ -439,7 +517,7 @@ class StepEngine(SlotPool):
                     model.decode_multi_step_pages(
                         params, state.caches, state.tok, state.pos,
                         state.table, MS, sample_fn, stop_fn, carry,
-                        live=live, pos_cap=max_len - 1))
+                        live=live, pos_cap=max_len - 1, shard=shard_arg))
             else:
                 out, n, caches, tok, pos, carry = model.decode_multi_step(
                     params, state.caches, state.tok, state.pos, MS,
@@ -515,7 +593,7 @@ class StepEngine(SlotPool):
             if paged:
                 _, caches = model.prefill_chunk_pages(
                     params, state.caches, tokens, pos, tables,
-                    need_logits=False)
+                    need_logits=False, shard=shard_arg)
             else:
                 _, caches = model.prefill_chunk(params, state.caches,
                                                 tokens, pos, slots,
@@ -540,7 +618,8 @@ class StepEngine(SlotPool):
             wmask = jnp.arange(W, dtype=jnp.int32)[None, :] < nvalid[:, None]
             if paged:
                 logits, caches = model.prefill_chunk_pages(
-                    params, state.caches, tokens, pos, tables, wmask=wmask)
+                    params, state.caches, tokens, pos, tables, wmask=wmask,
+                    shard=shard_arg)
             else:
                 logits, caches = model.prefill_chunk(params, state.caches,
                                                      tokens, pos, slots,
@@ -600,12 +679,23 @@ class StepEngine(SlotPool):
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
-    def reset(self, seed: Optional[int] = None):
+    def reset(self, seed: Optional[int] = None, keep_prefix: bool = False):
         """Empty pool + restarted key schedule.  Cache buffers are reused
         when they exist: a freed slot's stale row is dead weight that the
         next admission overwrites in full, so only the first reset pays
-        the allocation (generate() resets per call — keep it cheap)."""
+        the allocation (generate() resets per call — keep it cheap).
+
+        ``keep_prefix=True`` carries the prefix cache across the reset:
+        the index is snapshotted before the allocator clears, and — if
+        the bank's buffers survived (no rebuild) — its pages are
+        re-adopted from the fresh free-list afterwards, so the first
+        post-reset admission of a cached prompt still hits.  A rebuilt
+        (zeroed) bank drops the snapshot instead: the pages' bytes are
+        gone and a restored index would serve zero k/v."""
         B = self.batch_size
+        snap = None
+        if keep_prefix and self._bank is None and self._prefix is not None:
+            snap = self._prefix.snapshot()
         # a private page pool just resets; a shared bank keeps serving
         # the OTHER engines, so only this engine's own rows release
         if self._bank is not None:
@@ -632,12 +722,18 @@ class StepEngine(SlotPool):
             caches = self.state.caches   # reuse, unless a failed step
         if self._bank is not None and self._bank.caches is not None:
             caches = self._bank.caches   # the bank copy is authoritative
-        if caches is None:               # donated them out from under us
+        rebuilt = caches is None
+        if rebuilt:                      # donated them out from under us
             caches = (self.model.init_page_pool(
                           self.num_pages, self.page_size,
                           quantized=self.quantize_kv is not None)
                       if self.paged else
                       self.model.init_cache(B, self.max_len))
+            if self.paged and self.mesh is not None:
+                # lay the bank over the mesh: the page axis of every
+                # leaf splits across shard_axis so shard s physically
+                # holds local pages [s*per, (s+1)*per)
+                caches = self._place_bank(caches)
         if self._bank is not None:
             self._bank.caches = caches
         self.state = DecodeState(
@@ -654,6 +750,37 @@ class StepEngine(SlotPool):
         self._pool_reset()
         self._pending.clear()
         self._jumps = 0
+        if snap is not None and not rebuilt:
+            # the bank's buffers survived the reset: the snapshot's pages
+            # still hold their token runs, so re-adopt them from the
+            # fresh free-list (refcount 1 each, LRU recency preserved)
+            self._prefix.restore(snap, self._pages.adopt)
+
+    def _place_bank(self, caches):
+        """``jax.device_put`` every page-bank leaf with its mesh layout
+        (page axis split over ``shard_axis``, everything else
+        replicated) — see ``LM.page_pool_shardings``."""
+        shardings = self.model.page_pool_shardings(caches, self.mesh,
+                                                   self.shard_axis)
+        return jax.tree.map(jax.device_put, caches, shardings)
+
+    def export_prefix_index(self) -> Optional[dict]:
+        """Host-side snapshot of the prefix index.  The page bank keeps
+        the k/v bytes; this captures which pool pages hold which token
+        runs so a later engine over the SAME bank content can re-adopt
+        them (``restore_prefix_index``).  ``None`` with the cache off."""
+        return None if self._prefix is None else self._prefix.snapshot()
+
+    def restore_prefix_index(self, snap: dict) -> list[int]:
+        """Re-adopt a snapshot's cached pages into this engine's index:
+        every page still on the free-list is claimed back at refcount 1
+        with its LRU recency; entries whose page was reallocated in the
+        meantime drop out along with their subtrees (their bytes are
+        someone else's now).  Returns the page ids adopted."""
+        if self._prefix is None:
+            raise ValueError("prefix_cache is off: nothing to restore "
+                             "into")
+        return self._prefix.restore(snap, self._pages.adopt)
 
     def _call(self, fn, params, *args):
         if self.runner is None:
@@ -690,43 +817,90 @@ class StepEngine(SlotPool):
 
     def can_admit(self, tokens, max_new: int) -> bool:
         if not super().can_admit(tokens, max_new):
-            return False
+            return False                 # super set last_admit_block
         if not self.paged:
             return True
         tokens = np.asarray(tokens)
         b, S = (1, tokens.shape[0]) if tokens.ndim == 1 else tokens.shape
-        needed = b * self.pages_needed(S, max_new)
+        npages = self.pages_needed(S, max_new)
+        plan = None
         protect = []
         if self.prefix_cache and b == 1:
             plan = self._prefix_plan(tokens.reshape(1, S), max_new,
                                      peek=True)
             if plan is not None:
-                retained, cow_src, _, owned = plan
-                needed = owned           # shared pages cost nothing
+                retained, cow_src, _, _ = plan
                 protect = retained + ([cow_src] if cow_src is not None
                                       else [])
-        if needed <= self.free_pages():
-            return True
-        # under pressure the cache gives memory back before admission is
-        # rejected: refcount-1 cached pages (no live table maps them)
-        # leave LRU-first until the request fits or nothing evictable
-        # remains — never the pages this very request is about to map.
-        self._reclaim(needed - self.free_pages(), protect=protect)
-        return needed <= self.free_pages()
+        block = self._admit_block(b, npages, plan)
+        if block is not None:
+            # under pressure the cache gives memory back before admission
+            # is rejected: refcount-1 cached pages (no live table maps
+            # them) leave LRU-first until the request fits or nothing
+            # evictable remains — never the pages this very request is
+            # about to map.  A shard-local shortage ("shard_pages")
+            # scopes eviction to the routed shard: freeing elsewhere
+            # cannot help the shard the request must land on.
+            need = plan[3] if plan is not None else b * npages
+            if block == "shard_pages":
+                shard = (self._route_prefix(plan) if plan is not None
+                         else self._pages.route(npages))
+                if shard is not None:
+                    self._reclaim(need - self._pages.shard_free(shard),
+                                  protect=protect, shard=shard)
+            else:
+                self._reclaim(need - self.free_pages(), protect=protect)
+            block = self._admit_block(b, npages, plan)
+        self.last_admit_block = block
+        return block is None
+
+    def _admit_block(self, b: int, npages: int, plan) -> Optional[str]:
+        """Why the next admission would fail on pages: ``None`` (it
+        fits), ``"pages"`` (pool-wide shortage) or ``"shard_pages"``
+        (the routed shard is short even though the pool is not — sharded
+        pools only)."""
+        if plan is not None:
+            return self._pages.blocked(plan[3],
+                                       shard=self._route_prefix(plan))
+        if b == 1:
+            return self._pages.blocked(npages)
+        return self._pages.blocked_rows(b, npages)
+
+    def _route_prefix(self, plan) -> Optional[int]:
+        """Locality routing for a prefix hit: the row's fresh pages land
+        on the shard already holding the matched pages (the CoW boundary
+        page when there is one — its copy destination must be
+        co-resident with the source under local reads).  ``None`` (route
+        free / spanning) when nothing anchors the hit or the pool is
+        unsharded."""
+        if self._pages.num_shards == 1:
+            return None
+        retained, cow_src, _, _ = plan
+        anchor = cow_src if cow_src is not None else (
+            retained[-1] if retained else None)
+        return None if anchor is None else self._pages.shard_of(anchor)
 
     # -------------------------------------------------------- prefix cache
-    def _reclaim(self, deficit: int, protect=()) -> int:
+    def _reclaim(self, deficit: int, protect=(),
+                 shard: Optional[int] = None) -> int:
         """Evict up to ``deficit`` cached prefix pages (LRU leaves first;
         only refcount-1 pages, i.e. held by nothing but the index) back
-        into the free-list.  -> pages reclaimed."""
+        into the free-list.  ``shard`` scopes eviction to pages owned by
+        that shard — relieving a shard-local shortage without spending
+        cache entries whose pages could not help.  -> pages reclaimed."""
         if self._prefix is None or deficit <= 0:
             return 0
         keep = set(protect)
-        evicted = self._prefix.evict_lru(
-            deficit, lambda p: p not in keep
-            and self._pages.refcount(p) == 1)
+
+        def _evictable(p):
+            if p in keep or self._pages.refcount(p) != 1:
+                return False
+            return shard is None or self._pages.shard_of(p) == shard
+
+        evicted = self._prefix.evict_lru(deficit, _evictable)
         if evicted:
             self._pages.release(evicted)
+            self._pages.note_reclaimed(evicted)
             self.stats["cache_evictions"] += len(evicted)
             if self._trace.enabled:
                 self._trace.instant(
@@ -773,11 +947,16 @@ class StepEngine(SlotPool):
         the failure paths).  Returns ``(table (1, P), pages in table
         order, fresh)``."""
         retained, cow_src, d, owned = plan
-        if owned > self._pages.free_pages():
+        shard = self._route_prefix(plan)
+        protect = retained + ([cow_src] if cow_src is not None else [])
+        block = self._pages.blocked(owned, shard=shard)
+        if block == "shard_pages" and shard is not None:
+            self._reclaim(owned - self._pages.shard_free(shard),
+                          protect=protect, shard=shard)
+        elif block is not None:
             self._reclaim(owned - self._pages.free_pages(),
-                          protect=retained + ([cow_src] if cow_src
-                                              is not None else []))
-        fresh = self._pages.take(owned)          # raises if still short
+                          protect=protect)
+        fresh = self._pages.take(owned, shard=shard)   # raises if short
         self._pages.acquire(retained)
         if cow_src is not None:
             self._pages.acquire([cow_src])       # pinned until the copy
@@ -818,6 +997,8 @@ class StepEngine(SlotPool):
         tables (unused tail entries point at the park page).  Returns
         (tables, flat page list for failure restore)."""
         npages = self.pages_needed(S, max_new)
+        if self._pages.num_shards > 1:
+            return self._take_pages_sharded(b, npages)
         if self.prefix_cache and b * npages > self._pages.free_pages():
             self._reclaim(b * npages - self._pages.free_pages())
         pages = self._pages.take(b * npages)
@@ -825,6 +1006,39 @@ class StepEngine(SlotPool):
         for i in range(b):
             tables[i, :npages] = pages[i * npages:(i + 1) * npages]
         return tables, pages
+
+    def _take_pages_sharded(self, b: int, npages: int):
+        """Cold admission on a sharded pool: each row routes to the
+        least-loaded shard at its turn (spanning when a row outgrows one
+        shard), so a multi-row admit spreads across shards exactly as
+        ``b`` sequential single-row admits would — the simulation
+        ``ShardedPagePool.blocked_rows`` prices.  Rows allocate
+        sequentially; a mid-batch shortage rolls the earlier rows' takes
+        back so the caller sees one atomic failure."""
+        if self.prefix_cache:
+            blk = self._pages.blocked_rows(b, npages)
+            if blk == "pages":
+                self._reclaim(b * npages - self._pages.free_pages())
+            elif blk == "shard_pages":
+                # the pool has room but the routed shard does not; evict
+                # up to one row's worth scoped to the shard the next row
+                # would land on
+                shard = self._pages.route(npages)
+                if shard is not None:
+                    self._reclaim(npages - self._pages.shard_free(shard),
+                                  shard=shard)
+        taken: list[list[int]] = []
+        tables = np.full((b, self.pages_per_row), PagePool.PARK, np.int32)
+        try:
+            for i in range(b):
+                rows = self._pages.take(npages)   # routed internally
+                tables[i, :npages] = rows
+                taken.append(rows)
+        except BaseException:
+            for rows in reversed(taken):
+                self._pages.restore(rows)
+            raise
+        return tables, [p for rows in taken for p in rows]
 
     # ------------------------------------------------------------- admission
     def admit(self, params, tokens, max_new: int,

@@ -121,7 +121,39 @@ class PagePool:
         """References held on an allocated page (0 == on the free-list)."""
         return self._ref.get(page, 0)
 
-    def take(self, n: int) -> list[int]:
+    # Single-shard pools answer the sharded-routing queries trivially so
+    # the engine's admission path is uniform over both pool kinds.
+    num_shards = 1
+
+    @property
+    def per_shard_allocatable(self) -> int:
+        return self.allocatable
+
+    def shard_of(self, page: int) -> int:
+        return 0
+
+    def shard_free(self, shard: int) -> int:
+        return len(self._free)
+
+    def route(self, n: int) -> Optional[int]:
+        """Shard a fresh ``n``-page allocation would be routed to
+        (``None`` == the pages span shards).  One shard: everything is
+        local."""
+        return 0
+
+    def blocked(self, n: int, shard: Optional[int] = None) -> Optional[str]:
+        """Why ``take(n, shard)`` would fail right now — ``None`` (it
+        would not), ``"pages"`` (pool globally short), or
+        ``"shard_pages"`` (room exists, but not on the one shard this
+        request routes to — sharded pools only)."""
+        return None if n <= len(self._free) else "pages"
+
+    def blocked_rows(self, b: int, n: int) -> Optional[str]:
+        """Like ``blocked`` for ``b`` independent rows of ``n`` pages
+        each, admitted in sequence under the routing policy."""
+        return None if b * n <= len(self._free) else "pages"
+
+    def take(self, n: int, shard: Optional[int] = None) -> list[int]:
         if n > len(self._free):
             raise RuntimeError(f"take({n}) with {len(self._free)} free "
                                "pages")
@@ -130,6 +162,25 @@ class PagePool:
             self._ref[p] = 1
         self._note_free()
         return pages
+
+    def adopt(self, page: int) -> bool:
+        """Re-allocate one specific FREE page at refcount 1 — the
+        prefix-index restore path: the bank still holds the page's
+        bytes, so a surviving trie entry re-pins exactly that page.
+        False (and no state change) if the page has been handed out or
+        is out of range."""
+        try:
+            self._free.remove(page)
+        except ValueError:
+            return False
+        self._ref[page] = 1
+        self._note_free()
+        return True
+
+    def note_reclaimed(self, pages: list[int]):
+        """Telemetry hook: pages the engine just reclaimed from the
+        prefix cache.  Per-shard pools attribute them to owning shards;
+        a single-shard pool has nothing extra to record."""
 
     def acquire(self, pages: list[int]):
         """Add one reference to each (already-allocated) page — prefix
@@ -169,6 +220,208 @@ class PagePool:
 
     def reset(self):
         self._free = deque(range(1, self.total_pages))
+        self._ref = {}
+        self._note_free()
+
+
+class ShardedPagePool(PagePool):
+    """``PagePool`` partitioned into ``num_shards`` equal slices with one
+    host-side free-list per shard.
+
+    Page-id encoding: global page ``p`` lives on shard
+    ``p // pages_per_shard`` at local index ``p % pages_per_shard`` — a
+    page id *is* a (shard, local page) pair, so the device-side table
+    stays a plain ``(B, P)`` int32 array and a shard's kernel instance
+    recovers its local index by subtracting its base offset.  Local page
+    0 of EVERY shard is reserved: shard 0's is the global PARK page
+    (id 0), and the other shards' local 0 gives each bank slice a
+    resident park target so out-of-slice writes can be routed locally
+    without cross-shard traffic.  Hence
+    ``allocatable == total_pages - num_shards``.
+
+    Routing policy (deterministic, so randomized fuzz replays exactly):
+
+      * a request that can EVER fit on one shard
+        (``n <= per_shard_allocatable``) is placed entirely on one shard
+        — callers route prefix-cache hits to the shard already holding
+        the cached pages and cold admissions to the least-loaded shard
+        (most free pages, ties to the lowest shard index);
+      * a bigger request *spans*: pages are drawn one at a time from
+        whichever shard is most-free at that moment (same tie-break).
+
+    Refcounts are global (a page's identity does not change);
+    ``release``/``restore`` return a freed page to its OWNING shard's
+    free-list with the same FIFO/front-restore contract as the base
+    class, so per-shard allocation order is deterministic too.
+    """
+
+    def __init__(self, total_pages: int, num_shards: int,
+                 telemetry: Telemetry | None = None):
+        if num_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {num_shards}")
+        if total_pages % num_shards:
+            raise ValueError(f"total_pages {total_pages} must divide by "
+                             f"num_shards {num_shards}")
+        per = total_pages // num_shards
+        if per < 2:
+            raise ValueError(f"each shard needs its reserved local page 0 "
+                             f"plus >= 1 allocatable page; {total_pages} "
+                             f"pages over {num_shards} shards gives {per}")
+        self.total_pages = total_pages
+        self.num_shards = num_shards
+        self.pages_per_shard = per
+        self._shards: list[deque[int]] = [
+            deque(range(s * per + 1, (s + 1) * per))
+            for s in range(num_shards)]
+        self._ref: dict[int, int] = {}
+        self._tm = telemetry
+        self._note_free()
+
+    # `_free` stays undefined on purpose: every base-class method that
+    # touched it is overridden, and an attribute error beats silently
+    # mutating a stale combined view.
+
+    def _note_free(self):
+        if self._tm is None:
+            return
+        reg, pre = self._tm.registry, self._tm.prefix
+        reg.gauge(pre + "free_pages", self.free_pages())
+        for s, dq in enumerate(self._shards):
+            reg.gauge(f"{pre}shard.{s}.free_pages", len(dq))
+
+    def _note_admitted(self, shard: int, n: int):
+        if self._tm is not None and n:
+            self._tm.registry.inc(
+                f"{self._tm.prefix}shard.{shard}.admitted_pages", n)
+
+    @property
+    def allocatable(self) -> int:
+        return self.total_pages - self.num_shards
+
+    @property
+    def per_shard_allocatable(self) -> int:
+        return self.pages_per_shard - 1
+
+    def free_pages(self) -> int:
+        return sum(len(dq) for dq in self._shards)
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    def shard_free(self, shard: int) -> int:
+        return len(self._shards[shard])
+
+    def least_loaded(self) -> int:
+        """Shard with the most free pages; ties go to the lowest index
+        (the determinism the replay fuzz pins)."""
+        return max(range(self.num_shards),
+                   key=lambda s: (len(self._shards[s]), -s))
+
+    def route(self, n: int) -> Optional[int]:
+        if n > self.per_shard_allocatable:
+            return None                     # can never fit on one shard
+        return self.least_loaded()
+
+    def blocked(self, n: int, shard: Optional[int] = None) -> Optional[str]:
+        if shard is None or n > self.per_shard_allocatable:
+            shard = self.route(n)           # may still be None (spanning)
+        if shard is None:
+            return None if n <= self.free_pages() else "pages"
+        if n <= len(self._shards[shard]):
+            return None
+        return "shard_pages" if n <= self.free_pages() else "pages"
+
+    def blocked_rows(self, b: int, n: int) -> Optional[str]:
+        """Simulate admitting ``b`` rows of ``n`` pages each through the
+        routing policy (each row routed independently, exactly as ``b``
+        sequential ``take(n)`` calls would be) without touching state."""
+        counts = [len(dq) for dq in self._shards]
+        span = n > self.per_shard_allocatable
+        for _ in range(b):
+            if span:
+                if n > sum(counts):
+                    return "pages"
+                for _ in range(n):      # spanning pops most-free first
+                    s = max(range(self.num_shards),
+                            key=lambda i: (counts[i], -i))
+                    counts[s] -= 1
+            else:
+                s = max(range(self.num_shards),
+                        key=lambda i: (counts[i], -i))
+                if n > counts[s]:
+                    return ("shard_pages" if n <= sum(counts) else "pages")
+                counts[s] -= n
+        return None
+
+    def take(self, n: int, shard: Optional[int] = None) -> list[int]:
+        if shard is None or n > self.per_shard_allocatable:
+            shard = self.route(n)
+        if shard is None:
+            return self._take_spanning(n)
+        dq = self._shards[shard]
+        if n > len(dq):
+            raise RuntimeError(f"take({n}) with {len(dq)} free pages on "
+                               f"routed shard {shard}")
+        pages = [dq.popleft() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        self._note_admitted(shard, n)
+        self._note_free()
+        return pages
+
+    def _take_spanning(self, n: int) -> list[int]:
+        if n > self.free_pages():
+            raise RuntimeError(f"take({n}) with {self.free_pages()} free "
+                               "pages")
+        pages, counts = [], [0] * self.num_shards
+        for _ in range(n):
+            s = self.least_loaded()
+            p = self._shards[s].popleft()
+            self._ref[p] = 1
+            counts[s] += 1
+            pages.append(p)
+        for s, c in enumerate(counts):
+            self._note_admitted(s, c)
+        self._note_free()
+        return pages
+
+    def restore(self, pages: list[int]):
+        freed = self._decref(pages)
+        for s in range(self.num_shards):
+            own = [p for p in freed if self.shard_of(p) == s]
+            if own:
+                self._shards[s].extendleft(reversed(own))
+        self._note_free()
+
+    def release(self, pages: list[int]):
+        for p in self._decref(pages):
+            self._shards[self.shard_of(p)].append(p)
+        self._note_free()
+
+    def adopt(self, page: int) -> bool:
+        try:
+            self._shards[self.shard_of(page)].remove(page)
+        except (ValueError, IndexError):
+            return False
+        self._ref[page] = 1
+        self._note_free()
+        return True
+
+    def note_reclaimed(self, pages: list[int]):
+        if self._tm is None or not pages:
+            return
+        counts: dict[int, int] = {}
+        for p in pages:
+            s = self.shard_of(p)
+            counts[s] = counts.get(s, 0) + 1
+        for s, c in counts.items():
+            self._tm.registry.inc(
+                f"{self._tm.prefix}shard.{s}.reclaimed_pages", c)
+
+    def reset(self):
+        per = self.pages_per_shard
+        self._shards = [deque(range(s * per + 1, (s + 1) * per))
+                        for s in range(self.num_shards)]
         self._ref = {}
         self._note_free()
 
@@ -304,6 +557,69 @@ class PrefixIndex:
     def clear(self):
         self._root = {}
 
+    def snapshot(self) -> dict:
+        """Serializable host state of the trie (plain lists/ints, JSON-
+        safe).  The pages themselves live in the device bank and are NOT
+        captured — a snapshot is only worth restoring while the bank's
+        bytes survive (engine reset reuses the cache arrays; the pool
+        free-list is host state that ``restore`` re-pins from)."""
+        nodes = []
+
+        def walk(node, path):
+            for nd in self._children(node).values():
+                rec_path = path + [list(nd.run)]
+                nodes.append({"path": rec_path, "page": int(nd.page),
+                              "last_used": int(nd.last_used)})
+                walk(nd, rec_path)
+
+        walk(None, [])
+        return {"namespace": self.namespace, "page_size": self.page_size,
+                "clock": int(self._clock), "nodes": nodes}
+
+    def restore(self, snap: dict, adopt) -> list[int]:
+        """Rebuild trie branches from a ``snapshot`` taken earlier.
+
+        ``adopt(page) -> bool`` must re-pin the page in the pool (the
+        index's reference) — ``PagePool.adopt`` exactly.  A node whose
+        page cannot be adopted (recycled since the snapshot) is dropped
+        *with its whole subtree*: the children's token runs are only
+        reachable through the lost page, so keeping them would serve
+        k/v for tokens the table no longer maps.  Existing entries win
+        over snapshot entries (first writer wins, as in ``insert``).
+        Returns the pages adopted; the caller owns nothing — the index
+        now pins them."""
+        if (snap["namespace"] != self.namespace
+                or snap["page_size"] != self.page_size):
+            raise ValueError(
+                f"snapshot is {snap['namespace']}/page {snap['page_size']}, "
+                f"index is {self.namespace}/page {self.page_size}")
+        self._clock = max(self._clock, int(snap["clock"]))
+        adopted = []
+        # snapshot() emits parents before children, so one forward pass
+        # sees every node's parent already rebuilt (or already dropped).
+        for rec in snap["nodes"]:
+            path = [tuple(r) for r in rec["path"]]
+            node, lost = None, False
+            for run in path[:-1]:
+                node = self._children(node).get(self._key(node, run))
+                if node is None:
+                    lost = True             # parent branch was dropped
+                    break
+            if lost:
+                continue
+            run = path[-1]
+            kids = self._children(node)
+            key = self._key(node, run)
+            if key in kids:
+                continue
+            if not adopt(rec["page"]):
+                continue
+            kids[key] = _PrefixNode(page=int(rec["page"]), run=run,
+                                    parent=node,
+                                    last_used=int(rec["last_used"]))
+            adopted.append(int(rec["page"]))
+        return adopted
+
 
 @dataclass
 class SharedBank:
@@ -381,13 +697,21 @@ class SlotPool:
     def live(self) -> list[Generation]:
         return [g for g in self.slots if g is not None]
 
+    # Why the last ``can_admit`` said no: ``None`` (it said yes),
+    # ``"slots"``, ``"pages"``, or ``"shard_pages"`` (sharded pools:
+    # room exists, just not on the shard the request routes to).
+    # Schedulers read this to attribute blocked admissions.
+    last_admit_block: Optional[str] = None
+
     def can_admit(self, tokens, max_new: int) -> bool:
         """Whether ``admit(tokens, max_new)`` would fit *right now*.
         Schedulers gate on this instead of ``free_slots`` so engines
         with extra admission resources (the paged engine's page pool)
         can veto without raising."""
         b = 1 if np.ndim(tokens) == 1 else np.shape(tokens)[0]
-        return b <= self.free_slots()
+        ok = b <= self.free_slots()
+        self.last_admit_block = None if ok else "slots"
+        return ok
 
     # ------------------------------------------------------------ admission
     def _admit_args(self, tokens, metas, seeds):

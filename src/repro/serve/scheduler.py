@@ -394,9 +394,17 @@ class ContinuousScheduler:
                  multi_step: int = 1,
                  quantize_kv: Optional[str] = None,
                  prefix_cache: bool = False,
-                 share_bank: bool = False):
+                 share_bank: bool = False,
+                 shards: Optional[int] = None, mesh=None):
         self.server = server
         self.batch_size = batch_size
+        # sharded page bank (paged mode): engines partition their page
+        # pool over `shards` per-shard free-lists (and over `mesh`'s
+        # first axis when given) with locality-routed admission
+        if (shards or mesh) and not paged:
+            raise ValueError("shards/mesh need paged=True")
+        self.shards = shards
+        self.mesh = mesh
         # device-resident multi-step decode: each engine tick runs up to
         # ``multi_step`` fused decode steps, so the scheduler's
         # rank/drain/admit bookkeeping amortizes over several tokens
@@ -469,6 +477,8 @@ class ContinuousScheduler:
             "busy_seconds": 0.0,
             "admitted_requests": 0, "rejected_requests": 0,
             "queued_requests": 0,
+            "admit_blocked_no_slots": 0, "admit_blocked_no_pages": 0,
+            "admit_blocked_no_shard_pages": 0,
         })
 
     # ------------------------------------------------------------- client
@@ -568,7 +578,8 @@ class ContinuousScheduler:
                                       multi_step=self.multi_step,
                                       quantize_kv=self.quantize_kv,
                                       prefix_cache=self.prefix_cache,
-                                      share_bank=self.share_bank)
+                                      share_bank=self.share_bank,
+                                      shards=self.shards, mesh=self.mesh)
         if eng.runner is None:
             cse = self.server.engine
             # every device program (prefill + step) routes through the
@@ -614,13 +625,16 @@ class ContinuousScheduler:
         ``SwitchableServer.step_engine`` builds; full-key matching
         matters because the server outlives schedulers with different
         configurations)."""
+        n_shards = self.shards if self.shards is not None else (
+            self.mesh.shape[self.mesh.axis_names[0]]
+            if self.mesh is not None else 1)
         return EngineKey(name=name, batch_size=self.batch_size,
                          prefill_chunk=self.prefill_chunk,
                          page_size=self.page_size if self.paged else None,
                          multi_step=self.multi_step,
                          quantize_kv=self.quantize_kv,
                          prefix_cache=self.prefix_cache,
-                         shared_bank=self.share_bank)
+                         shared_bank=self.share_bank, shards=n_shards)
 
     def _spec_key(self, name: str) -> SpecKey:
         """The server-side ``_spec_engines`` cache key this scheduler's
@@ -830,8 +844,20 @@ class ContinuousScheduler:
         while True:
             with self._cv:
                 q = self._queues[name]
-                if not q or not eng.can_admit(q[0].tokens, q[0].steps):
-                    return                 # no slot — or, paged, no pages
+                if not q:
+                    return
+                if not eng.can_admit(q[0].tokens, q[0].steps):
+                    # distinguish WHY the head of the queue is stuck: no
+                    # free slot, no pages pool-wide, or pages exist but
+                    # not on the shard its pages route to
+                    block = getattr(eng, "last_admit_block", None)
+                    key = {"slots": "admit_blocked_no_slots",
+                           "pages": "admit_blocked_no_pages",
+                           "shard_pages": "admit_blocked_no_shard_pages",
+                           }.get(block)
+                    if key is not None:
+                        self.stats[key] += 1
+                    return
                 req = q.popleft()
                 self._note_queued_locked()
             b = req.tokens.shape[0]

@@ -807,6 +807,7 @@ class SpecEngine(SlotPool):
     # the target pool; the draft column never shares pages)
     _reclaim = StepEngine._reclaim
     _prefix_plan = StepEngine._prefix_plan
+    _route_prefix = StepEngine._route_prefix
     _take_prefix_pages = StepEngine._take_prefix_pages
     _drop_prefix_pages = StepEngine._drop_prefix_pages
     _index_prompt = StepEngine._index_prompt
@@ -925,6 +926,7 @@ class SpecEngine(SlotPool):
         b, S = (1, tokens.shape[0]) if tokens.ndim == 1 else tokens.shape
         needed = b * self.pages_needed(S, max_new)
         if needed > self._d_pages.free_pages():
+            self.last_admit_block = "pages"
             return False               # the draft column has no cache to
         #                                reclaim from — pages or nothing
         t_needed = needed
@@ -941,7 +943,10 @@ class SpecEngine(SlotPool):
             return True
         self._reclaim(t_needed - self._t_pages.free_pages(),
                       protect=protect)
-        return t_needed <= self._t_pages.free_pages()
+        ok = t_needed <= self._t_pages.free_pages()
+        if not ok:
+            self.last_admit_block = "pages"
+        return ok
 
     # ------------------------------------------------------ page allocation
     def _take_d_pages(self, b: int, npages: int):

@@ -32,7 +32,7 @@ from repro.core.policy import ReconfigPolicy
 from repro.models.model import LM
 from repro.serve.engine import (EngineKey, ServingEngine, StepEngine,
                                 _sample)
-from repro.serve.pool import PagePool, SharedBank
+from repro.serve.pool import PagePool, SharedBank, ShardedPagePool
 from repro.serve.speculative import SpecEngine, SpecKey
 from repro.serve.telemetry import Telemetry
 
@@ -113,11 +113,13 @@ class SwitchableServer:
 
     def shared_bank(self, name: str, page_size: int,
                     quantize_kv: Optional[str] = None,
-                    num_pages: Optional[int] = None) -> SharedBank:
+                    num_pages: Optional[int] = None,
+                    num_shards: int = 1) -> SharedBank:
         """Get-or-create the shared page bank for one cache content —
         ``(context name, page_size, quantize_kv)``.  The first caller
-        sizes the pool (``num_pages``); later callers allocate from it
-        whatever their batch size or engine kind, and all of them see one
+        sizes the pool (``num_pages``, and ``num_shards`` > 1 for a
+        sharded bank); later callers allocate from it whatever their
+        batch size or engine kind, and all of them see one
         ``PrefixIndex`` over those pages."""
         key = (name, int(page_size), quantize_kv)
         bank = self._banks.get(key)
@@ -126,10 +128,16 @@ class SwitchableServer:
                 raise ValueError(
                     f"shared bank {key} does not exist yet: the first "
                     "caller must size it (num_pages)")
-            bank = SharedBank(PagePool(num_pages,
-                                       telemetry=self.telemetry.scoped(
-                                           f"eng.{next(self._eng_seq)}.")))
+            tel = self.telemetry.scoped(f"eng.{next(self._eng_seq)}.")
+            pool = (ShardedPagePool(num_pages, num_shards, telemetry=tel)
+                    if num_shards > 1 else PagePool(num_pages,
+                                                   telemetry=tel))
+            bank = SharedBank(pool)
             self._banks[key] = bank
+        elif num_shards != getattr(bank.pool, "num_shards", 1):
+            raise ValueError(
+                f"shared bank {key} has {getattr(bank.pool, 'num_shards', 1)} "
+                f"shard(s); requested {num_shards}")
         return bank
 
     def step_engine(self, name: str, batch_size: int,
@@ -140,7 +148,9 @@ class SwitchableServer:
                     quantize_kv: Optional[str] = None,
                     prefix_cache: bool = False,
                     num_pages: Optional[int] = None,
-                    share_bank: bool = False) -> StepEngine:
+                    share_bank: bool = False,
+                    shards: Optional[int] = None,
+                    mesh=None) -> StepEngine:
         """Per-context continuous-batching engine (jitted once per pool
         shape at first use).  Its decode state — slot-pooled KV rows,
         positions, free-list — persists across context switches, so a
@@ -153,12 +163,14 @@ class SwitchableServer:
         shape, and a knob that isn't in the key cannot exist."""
         sm = self._served[name]
         eff_ps = min(page_size, sm.max_len) if paged else None
+        n_shards = shards if shards is not None else (
+            mesh.shape[mesh.axis_names[0]] if mesh is not None else 1)
         key = EngineKey(name=name, batch_size=batch_size,
                         prefill_chunk=prefill_chunk,
                         page_size=eff_ps,
                         multi_step=multi_step, quantize_kv=quantize_kv,
                         prefix_cache=prefix_cache,
-                        shared_bank=share_bank)
+                        shared_bank=share_bank, shards=n_shards)
         eng = self._step_engines.get(key)
         if eng is None:
             bank = None
@@ -166,10 +178,14 @@ class SwitchableServer:
                 if not paged:
                     raise ValueError("share_bank needs paged=True")
                 ppr = sm.max_len // eff_ps
+                need = batch_size * ppr
+                default_np = (n_shards * (-(-need // n_shards) + 1)
+                              if n_shards > 1 else need + 1)
                 bank = self.shared_bank(
                     name, eff_ps, quantize_kv,
                     num_pages=(num_pages if num_pages is not None
-                               else batch_size * ppr + 1))
+                               else default_np),
+                    num_shards=n_shards)
             eng = StepEngine(sm.model, batch_size, sm.max_len,
                              temperature=sm.temperature,
                              prefill_chunk=prefill_chunk,
@@ -178,6 +194,7 @@ class SwitchableServer:
                              quantize_kv=quantize_kv,
                              prefix_cache=prefix_cache,
                              num_pages=num_pages, bank=bank,
+                             shards=shards, mesh=mesh,
                              telemetry=self.telemetry.scoped(
                                  f"eng.{next(self._eng_seq)}."))
             self._step_engines[key] = eng

@@ -1,0 +1,416 @@
+"""Sharded page bank: multi-shard paged slot pools with locality-routed
+admission.
+
+Covers the ShardedPagePool allocator contract (per-shard free-lists,
+least-loaded routing, spanning allocation, shard-aware blocked
+reasons), the bitwise token-identity matrix against the single-shard
+paged engine (greedy + seeded temperature, one-shot + chunked, with
+prefix-cache hits), per-shard leak freedom under randomized
+admit/retire/fail traffic with deterministic replay, prefix-index
+persistence across engine reset, and the scheduler's blocked-admission
+attribution counters.  Mesh placement / shard_map local reads run in a
+subprocess with forced host devices — see ``_sharded_worker.py``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_arch, tokens_for
+from repro.models.model import build_model
+from repro.serve.engine import EngineKey, StepEngine
+from repro.serve.pool import PagePool, ShardedPagePool
+
+
+@pytest.fixture(scope="module")
+def f32_lm():
+    cfg = reduced_arch("tinyllama-1.1b", dtype="float32",
+                       param_dtype="float32")
+    m = build_model(cfg, cache_dtype=jnp.float32)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+def _drain(eng, p):
+    while eng.live_slots():
+        eng.step(p)
+
+
+# ---------------------------------------------------------------------------
+# ShardedPagePool allocator contract
+# ---------------------------------------------------------------------------
+
+def test_sharded_page_pool_contract():
+    pool = ShardedPagePool(12, 4)          # 3 pages/shard, local 0 reserved
+    assert pool.allocatable == 8
+    assert pool.per_shard_allocatable == 2
+    assert pool.free_pages() == 8
+    # page-id encoding: global id == shard * pages_per_shard + local
+    assert [pool.shard_of(p) for p in (1, 3, 7, 11)] == [0, 1, 2, 3]
+    # cold admissions route least-loaded, ties to the lowest shard index
+    assert pool.route(1) == 0
+    a = pool.take(2)
+    assert a == [1, 2]                      # whole request on shard 0
+    assert pool.route(1) == 1               # 0 is now the fullest
+    b = pool.take(1)
+    assert b == [4]                         # shard 1's first local page
+    # local page 0 of every shard is reserved — never allocated
+    reserved = {s * pool.pages_per_shard for s in range(4)}
+    taken = set(a) | set(b)
+    assert not (taken & reserved)
+    # spanning: > per-shard capacity draws most-free first
+    big = pool.take(5)
+    assert len(big) == 5 and not (set(big) & reserved)
+    assert pool.free_pages() == 0
+    # blocked distinguishes global from shard-local shortage
+    pool.release(a)                         # shard 0 has 2 free again
+    assert pool.blocked(2) is None
+    assert pool.blocked(1, shard=1) == "shard_pages"   # room, wrong shard
+    assert pool.blocked(3) == "pages"       # 3 > per-shard -> spans; 2 free
+    pool.release(big[:2])                   # one page back on two shards
+    # rows: first takes shard 0 whole; second routes to a 1-free shard
+    # needing 2 — pages exist pool-wide, not where the row must land
+    assert pool.blocked_rows(2, 2) == "shard_pages"
+    assert pool.blocked_rows(1, 5) == "pages"   # spans; only 4 free total
+    # release returns a page to its OWNING shard's list
+    pool.release([b[0]])
+    assert pool.shard_free(1) == 1
+    # adopt pulls one specific free page (prefix-index restore)
+    assert pool.adopt(b[0])
+    assert not pool.adopt(b[0])             # already allocated
+    assert pool.refcount(b[0]) == 1
+    pool.reset()
+    assert pool.free_pages() == 8
+    with pytest.raises(ValueError):
+        ShardedPagePool(10, 4)              # must divide
+    with pytest.raises(ValueError):
+        ShardedPagePool(4, 4)               # 1 page/shard: park only
+
+
+def test_sharded_pool_restore_front_order():
+    pool = ShardedPagePool(8, 2)
+    a = pool.take(3)                        # shard 0's 3 pages
+    assert a == [1, 2, 3]
+    pool.restore(a)                         # failed admit: FRONT, in order
+    assert pool.take(3) == a
+
+
+# ---------------------------------------------------------------------------
+# token identity: sharded engine vs single-shard paged engine (bitwise)
+# ---------------------------------------------------------------------------
+
+def _run_stream(eng, p, prompts, steps, seeds):
+    gens = [eng.admit(p, prompts[0], max_new=steps, seeds=[seeds[0]])[0]]
+    for _ in range(2):
+        eng.step(p)
+    gens.append(eng.admit(p, prompts[1], max_new=steps,
+                          seeds=[seeds[1]])[0])
+    _drain(eng, p)
+    return [g.tokens for g in gens]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("chunk", [None, 8])
+def test_sharded_streams_bitwise_identical(f32_lm, temperature, chunk):
+    """Sharding the page bank only changes WHICH pool pages a request's
+    tables point at; the gather through the table is permutation-
+    invariant in page ids, so streams stay bitwise-identical to the
+    single-shard paged engine — greedy and seeded temperature, one-shot
+    and chunked admission."""
+    cfg, m, p = f32_lm
+    steps = 5
+    prompts = [np.asarray(tokens_for(cfg, 1, 12, seed=3)),
+               np.asarray(tokens_for(cfg, 1, 40, seed=4))]
+    seeds = [7, 9] if temperature > 0 else [None, None]
+
+    one = StepEngine(m, batch_size=2, max_len=256, temperature=temperature,
+                     paged=True, page_size=64, prefill_chunk=chunk)
+    ref = _run_stream(one, p, prompts, steps, seeds)
+    eng = StepEngine(m, batch_size=2, max_len=256, temperature=temperature,
+                     paged=True, page_size=64, prefill_chunk=chunk,
+                     shards=4)
+    got = _run_stream(eng, p, prompts, steps, seeds)
+    assert got == ref
+    assert eng.free_pages() == eng._pages.allocatable
+    assert eng._pages.num_shards == 4
+
+
+def test_sharded_prefix_hit_bitwise_and_routed(f32_lm):
+    """Prefix-cache hits on a sharded bank: the resubmission maps the
+    cached pages read-only (same stream bitwise), and its fresh pages
+    land on the shard already holding the cached run — locality routing,
+    observed through the pool's shard ownership."""
+    cfg, m, p = f32_lm
+    prompt = np.asarray(tokens_for(cfg, 1, 24, seed=5))
+
+    def run(eng):
+        out = [eng.admit(p, prompt, max_new=4)[0]]
+        _drain(eng, p)
+        out.append(eng.admit(p, prompt, max_new=4)[0])
+        _drain(eng, p)
+        return [g.tokens for g in out]
+
+    one = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                     prefix_cache=True)
+    ref = run(one)
+    eng = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                     prefix_cache=True, shards=2, num_pages=32)
+    gens = [eng.admit(p, prompt, max_new=4)[0]]
+    first_pages = list(eng.slots[gens[0].slot].pages)
+    _drain(eng, p)
+    assert eng.stats["prefix_hits"] == 0
+    g2 = eng.admit(p, prompt, max_new=4)[0]
+    assert eng.stats["prefix_hits"] == 1
+    hit_pages = list(eng.slots[g2.slot].pages)
+    # the hit's whole allocation sits on the shard of the cached run
+    shards = {eng._pages.shard_of(pg) for pg in hit_pages}
+    assert shards == {eng._pages.shard_of(first_pages[0])}
+    _drain(eng, p)
+    got = [gens[0].tokens, g2.tokens]
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# per-shard leak fuzz: free + reachable == allocatable, per shard
+# ---------------------------------------------------------------------------
+
+def _check_shard_invariants(eng):
+    pool = eng._pages
+    held = [g.pages for g in eng.slots if g is not None and g.pages]
+    table_pages = [pg for pages in held for pg in pages]
+    reachable = set(table_pages) | eng._prefix.pages()
+    free_ids = [list(dq) for dq in pool._shards]
+    all_free = {pg for dq in free_ids for pg in dq}
+    # no page is simultaneously free and referenced, on any shard
+    assert not (all_free & set(pool._ref)), sorted(all_free & set(pool._ref))
+    for s in range(pool.num_shards):
+        own = {pg for pg in reachable if pool.shard_of(pg) == s}
+        # conservation PER SHARD, not just pool-wide: a page freed to the
+        # wrong shard's list keeps the global sum intact but breaks this
+        assert len(free_ids[s]) + len(own) == pool.per_shard_allocatable, (
+            s, sorted(free_ids[s]), sorted(own))
+        for pg in free_ids[s]:
+            assert pool.shard_of(pg) == s, (s, pg)
+    # refcounts: tables + index pin, exactly (no cross-shard drift)
+    for pg in reachable:
+        want = table_pages.count(pg) + (1 if pg in eng._prefix.pages()
+                                        else 0)
+        cow_pins = [ps.cow[0] for ps in eng._pending if ps.cow is not None]
+        want += cow_pins.count(pg)
+        assert pool.refcount(pg) == want, (pg, want, pool.refcount(pg))
+
+
+def _shard_fuzz_run(m, p, cfg, seed):
+    rng = np.random.default_rng(seed)
+    eng = StepEngine(m, batch_size=3, max_len=32, paged=True, page_size=4,
+                     prefill_chunk=8, prefix_cache=True, shards=4,
+                     num_pages=24)
+    families = [np.asarray(tokens_for(cfg, 1, 28, seed=100 + i))
+                for i in range(3)]
+    streams = []
+    for _ in range(40):
+        act = rng.integers(0, 3)
+        if act == 0 and eng.free_slots() and not eng.pending_slots():
+            fam = families[rng.integers(0, len(families))]
+            cut = int(rng.integers(4, 25))
+            toks = fam[:, :cut].copy()
+            if rng.random() < 0.5:
+                toks[0, -1] = int((toks[0, -1] + 1) % cfg.vocab_size)
+            if eng.can_admit(toks, 3):
+                eng.admit(p, toks, max_new=3)
+        elif act == 1 and eng.live_slots():
+            for g in eng.step(p):
+                streams.append(tuple(g.tokens))
+        elif act == 2 and eng.live_slots():
+            for g in eng.drain(p):
+                streams.append(tuple(g.tokens))
+        _check_shard_invariants(eng)
+    for g in eng.drain(p):
+        streams.append(tuple(g.tokens))
+    _check_shard_invariants(eng)
+    free_lists = [tuple(dq) for dq in eng._pages._shards]
+    return streams, free_lists, dict(eng.stats)
+
+
+def test_shard_fuzz_leak_free_and_replays(f32_lm):
+    """Randomized admit/step/drain traffic over a 4-shard bank: after
+    every event each shard conserves its pages (free + reachable ==
+    per-shard allocatable, free-lists hold only own-shard ids, refcounts
+    exact), and the deterministic routing makes the whole run — streams,
+    final per-shard free-list ORDER, stats — replay exactly."""
+    cfg, m, p = f32_lm
+    s1, f1, st1 = _shard_fuzz_run(m, p, cfg, seed=0)
+    s2, f2, st2 = _shard_fuzz_run(m, p, cfg, seed=0)
+    assert s1 == s2 and f1 == f2 and st1 == st2
+    assert st1["prefix_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# prefix-index persistence across reset
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_survives_reset(f32_lm):
+    """``reset(keep_prefix=True)``: the trie snapshots before teardown
+    and re-adopts its pages after — the bank bytes were never dropped
+    (reset reuses the cache arrays), so a resubmission still hits."""
+    cfg, m, p = f32_lm
+    prompt = np.asarray(tokens_for(cfg, 1, 24, seed=5))
+    eng = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                     prefix_cache=True, shards=2, num_pages=32)
+    ref = eng.admit(p, prompt, max_new=4)[0]
+    _drain(eng, p)
+    cached = set(eng._prefix.pages())
+    assert cached
+    eng.reset(keep_prefix=True)
+    assert set(eng._prefix.pages()) == cached       # same pages re-pinned
+    assert eng.free_pages() == eng._pages.allocatable - len(cached)
+    g = eng.admit(p, prompt, max_new=4)[0]
+    assert eng.stats["prefix_hits"] == 1
+    _drain(eng, p)
+    assert g.tokens == ref.tokens
+
+
+def test_prefix_index_export_restore_roundtrip(f32_lm):
+    """Explicit snapshot/restore: ``export_prefix_index`` captures the
+    trie, a plain ``reset()`` drops it, ``restore_prefix_index`` adopts
+    back every page still free — and pages reallocated in between drop
+    out with their subtrees instead of aliasing someone else's bytes."""
+    cfg, m, p = f32_lm
+    prompt = np.asarray(tokens_for(cfg, 1, 24, seed=5))
+    eng = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                     prefix_cache=True)
+    eng.admit(p, prompt, max_new=4)
+    _drain(eng, p)
+    snap = eng.export_prefix_index()
+    cached = set(eng._prefix.pages())
+    eng.reset()                             # keeps arrays, drops the index
+    assert not eng._prefix.pages()
+    adopted = eng.restore_prefix_index(snap)
+    assert set(adopted) == cached
+    g = eng.admit(p, prompt, max_new=4)[0]
+    assert eng.stats["prefix_hits"] == 1
+    _drain(eng, p)
+
+    # stale snapshot: hand the cached pages to someone else first
+    eng2 = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                      prefix_cache=True)
+    eng2.admit(p, prompt, max_new=4)
+    _drain(eng2, p)
+    snap2 = eng2.export_prefix_index()
+    eng2.reset()
+    eng2._pages.take(eng2._pages.allocatable)       # recycle everything
+    assert eng2.restore_prefix_index(snap2) == []   # nothing adoptable
+    assert not eng2._prefix.pages()
+
+
+def test_prefix_restore_rejects_mismatched_snapshot(f32_lm):
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=8,
+                     prefix_cache=True)
+    snap = eng.export_prefix_index()
+    other = StepEngine(m, batch_size=2, max_len=64, paged=True,
+                       page_size=16, prefix_cache=True)
+    with pytest.raises(ValueError):
+        other.restore_prefix_index(snap)            # page_size mismatch
+    plain = StepEngine(m, batch_size=2, max_len=64, paged=True,
+                       page_size=8)
+    with pytest.raises(ValueError):
+        plain.restore_prefix_index(snap)            # cache off
+
+
+# ---------------------------------------------------------------------------
+# admission-block attribution
+# ---------------------------------------------------------------------------
+
+def test_engine_reports_admit_block_reason(f32_lm):
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=2, max_len=32, paged=True, page_size=4,
+                     shards=2, num_pages=20)     # 9 allocatable per shard
+    toks = np.asarray(tokens_for(cfg, 1, 8, seed=1))
+    assert eng.can_admit(toks, 2) and eng.last_admit_block is None
+    g1 = eng.admit(p, toks, max_new=2)[0]
+    g2 = eng.admit(p, toks, max_new=2)[0]
+    assert not eng.can_admit(toks, 2)
+    assert eng.last_admit_block == "slots"       # pool is slot-bound
+    del g1, g2
+
+
+def test_engine_reports_shard_pages_block(f32_lm):
+    """Pages exist pool-wide but not on the shard the request routes to:
+    the block reason says so (``shard_pages``), distinguishing a
+    placement problem from a capacity problem."""
+    cfg, m, p = f32_lm
+    eng = StepEngine(m, batch_size=3, max_len=32, paged=True, page_size=4,
+                     shards=2, num_pages=18)     # 8 allocatable per shard
+    long = np.asarray(tokens_for(cfg, 1, 24, seed=1))   # 7 pages: 1 shard
+    eng.admit(p, long, max_new=2)                # shard 0 down to 1 free
+    eng.admit(p, long, max_new=2)                # shard 1 down to 1 free
+    mid = np.asarray(tokens_for(cfg, 1, 6, seed=2))     # needs 2 pages
+    assert not eng.can_admit(mid, 2)             # 2 free total, 1 + 1...
+    assert eng.last_admit_block == "shard_pages"
+    tiny = np.asarray(tokens_for(cfg, 1, 2, seed=2))    # 1 page fits
+    assert eng.can_admit(tiny, 0)
+    assert eng.last_admit_block is None
+
+
+def test_scheduler_attributes_blocked_admissions():
+    """ContinuousScheduler counters split WHY the queue head could not
+    admit: no slots vs no pages vs no pages on the routed shard."""
+    from repro.launch.serve import build_server
+    from repro.serve.scheduler import ContinuousScheduler
+
+    names = ["supersub-sub"]
+    server, cfgs = build_server(names, 2, 32,
+                                arch_overrides={"dtype": "float32",
+                                                "param_dtype": "float32"})
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfgs[names[0]].vocab_size, (1, 24))
+    with ContinuousScheduler(server, batch_size=3, paged=True, page_size=4,
+                             shards=2) as sched:
+        futs = [sched.submit(names[0], toks, steps=4) for _ in range(4)]
+        for f in futs:
+            f.result(timeout=300)
+    stats = sched.stats
+    # 24-token prompts fill a whole shard each; with 2 shards the third+
+    # queued request must wait on shard pages at some point
+    assert stats["admit_blocked_no_shard_pages"] > 0 or \
+        stats["admit_blocked_no_pages"] > 0 or \
+        stats["admit_blocked_no_slots"] > 0
+    assert stats["admitted_requests"] == 4
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# EngineKey / construction plumbing
+# ---------------------------------------------------------------------------
+
+def test_engine_key_has_shards_field():
+    k = EngineKey(name="a", batch_size=4, page_size=8, shards=4)
+    assert k.shards == 4
+    assert k != EngineKey(name="a", batch_size=4, page_size=8)
+    assert EngineKey(name="a", batch_size=4).shards == 1
+
+
+def test_sharded_engine_guards(f32_lm):
+    cfg, m, p = f32_lm
+    with pytest.raises(ValueError, match="paged"):
+        StepEngine(m, batch_size=2, max_len=64, shards=4)
+    with pytest.raises(ValueError, match="divide"):
+        StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=16,
+                   shards=3, num_pages=16)
+    with pytest.raises(ValueError, match="worst-case"):
+        StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=16,
+                   shards=4, num_pages=4)    # 0 allocatable pages/shard
+    with pytest.raises(ValueError, match="mesh"):
+        StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=16,
+                   local_read=True)          # local_read needs a mesh
+
+
+def test_default_page_budget_scales_with_shards(f32_lm):
+    """Default sizing gives every shard the batch's worst case share
+    plus one spare, and reduces to the old batch*ppr+1 at one shard."""
+    cfg, m, p = f32_lm
+    one = StepEngine(m, batch_size=2, max_len=64, paged=True, page_size=16)
+    assert one._pages.total_pages == 2 * 4 + 1
+    four = StepEngine(m, batch_size=2, max_len=64, paged=True,
+                      page_size=16, shards=4)
+    assert four._pages.total_pages == 4 * (2 + 1)
+    assert four._pages.per_shard_allocatable == 2
